@@ -1,0 +1,62 @@
+"""Paper Fig. 1 / Fig. 18: query-processing time breakdown by stage.
+
+Stages: (a) cluster filtering, (b) LUT construction, (c) distance
+calculation, (d) top-k identification -- timed separately on the jnp path at
+two scales to show the bottleneck shifting to the distance calculation as N
+grows (the paper's motivating observation)."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import emit, time_fn
+from repro.core.index import build_index, filter_clusters
+from repro.core.lut import build_lut
+from repro.core.search import adc_scan, topk_smallest
+from repro.data import make_clustered_vectors
+
+
+def run():
+    for n in (20_000, 200_000):
+        m, c, nprobe, k, q_n = 16, 64, 8, 10, 8
+        xs, centers, _ = make_clustered_vectors(n, 32, c, seed=1)
+        idx = build_index(
+            jax.random.PRNGKey(0), xs, c, m, kmeans_iters=6, pq_iters=5,
+            train_subsample=20_000,
+        )
+        qs = jnp.asarray(xs[:q_n] + 0.1)
+        cents = jnp.asarray(idx.centroids)
+        cb = jnp.asarray(idx.codebook)
+        # representative probe: the largest cluster per query
+        sizes = idx.cluster_sizes()
+        big = int(np.argmax(sizes))
+        codes = jnp.asarray(idx.cluster_codes(big))
+        qmc = qs - cents[big]
+
+        t_filter = time_fn(
+            jax.jit(lambda q: filter_clusters(cents, q, nprobe)), qs
+        )
+        lut_fn = jax.jit(jax.vmap(lambda r: build_lut(cb, r)))
+        t_lut = time_fn(lut_fn, qmc) / q_n
+        luts = lut_fn(qmc)
+        scan_fn = jax.jit(jax.vmap(lambda l: adc_scan(l, codes)))
+        t_dist = time_fn(scan_fn, luts) / q_n
+        dists = scan_fn(luts)
+        topk_fn = jax.jit(lambda d: topk_smallest(d, k))
+        t_topk = time_fn(topk_fn, dists) / q_n
+
+        per_query = t_filter / q_n + (t_lut + t_dist + t_topk) * nprobe
+        total = max(per_query, 1e-9)
+        derived = (
+            f"N={n};filter%={100*t_filter/q_n/total:.0f};"
+            f"lut%={100*t_lut*nprobe/total:.0f};"
+            f"dist%={100*t_dist*nprobe/total:.0f};"
+            f"topk%={100*t_topk*nprobe/total:.0f}"
+        )
+        emit(f"fig1_breakdown_n{n}", per_query, derived)
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,69 @@
+"""Paper Fig. 10 (max combo co-occurrence frequency by length) and Table 1
+(code-length reduction -> distance-calc time reduction)."""
+
+from __future__ import annotations
+
+import numpy as np
+import jax.numpy as jnp
+
+from benchmarks.common import emit, time_fn
+from repro.core.cooc import max_combo_frequency, mine_combos, reencode
+from repro.kernels import ops
+
+RNG = np.random.default_rng(6)
+
+
+def _patterned_codes(n, m, pool, strength):
+    """Codes with co-occurring runs: `strength` of rows copy one of `pool`
+    templates on a random aligned triple of columns."""
+    codes = RNG.integers(0, 256, (n, m)).astype(np.uint8)
+    templates = RNG.integers(0, 256, (pool, m)).astype(np.uint8)
+    rows = RNG.random(n) < strength
+    which = RNG.integers(0, pool, n)
+    for c0 in range(0, m - 2, 3):
+        sel = rows & (RNG.random(n) < 0.9)
+        codes[np.ix_(np.flatnonzero(sel), [c0, c0 + 1, c0 + 2])] = templates[
+            which[sel]
+        ][:, [c0, c0 + 1, c0 + 2]]
+    return codes
+
+
+def run():
+    m, n = 16, 20000
+    codes = _patterned_codes(n, m, pool=8, strength=0.6)
+    freqs = max_combo_frequency(codes, lengths=(3, 4, 5))
+    emit(
+        "fig10_max_combo_freq",
+        0.0,
+        ";".join(f"len{l}={100*f:.1f}%" for l, f in freqs.items()),
+    )
+
+    # Table 1: length reduction -> ADC scan time reduction
+    lut = jnp.asarray(RNG.normal(0, 1, (m, 256)).astype(np.float32))
+    base_codes = jnp.asarray(codes)
+    t_plain = time_fn(
+        lambda: ops.adc_scan(lut, base_codes, block_n=1024), iters=3
+    )
+    for strength in (0.0, 0.4, 0.8):
+        cds = _patterned_codes(n, m, pool=4, strength=strength)
+        combos = mine_combos(cds, n_combos=64, max_rows=20000)
+        enc = reencode(cds, combos)
+        red = enc.length_reduction()
+        w = max(int(enc.lengths.max(initial=1)), 1)
+        addrs = jnp.asarray(enc.addrs[:, :w].astype(np.int32))
+        from repro.core.cooc import build_ext_lut
+
+        ext = build_ext_lut(
+            lut, jnp.asarray(combos.cols), jnp.asarray(combos.codes)
+        )
+        t = time_fn(lambda: ops.adc_scan_flat(ext, addrs, block_n=1024), iters=3)
+        emit(
+            f"table1_len_reduction_{strength}",
+            t,
+            f"len_reduction={red:.2f};width={w}/{m};"
+            f"time_vs_plain={t/t_plain:.2f}",
+        )
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,45 @@
+"""Paper Fig. 13: QPS of MemANNS vs the Faiss-CPU-style flat baseline across
+nprobe x IVF settings (normalized as in the paper), + co-occ on/off."""
+
+from __future__ import annotations
+
+import time
+
+import numpy as np
+import jax
+
+from benchmarks.common import emit, small_system
+from repro.core.index import search as flat_search
+
+
+def _qps(fn, q_n, iters=3):
+    fn()  # warm (jit + schedule)
+    ts = []
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        fn()
+        ts.append(time.perf_counter() - t0)
+    return q_n / float(np.median(ts))
+
+
+def run():
+    for c in (32, 64):
+        xs, stream, eng = small_system(n=15000, c=c)
+        qs = stream.queries(64, seed=2)
+        for nprobe in (4, 8, 16):
+            qps_flat = _qps(
+                lambda: flat_search(eng.index, qs, nprobe=nprobe, k=10), len(qs)
+            )
+            qps_mem = _qps(
+                lambda: eng.search(qs, nprobe=nprobe, k=10), len(qs)
+            )
+            emit(
+                f"fig13_qps_ivf{c}_nprobe{nprobe}",
+                1e6 * len(qs) / qps_mem,
+                f"memanns_qps={qps_mem:.1f};flat_qps={qps_flat:.1f};"
+                f"speedup={qps_mem/qps_flat:.2f}",
+            )
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,34 @@
+"""Paper Fig. 9 / Fig. 15: MRAM-read-size analogue -- the scan kernel's
+block_n (rows DMA'd HBM->VMEM per grid step).  Reports time per scanned row
+and the derived per-step DMA size; the paper's knee appears where the block
+is big enough to amortize the transfer setup."""
+
+from __future__ import annotations
+
+import numpy as np
+import jax.numpy as jnp
+
+from benchmarks.common import emit, time_fn
+from repro.kernels import ops
+
+RNG = np.random.default_rng(3)
+
+
+def run():
+    m, n, w = 16, 1 << 15, 16
+    lut = jnp.asarray(RNG.normal(0, 1, (m, 256)).astype(np.float32))
+    codes = jnp.asarray(RNG.integers(0, 256, (n, m)).astype(np.uint8))
+    for block_n in (128, 256, 512, 1024, 2048, 4096):
+        t = time_fn(
+            lambda: ops.adc_scan(lut, codes, block_n=block_n), iters=3
+        )
+        dma_bytes = block_n * w * 4  # int32 addresses per tile
+        emit(
+            f"fig15_read_size_block{block_n}",
+            t,
+            f"us_per_krow={1000*t/n:.2f};dma_bytes={dma_bytes}",
+        )
+
+
+if __name__ == "__main__":
+    run()

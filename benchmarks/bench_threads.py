@@ -1,0 +1,37 @@
+"""Paper Fig. 16: #tasklets analogue.  On a DPU more threads hide MRAM
+latency; on TPU the analogous knob is how many LUT-resident queries scan the
+same streamed code tiles per kernel pass (the batched grid width).  QPS per
+query should grow until VMEM pressure / compute saturates."""
+
+from __future__ import annotations
+
+import numpy as np
+import jax.numpy as jnp
+
+from benchmarks.common import emit, time_fn
+from repro.kernels import ops
+
+RNG = np.random.default_rng(4)
+
+
+def run():
+    m, n, k = 16, 1 << 14, 10
+    codes = jnp.asarray(RNG.integers(0, 256, (n, m)).astype(np.uint8))
+    base = None
+    for q in (1, 2, 4, 8, 16):
+        luts = jnp.asarray(RNG.normal(0, 1, (q, m, 256)).astype(np.float32))
+        t = time_fn(
+            lambda: ops.adc_topk(luts, codes, k, block_n=1024), iters=3
+        )
+        per_q = t / q
+        if base is None:
+            base = per_q
+        emit(
+            f"fig16_threads_q{q}",
+            t,
+            f"us_per_query={per_q:.1f};speedup_per_q={base/per_q:.2f}",
+        )
+
+
+if __name__ == "__main__":
+    run()

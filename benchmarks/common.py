@@ -1,0 +1,52 @@
+"""Shared benchmark utilities: timing, CSV emission, shared datasets.
+
+CPU timings here are *relative* (interpret-mode Pallas + host CPU); the
+absolute performance story lives in EXPERIMENTS.md §Roofline, derived from
+the compiled dry-run.  Each bench reproduces the SHAPE of a paper figure.
+"""
+
+from __future__ import annotations
+
+import time
+
+import jax
+import numpy as np
+
+ROWS: list[tuple[str, float, str]] = []
+
+
+def time_fn(fn, *args, iters: int = 5, warmup: int = 2, **kw) -> float:
+    """Median wall-time per call in microseconds (blocking on outputs)."""
+    for _ in range(warmup):
+        jax.block_until_ready(fn(*args, **kw))
+    ts = []
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn(*args, **kw))
+        ts.append((time.perf_counter() - t0) * 1e6)
+    return float(np.median(ts))
+
+
+def emit(name: str, us_per_call: float, derived: str = ""):
+    ROWS.append((name, us_per_call, derived))
+    print(f"{name},{us_per_call:.1f},{derived}", flush=True)
+
+
+def small_system(n=15000, c=48, m=8, dim=32, use_cooc=False, seed=0):
+    """Shared small MemANNS system for online-path benches."""
+    import jax as _jax
+
+    from repro.data import SkewedVectorDataset, make_clustered_vectors
+    from repro.retrieval import MemANNSEngine
+
+    xs, centers, _ = make_clustered_vectors(
+        n, dim, c, pattern_pool=32, size_zipf=1.2, seed=seed
+    )
+    stream = SkewedVectorDataset(centers, popularity_zipf=1.1, seed=seed)
+    eng = MemANNSEngine.build(
+        _jax.random.PRNGKey(0), xs, c, m,
+        history_queries=stream.queries(200, seed=1),
+        use_cooc=use_cooc, n_combos=32, block_n=256,
+        kmeans_iters=8, pq_iters=6,
+    )
+    return xs, stream, eng

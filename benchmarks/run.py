@@ -1,0 +1,51 @@
+"""Benchmark harness: one module per paper table/figure.
+
+``PYTHONPATH=src python -m benchmarks.run [--only fig13]``
+
+Prints ``name,us_per_call,derived`` CSV rows (plus a header).  CPU wall-times
+are relative signals; absolute TPU-v5e performance derives from the compiled
+dry-run (EXPERIMENTS.md §Roofline).
+"""
+
+from __future__ import annotations
+
+import argparse
+import sys
+import traceback
+
+MODULES = [
+    ("bench_breakdown", "Fig 1/18 stage breakdown"),
+    ("bench_placement", "Fig 4/7 skew + placement balance"),
+    ("bench_cooc", "Fig 10 + Table 1 co-occurrence"),
+    ("bench_qps", "Fig 13 QPS vs baseline"),
+    ("bench_scaling", "Fig 14 scaling with #devices"),
+    ("bench_read_size", "Fig 9/15 MRAM-read-size analogue"),
+    ("bench_threads", "Fig 16 tasklet analogue"),
+    ("bench_topk", "Fig 12/17 top-k size + pruning"),
+]
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default=None, help="substring filter")
+    args = ap.parse_args()
+    print("name,us_per_call,derived")
+    failures = []
+    for mod_name, desc in MODULES:
+        if args.only and args.only not in mod_name:
+            continue
+        print(f"# {mod_name}: {desc}", flush=True)
+        try:
+            mod = __import__(f"benchmarks.{mod_name}", fromlist=["run"])
+            mod.run()
+        except Exception:  # noqa: BLE001
+            failures.append(mod_name)
+            traceback.print_exc()
+    if failures:
+        print(f"# FAILED: {failures}")
+        sys.exit(1)
+    print("# all benchmarks completed")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,8 @@
+"""MemANNS-JAX: billion-scale IVFPQ ANNS as a first-class retrieval feature
+of a multi-pod JAX serving/training framework.
+
+Reproduction of "MemANNS: Enhancing Billion-Scale ANNS Efficiency with
+Practical PIM Hardware" (a.k.a. UpANNS), adapted from UPMEM PIM to TPU pods.
+"""
+
+__version__ = "0.1.0"

@@ -1,0 +1,17 @@
+"""Core IVFPQ library: the paper's primary contribution in JAX.
+
+Layout:
+  kmeans.py     -- jittable Lloyd's k-means (+ kmeans++ seeding)
+  pq.py         -- product-quantization codebook training / encoding
+  lut.py        -- per-(query, cluster) lookup-table construction
+  search.py     -- ADC scan + top-k (pure-jnp reference path)
+  index.py      -- IVFPQ index assembly (offline phase) + flat search
+  placement.py  -- Algorithm 1: PIM-aware data placement (device = DPU)
+  scheduling.py -- Algorithm 2: balanced query scheduling over replicas
+  cooc.py       -- §4.3 co-occurrence-aware direct-address encoding
+"""
+
+from repro.core.index import IVFPQIndex, build_index, search as flat_search
+from repro.core.kmeans import kmeans
+from repro.core.pq import train_pq, pq_encode
+from repro.core.lut import build_lut, build_luts

@@ -1,0 +1,217 @@
+"""IVFPQ index assembly (offline phase) and flat single-host search.
+
+Mirrors the paper's offline phase: IVF coarse clustering -> residuals -> PQ
+encoding -> cluster-sorted code storage (CSR layout).  The flat `search` here
+is the "Faiss-CPU"-style baseline used by tests and benchmarks; the
+distributed MemANNS path lives in repro/retrieval/.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.kmeans import kmeans, _pairwise_sq_l2
+from repro.core.lut import build_lut
+from repro.core.pq import pq_encode, train_pq
+from repro.core.search import adc_scan, masked_topk_smallest
+
+
+@dataclasses.dataclass
+class IVFPQIndex:
+    """Cluster-sorted IVFPQ index.
+
+    Attributes:
+      centroids: (C, D) coarse centroids.
+      codebook: (M, 256, d_sub) PQ codebooks (of residuals).
+      codes: (N, M) uint8, rows sorted by cluster id.
+      vec_ids: (N,) int32 original vector ids, same order as codes.
+      offsets: (C + 1,) int64 CSR offsets into codes/vec_ids.
+    """
+
+    centroids: np.ndarray
+    codebook: np.ndarray
+    codes: np.ndarray
+    vec_ids: np.ndarray
+    offsets: np.ndarray
+
+    @property
+    def n_clusters(self) -> int:
+        return self.centroids.shape[0]
+
+    @property
+    def n_vectors(self) -> int:
+        return self.codes.shape[0]
+
+    @property
+    def m(self) -> int:
+        return self.codes.shape[1]
+
+    def cluster_sizes(self) -> np.ndarray:
+        return np.diff(self.offsets)
+
+    def cluster_codes(self, c: int) -> np.ndarray:
+        return self.codes[self.offsets[c] : self.offsets[c + 1]]
+
+    def cluster_ids(self, c: int) -> np.ndarray:
+        return self.vec_ids[self.offsets[c] : self.offsets[c + 1]]
+
+
+def build_index(
+    key: jax.Array,
+    xs: np.ndarray,
+    n_clusters: int,
+    m: int,
+    kmeans_iters: int = 25,
+    pq_iters: int = 20,
+    train_subsample: int | None = None,
+) -> IVFPQIndex:
+    """Offline phase: IVF + PQ.  Host-side (numpy) bookkeeping, JAX compute."""
+    xs = np.asarray(xs, np.float32)
+    n = xs.shape[0]
+    k_ivf, k_pq = jax.random.split(key)
+
+    train = xs
+    if train_subsample is not None and train_subsample < n:
+        sel = np.random.default_rng(0).choice(n, train_subsample, replace=False)
+        train = xs[sel]
+
+    centroids, _ = kmeans(k_ivf, jnp.asarray(train), n_clusters, iters=kmeans_iters)
+    centroids = np.asarray(centroids)
+
+    # assign the *full* dataset in chunks (billion-scale friendly)
+    assign = np.empty(n, np.int32)
+    chunk = max(1, min(n, 1 << 18))
+    assign_fn = jax.jit(
+        lambda x, c: jnp.argmin(_pairwise_sq_l2(x, c), axis=1).astype(jnp.int32)
+    )
+    for s in range(0, n, chunk):
+        assign[s : s + chunk] = np.asarray(
+            assign_fn(jnp.asarray(xs[s : s + chunk]), jnp.asarray(centroids))
+        )
+
+    residuals = xs - centroids[assign]
+    res_train = residuals
+    if train_subsample is not None and train_subsample < n:
+        res_train = residuals[sel]
+    codebook = np.asarray(train_pq(k_pq, jnp.asarray(res_train), m, iters=pq_iters))
+
+    codes = np.empty((n, m), np.uint8)
+    enc_fn = jax.jit(pq_encode)
+    for s in range(0, n, chunk):
+        codes[s : s + chunk] = np.asarray(
+            enc_fn(jnp.asarray(codebook), jnp.asarray(residuals[s : s + chunk]))
+        )
+
+    order = np.argsort(assign, kind="stable")
+    sizes = np.bincount(assign, minlength=n_clusters)
+    offsets = np.zeros(n_clusters + 1, np.int64)
+    np.cumsum(sizes, out=offsets[1:])
+    return IVFPQIndex(
+        centroids=centroids,
+        codebook=codebook,
+        codes=codes[order],
+        vec_ids=order.astype(np.int32),
+        offsets=offsets,
+    )
+
+
+@functools.partial(jax.jit, static_argnames=("nprobe",))
+def filter_clusters(
+    centroids: jax.Array, queries: jax.Array, nprobe: int
+) -> tuple[jax.Array, jax.Array]:
+    """Online stage (a): pick the nprobe closest coarse centroids per query.
+
+    Returns (cluster_ids (Q, nprobe), q_minus_c (Q, nprobe, D)).
+    Runs on the host CPU in the paper; here it is a tiny jitted GEMM.
+    """
+    d2 = _pairwise_sq_l2(queries, centroids)           # (Q, C)
+    _, cids = jax.lax.top_k(-d2, nprobe)               # (Q, nprobe)
+    qmc = queries[:, None, :] - centroids[cids]        # (Q, nprobe, D)
+    return cids, qmc
+
+
+def search(
+    index: IVFPQIndex,
+    queries: np.ndarray,
+    nprobe: int,
+    k: int,
+) -> tuple[np.ndarray, np.ndarray]:
+    """Flat (single-device) IVFPQ search -- the CPU-Faiss-style baseline.
+
+    Returns (dists (Q, k), ids (Q, k)) of approximate nearest neighbours.
+    """
+    queries = jnp.asarray(queries, jnp.float32)
+    cids, qmc = filter_clusters(jnp.asarray(index.centroids), queries, nprobe)
+    cids_np = np.asarray(cids)
+    codebook = jnp.asarray(index.codebook)
+
+    q_n = queries.shape[0]
+    out_d = np.full((q_n, k), np.inf, np.float32)
+    out_i = np.full((q_n, k), -1, np.int64)
+
+    scan_fn = jax.jit(
+        lambda lut, codes, valid: masked_topk_smallest(
+            adc_scan(lut, codes), valid, k
+        )
+    )
+    lut_fn = jax.jit(build_lut)
+
+    sizes = index.cluster_sizes()
+    for qi in range(q_n):
+        # concatenate this query's probed clusters (host gather), one scan
+        probe = cids_np[qi]
+        segs = [index.cluster_codes(c) for c in probe]
+        ids = np.concatenate([index.cluster_ids(c) for c in probe])
+        lens = np.asarray([len(s) for s in segs])
+        total = int(lens.sum())
+        if total == 0:
+            continue
+        codes = np.concatenate(segs, axis=0)
+        # per-point LUT row: which probe segment each point belongs to
+        seg_of = np.repeat(np.arange(nprobe), lens)
+        luts = np.asarray(jax.vmap(lambda r: lut_fn(codebook, r))(qmc[qi]))
+        # scan each probe segment with its own LUT, merge
+        best_d = np.full(k, np.inf, np.float32)
+        best_i = np.full(k, -1, np.int64)
+        for pi in range(nprobe):
+            seg = segs[pi]
+            if len(seg) == 0:
+                continue
+            kk = min(k, len(seg))
+            d, li = scan_fn(
+                jnp.asarray(luts[pi]),
+                jnp.asarray(seg),
+                jnp.ones(len(seg), bool),
+            )
+            d = np.asarray(d)[:kk]
+            gi = index.cluster_ids(probe[pi])[np.asarray(li)[:kk]]
+            md = np.concatenate([best_d, d])
+            mi = np.concatenate([best_i, gi])
+            sel = np.argsort(md, kind="stable")[:k]
+            best_d, best_i = md[sel], mi[sel]
+        out_d[qi], out_i[qi] = best_d, best_i
+    return out_d, out_i
+
+
+def brute_force(
+    xs: np.ndarray, queries: np.ndarray, k: int
+) -> tuple[np.ndarray, np.ndarray]:
+    """Exact k-NN ground truth for recall tests."""
+    d2 = np.asarray(
+        _pairwise_sq_l2(jnp.asarray(queries, jnp.float32), jnp.asarray(xs, jnp.float32))
+    )
+    idx = np.argsort(d2, axis=1, kind="stable")[:, :k]
+    return np.take_along_axis(d2, idx, axis=1), idx
+
+
+def recall_at_k(found_ids: np.ndarray, true_ids: np.ndarray) -> float:
+    """recall@k: |found ∩ true| / k averaged over queries."""
+    hits = 0
+    for f, t in zip(found_ids, true_ids):
+        hits += len(set(f.tolist()) & set(t.tolist()))
+    return hits / true_ids.size

@@ -1,0 +1,76 @@
+"""Product quantization: codebook training and encoding (offline phase).
+
+A D-dim residual vector is split into M subvectors of d_sub = D/M dims; each
+subvector is quantized to one of 256 codewords (uint8 id), giving the paper's
+4D/M compression (f32 -> M bytes).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.kmeans import kmeans, _pairwise_sq_l2
+
+NCODES = 256  # uint8 codeword ids, fixed by the paper (and by Faiss)
+
+
+@functools.partial(jax.jit, static_argnames=("m", "iters"))
+def train_pq(
+    key: jax.Array, residuals: jax.Array, m: int, iters: int = 20
+) -> jax.Array:
+    """Train per-subspace codebooks on residual vectors.
+
+    Args:
+      residuals: (N, D) float32 residuals (x - centroid[assign(x)]).
+      m: number of subspaces; D % m == 0.
+
+    Returns:
+      codebook B: (M, 256, d_sub) float32.
+    """
+    n, d = residuals.shape
+    assert d % m == 0, f"D={d} not divisible by M={m}"
+    dsub = d // m
+    sub = residuals.reshape(n, m, dsub).transpose(1, 0, 2)  # (M, N, dsub)
+    keys = jax.random.split(key, m)
+
+    def train_one(k_, xs):
+        cb, _ = kmeans(k_, xs, NCODES, iters=iters)
+        return cb
+
+    return jax.vmap(train_one)(keys, sub)  # (M, 256, dsub)
+
+
+@jax.jit
+def pq_encode(codebook: jax.Array, residuals: jax.Array) -> jax.Array:
+    """Encode residuals to uint8 codes.
+
+    Args:
+      codebook: (M, 256, d_sub).
+      residuals: (N, D) with D = M * d_sub.
+
+    Returns:
+      codes: (N, M) uint8 -- row n stores the codeword ids of point n.
+    """
+    m, _, dsub = codebook.shape
+    n = residuals.shape[0]
+    sub = residuals.reshape(n, m, dsub).transpose(1, 0, 2)  # (M, N, dsub)
+
+    def enc_one(cb, xs):
+        d2 = _pairwise_sq_l2(xs, cb)  # (N, 256)
+        return jnp.argmin(d2, axis=1)
+
+    codes = jax.vmap(enc_one)(codebook, sub)  # (M, N)
+    return codes.T.astype(jnp.uint8)
+
+
+@jax.jit
+def pq_decode(codebook: jax.Array, codes: jax.Array) -> jax.Array:
+    """Reconstruct residuals from codes: (N, M) uint8 -> (N, D)."""
+    m = codebook.shape[0]
+    cols = jnp.arange(m)
+    # gather codeword vectors: (N, M, dsub)
+    vecs = codebook[cols[None, :], codes.astype(jnp.int32)]
+    return vecs.reshape(codes.shape[0], -1)

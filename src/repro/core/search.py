@@ -1,0 +1,71 @@
+"""ADC scan + top-k: online stages (c) and (d) of IVFPQ (jnp reference path).
+
+The Pallas kernels in repro/kernels/ implement the same contract with VMEM
+tiling; tests assert allclose between the two.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+
+@jax.jit
+def adc_scan(lut: jax.Array, codes: jax.Array) -> jax.Array:
+    """Asymmetric distance computation.
+
+    Args:
+      lut: (M, 256) float32.
+      codes: (N, M) uint8 codeword ids.
+
+    Returns:
+      (N,) float32 approximate squared distances.
+    """
+    m = lut.shape[0]
+    cols = jnp.arange(m)
+    picked = lut[cols[None, :], codes.astype(jnp.int32)]  # (N, M)
+    return jnp.sum(picked, axis=-1)
+
+
+@jax.jit
+def adc_scan_flat(lut_flat: jax.Array, addrs: jax.Array) -> jax.Array:
+    """Direct-address ADC (§4.3 layout): flat table + pre-offset indices.
+
+    Args:
+      lut_flat: (A,) float32 -- [LUT row-major (M*256) | combo partial sums].
+      addrs: (N, L) int32 flat addresses; padding entries point at a
+        zero-valued sentinel slot (address A-1 by convention of cooc.py).
+
+    Returns:
+      (N,) float32 distances.
+    """
+    return jnp.sum(lut_flat[addrs], axis=-1)
+
+
+@functools.partial(jax.jit, static_argnames=("k",))
+def topk_smallest(dists: jax.Array, k: int) -> tuple[jax.Array, jax.Array]:
+    """k smallest distances (values, indices) along the last axis."""
+    neg_vals, idx = jax.lax.top_k(-dists, k)
+    return -neg_vals, idx
+
+
+@functools.partial(jax.jit, static_argnames=("k",))
+def merge_topk(
+    vals_a: jax.Array, ids_a: jax.Array, vals_b: jax.Array, ids_b: jax.Array, k: int
+) -> tuple[jax.Array, jax.Array]:
+    """Merge two top-k lists (the paper's DPU-local heap merge, vectorized)."""
+    vals = jnp.concatenate([vals_a, vals_b], axis=-1)
+    ids = jnp.concatenate([ids_a, ids_b], axis=-1)
+    mvals, midx = topk_smallest(vals, k)
+    return mvals, jnp.take_along_axis(ids, midx, axis=-1)
+
+
+@functools.partial(jax.jit, static_argnames=("k",))
+def masked_topk_smallest(
+    dists: jax.Array, valid: jax.Array, k: int
+) -> tuple[jax.Array, jax.Array]:
+    """Top-k over a padded scan: invalid lanes are pushed to +inf."""
+    big = jnp.asarray(jnp.finfo(dists.dtype).max, dists.dtype)
+    return topk_smallest(jnp.where(valid, dists, big), k)

@@ -1,0 +1,2 @@
+from repro.data.tokens import SyntheticTokenDataset
+from repro.data.vectors import SkewedVectorDataset, make_clustered_vectors

@@ -1,0 +1,91 @@
+"""Pallas TPU kernel: ADC scan (IVFPQ distance calculation, paper stage (c)).
+
+PIM -> TPU mapping (DESIGN.md §2):
+  * the LUT is pinned whole in VMEM for the life of the scan (WRAM analogue);
+  * encoded points stream HBM -> VMEM in (block_n, M) tiles -- the tile height
+    is the "MRAM read size" knob of paper Fig. 9/15;
+  * the WRAM random gather `LUT[e_m + 256*m]` becomes either
+      - `path="gather"`: a VMEM vector gather (jnp.take on the flat table), or
+      - `path="onehot"`: a one-hot GEMM on the MXU -- the classic TPU trick
+        that converts a latency-bound lookup into a dense systolic op.
+
+The *flat* variant scans §4.3 direct-address codes against the extended
+[LUT | combo-sums | 0] table; identical kernel structure, wider table.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+NCODES = 256
+
+
+def _gather_dists(table_flat: jax.Array, addr: jax.Array) -> jax.Array:
+    """(T,) x (BN, W) int32 -> (BN,) summed gathers."""
+    vals = jnp.take(table_flat, addr, axis=0)  # (BN, W)
+    return jnp.sum(vals, axis=-1)
+
+
+def _onehot_dists(table_flat: jax.Array, addr: jax.Array) -> jax.Array:
+    """Multi-hot x table GEMM: turns the gather into an MXU contraction.
+
+    Builds the (BN, T) multi-hot accumulation column-by-column (W compares)
+    and contracts against the table with a single dot -- hardware-aligned as
+    long as T is a multiple of 128 (ops.py pads the table).
+    """
+    bn, w = addr.shape
+    t = table_flat.shape[0]
+    iota_t = jax.lax.broadcasted_iota(jnp.int32, (bn, t), 1)
+    acc = jnp.zeros((bn, t), table_flat.dtype)
+    for i in range(w):  # static unroll: W is small (<= M)
+        acc = acc + (iota_t == addr[:, i][:, None]).astype(table_flat.dtype)
+    return acc @ table_flat
+
+
+def _adc_scan_kernel(table_ref, addr_ref, out_ref, *, path: str):
+    table_flat = table_ref[...].reshape(-1)
+    addr = addr_ref[...]
+    if path == "onehot":
+        out_ref[...] = _onehot_dists(table_flat, addr)
+    else:
+        out_ref[...] = _gather_dists(table_flat, addr)
+
+
+@functools.partial(
+    jax.jit, static_argnames=("block_n", "path", "interpret")
+)
+def adc_scan_kernel(
+    table: jax.Array,
+    addrs: jax.Array,
+    *,
+    block_n: int = 1024,
+    path: str = "gather",
+    interpret: bool = False,
+) -> jax.Array:
+    """Scan pre-offset flat addresses against a flat table.
+
+    Args:
+      table: (T,) float32 flat LUT ([LUT] or [LUT | combos | 0]).
+      addrs: (N, W) int32 flat addresses, N % block_n == 0 (ops.py pads).
+
+    Returns:
+      (N,) float32 distances.
+    """
+    n, w = addrs.shape
+    assert n % block_n == 0, f"N={n} not a multiple of block_n={block_n}"
+    grid = (n // block_n,)
+    return pl.pallas_call(
+        functools.partial(_adc_scan_kernel, path=path),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec(table.shape, lambda i: (0,)),          # whole table in VMEM
+            pl.BlockSpec((block_n, w), lambda i: (i, 0)),       # stream codes
+        ],
+        out_specs=pl.BlockSpec((block_n,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((n,), table.dtype),
+        interpret=interpret,
+    )(table, addrs)

@@ -1,0 +1,506 @@
+"""Pallas TPU kernel: fused ADC scan + running top-k with early pruning.
+
+This is the TPU adaptation of paper §4.2 (thread pipeline) + §4.4 (top-k
+pruning): instead of thread-local heaps merged through semaphores, each grid
+step scans one (block_n, W) tile of codes and folds it into a k-sized running
+result held in VMEM scratch.  The paper's pruning rule survives verbatim: if
+the tile's minimum distance is not below the current k-th best, the entire
+merge is skipped (`pl.when`), which is exactly "the remaining values cannot
+contribute to the overall top-k and can therefore be pruned".
+
+Grid is (Q, num_tiles): the LUT of query q stays resident in VMEM while its
+tiles stream -- one query's scan is the paper's "single cluster processed by
+all threads"; multiple queries iterate in the outer grid dimension, matching
+the sequential cluster loop on a DPU.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.kernels.adc_scan import _gather_dists, _onehot_dists
+
+
+def _select_k(
+    vals: jax.Array, idx: jax.Array, k: int
+) -> tuple[jax.Array, jax.Array]:
+    """k smallest (ascending) of a small 1-D array via iterative masked-min."""
+    out_v = jnp.full((k,), jnp.inf, vals.dtype)
+    out_i = jnp.full((k,), -1, jnp.int32)
+
+    def body(i, carry):
+        rem, ov, oi = carry
+        j = jnp.argmin(rem)
+        ov = ov.at[i].set(rem[j])
+        oi = oi.at[i].set(idx[j])
+        rem = rem.at[j].set(jnp.inf)
+        return rem, ov, oi
+
+    _, out_v, out_i = jax.lax.fori_loop(0, k, body, (vals, out_v, out_i))
+    return out_v, out_i
+
+
+def _adc_topk_kernel(
+    nvalid_ref,
+    table_ref,
+    addr_ref,
+    vals_out,
+    idx_out,
+    sv,
+    si,
+    *,
+    k: int,
+    block_n: int,
+    path: str,
+):
+    t = pl.program_id(1)
+
+    @pl.when(t == 0)
+    def _init():
+        sv[...] = jnp.full((k,), jnp.inf, sv.dtype)
+        si[...] = jnp.full((k,), -1, jnp.int32)
+
+    table_flat = table_ref[...].reshape(-1)
+    addr = addr_ref[...]
+    if path == "onehot":
+        dists = _onehot_dists(table_flat, addr)
+    else:
+        dists = _gather_dists(table_flat, addr)
+    gidx = t * block_n + jax.lax.broadcasted_iota(jnp.int32, (block_n,), 0)
+    valid = gidx < nvalid_ref[0]
+    dists = jnp.where(valid, dists, jnp.inf)
+
+    # §4.4 early pruning: skip the merge when nothing in this tile can beat
+    # the current k-th best.
+    kth = sv[k - 1]  # scratch is kept sorted ascending
+    tile_min = jnp.min(dists)
+
+    @pl.when(tile_min < kth)
+    def _merge():
+        all_v = jnp.concatenate([sv[...], dists])
+        all_i = jnp.concatenate([si[...], gidx])
+        out_v, out_i = _select_k(all_v, all_i, k)
+        sv[...] = out_v
+        si[...] = out_i
+
+    vals_out[...] = sv[...].reshape(1, k)
+    idx_out[...] = si[...].reshape(1, k)
+
+
+def _adc_topk_pairs_kernel(
+    nvalid_ref,
+    table_ref,
+    addr_ref,
+    vals_out,
+    idx_out,
+    sv,
+    si,
+    *,
+    k: int,
+    block_n: int,
+    path: str,
+):
+    """Per-pair variant: pair p scans its *own* code window addr[p]."""
+    p = pl.program_id(0)
+    t = pl.program_id(1)
+
+    @pl.when(t == 0)
+    def _init():
+        sv[...] = jnp.full((k,), jnp.inf, sv.dtype)
+        si[...] = jnp.full((k,), -1, jnp.int32)
+
+    table_flat = table_ref[...].reshape(-1)
+    addr = addr_ref[...].reshape(block_n, -1)
+    if path == "onehot":
+        dists = _onehot_dists(table_flat, addr)
+    else:
+        dists = _gather_dists(table_flat, addr)
+    ridx = t * block_n + jax.lax.broadcasted_iota(jnp.int32, (block_n,), 0)
+    valid = ridx < nvalid_ref[p]
+    dists = jnp.where(valid, dists, jnp.inf)
+
+    kth = sv[k - 1]
+    tile_min = jnp.min(dists)
+
+    @pl.when(tile_min < kth)
+    def _merge():
+        all_v = jnp.concatenate([sv[...], dists])
+        all_i = jnp.concatenate([si[...], ridx])
+        out_v, out_i = _select_k(all_v, all_i, k)
+        sv[...] = out_v
+        si[...] = out_i
+
+    vals_out[...] = sv[...].reshape(1, k)
+    idx_out[...] = si[...].reshape(1, k)
+
+
+def _adc_topk_tiles_kernel(
+    tile_pair_ref,   # scalar-prefetch: (T,) int32 pair id per tile (P = dummy)
+    tile_block_ref,  # scalar-prefetch: (T,) int32 code-block index per tile
+    tile_row0_ref,   # scalar-prefetch: (T,) int32 window-row of the tile's first row
+    nvalid_ref,      # scalar-prefetch: (P+1,) int32 valid rows per pair
+    table_ref,       # (1, A) table of this tile's pair
+    codes_ref,       # (block_n, W) code tile
+    vals_out,
+    idx_out,
+    sv,              # (P+1, k) running top-k values
+    si,              # (P+1, k) running top-k indices
+    *,
+    k: int,
+    block_n: int,
+    path: str,
+    add_offsets: bool,
+):
+    """Tile-list variant (beyond-paper §Perf optimization): the host emits
+    one work item per REAL code block, so no padded-window DMA at all.  The
+    running top-k lives in a (P+1, k) VMEM scratch (row P = dummy tiles).
+
+    This is Algorithm 2 pushed down to tile granularity: the same idea the
+    paper uses to balance DPUs, reused to keep every DMA useful."""
+    t = pl.program_id(0)
+
+    @pl.when(t == 0)
+    def _init():
+        sv[...] = jnp.full(sv.shape, jnp.inf, sv.dtype)
+        si[...] = jnp.full(si.shape, -1, jnp.int32)
+
+    pair = tile_pair_ref[t]
+    row0 = tile_row0_ref[t]
+    table_flat = table_ref[...].reshape(-1)
+    addr = codes_ref[...].astype(jnp.int32)
+    if add_offsets:
+        offs = jax.lax.broadcasted_iota(jnp.int32, addr.shape, 1) * 256
+        addr = addr + offs
+    if path == "onehot":
+        dists = _onehot_dists(table_flat, addr)
+    else:
+        dists = _gather_dists(table_flat, addr)
+    ridx = row0 + jax.lax.broadcasted_iota(jnp.int32, (block_n,), 0)
+    valid = ridx < nvalid_ref[pair]
+    dists = jnp.where(valid, dists, jnp.inf)
+
+    cur_v = sv[pair, :]
+    cur_i = si[pair, :]
+    kth = cur_v[k - 1]
+    tile_min = jnp.min(dists)
+
+    @pl.when(tile_min < kth)
+    def _merge():
+        all_v = jnp.concatenate([cur_v, dists])
+        all_i = jnp.concatenate([cur_i, ridx])
+        out_v, out_i = _select_k(all_v, all_i, k)
+        sv[pair, :] = out_v
+        si[pair, :] = out_i
+
+    nt = pl.num_programs(0)
+
+    @pl.when(t == nt - 1)
+    def _out():
+        vals_out[...] = sv[...]
+        idx_out[...] = si[...]
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("k", "block_n", "path", "interpret", "add_offsets"),
+)
+def adc_topk_tiles_kernel(
+    tables: jax.Array,       # (P, A)
+    codes: jax.Array,        # (cap, W) int32/uint8 device-resident
+    tile_pair: jax.Array,    # (T,) int32 (== P for dummy/padding tiles)
+    tile_block: jax.Array,   # (T,) int32 code block index
+    tile_row0: jax.Array,    # (T,) int32 window-relative first row
+    n_valid: jax.Array,      # (P,) int32
+    *,
+    k: int,
+    block_n: int = 1024,
+    path: str = "gather",
+    add_offsets: bool = False,
+    interpret: bool = False,
+) -> tuple[jax.Array, jax.Array]:
+    """Flat work-queue fused scan+top-k: one grid step per REAL code tile."""
+    p, t_sz = tables.shape
+    t_n = tile_pair.shape[0]
+    w = codes.shape[1]
+    # dummy tiles reference table row P (a zero row appended here) and
+    # n_valid row P (zero) -> their merges always prune away
+    tables_ext = jnp.concatenate(
+        [tables, jnp.zeros((1, t_sz), tables.dtype)], axis=0
+    )
+    nvalid_ext = jnp.concatenate(
+        [n_valid.astype(jnp.int32), jnp.zeros((1,), jnp.int32)]
+    )
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=4,
+        grid=(t_n,),
+        in_specs=[
+            pl.BlockSpec((1, t_sz), lambda ti, tp, tb, tr, nv: (tp[ti], 0)),
+            pl.BlockSpec((block_n, w), lambda ti, tp, tb, tr, nv: (tb[ti], 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((p + 1, k), lambda ti, tp, tb, tr, nv: (0, 0)),
+            pl.BlockSpec((p + 1, k), lambda ti, tp, tb, tr, nv: (0, 0)),
+        ],
+        scratch_shapes=[
+            pltpu.VMEM((p + 1, k), tables.dtype),
+            pltpu.VMEM((p + 1, k), jnp.int32),
+        ],
+    )
+    vals, idx = pl.pallas_call(
+        functools.partial(
+            _adc_topk_tiles_kernel, k=k, block_n=block_n, path=path,
+            add_offsets=add_offsets,
+        ),
+        grid_spec=grid_spec,
+        out_shape=[
+            jax.ShapeDtypeStruct((p + 1, k), tables.dtype),
+            jax.ShapeDtypeStruct((p + 1, k), jnp.int32),
+        ],
+        interpret=interpret,
+    )(
+        tile_pair.astype(jnp.int32),
+        tile_block.astype(jnp.int32),
+        tile_row0.astype(jnp.int32),
+        nvalid_ext,
+        tables_ext,
+        codes,
+    )
+    return vals[:p], idx[:p]
+
+
+def _adc_topk_windows_kernel(
+    start_blk_ref,   # scalar-prefetch: (P,) int32 window start (in blocks)
+    nvalid_ref,      # scalar-prefetch: (P,) int32 valid rows per window
+    table_ref,
+    codes_ref,       # (block_n, W) tile selected by the prefetched index map
+    vals_out,
+    idx_out,
+    sv,
+    si,
+    *,
+    k: int,
+    block_n: int,
+    path: str,
+    add_offsets: bool = False,
+):
+    """Window variant: pair p scans tiles [start[p], start[p] + T) of the
+    device-resident code array -- no window materialization.  This is the
+    HBM->VMEM streaming loop of the DPU (MRAM->WRAM DMA), with the §4.4
+    pruning applied per tile."""
+    del start_blk_ref  # consumed by the BlockSpec index_map
+    p = pl.program_id(0)
+    t = pl.program_id(1)
+
+    @pl.when(t == 0)
+    def _init():
+        sv[...] = jnp.full((k,), jnp.inf, sv.dtype)
+        si[...] = jnp.full((k,), -1, jnp.int32)
+
+    table_flat = table_ref[...].reshape(-1)
+    addr = codes_ref[...].astype(jnp.int32)
+    if add_offsets:  # raw uint8 codes: direct addressing happens in VMEM
+        offs = jax.lax.broadcasted_iota(jnp.int32, addr.shape, 1) * 256
+        addr = addr + offs
+    if path == "onehot":
+        dists = _onehot_dists(table_flat, addr)
+    else:
+        dists = _gather_dists(table_flat, addr)
+    ridx = t * block_n + jax.lax.broadcasted_iota(jnp.int32, (block_n,), 0)
+    valid = ridx < nvalid_ref[p]
+    dists = jnp.where(valid, dists, jnp.inf)
+
+    kth = sv[k - 1]
+    tile_min = jnp.min(dists)
+
+    @pl.when(tile_min < kth)
+    def _merge():
+        all_v = jnp.concatenate([sv[...], dists])
+        all_i = jnp.concatenate([si[...], ridx])
+        out_v, out_i = _select_k(all_v, all_i, k)
+        sv[...] = out_v
+        si[...] = out_i
+
+    vals_out[...] = sv[...].reshape(1, k)
+    idx_out[...] = si[...].reshape(1, k)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=(
+        "k", "window", "block_n", "path", "interpret", "add_offsets",
+    ),
+)
+def adc_topk_windows_kernel(
+    tables: jax.Array,
+    codes: jax.Array,
+    start_blocks: jax.Array,
+    n_valid: jax.Array,
+    *,
+    k: int,
+    window: int,
+    block_n: int = 1024,
+    path: str = "gather",
+    add_offsets: bool = False,
+    interpret: bool = False,
+) -> tuple[jax.Array, jax.Array]:
+    """Fused scan + top-k over per-pair windows of a shared code array.
+
+    Args:
+      tables: (P, T) float32 flat tables.
+      codes: (cap, W) int32 device-resident flat addresses (block-aligned
+        cluster slots; layout.py guarantees start % block_n == 0).
+      start_blocks: (P,) int32 -- slot_start // block_n per pair.
+      n_valid: (P,) int32 valid rows per window.
+      window: padded window length (rows), multiple of block_n.
+
+    Returns:
+      ((P, k) ascending distances, (P, k) int32 window-row indices).
+    """
+    p, t_sz = tables.shape
+    assert window % block_n == 0
+    w = codes.shape[1]
+    grid = (p, window // block_n)
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, t_sz), lambda pi, ti, sb, nv: (pi, 0)),
+            pl.BlockSpec((block_n, w), lambda pi, ti, sb, nv: (sb[pi] + ti, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, k), lambda pi, ti, sb, nv: (pi, 0)),
+            pl.BlockSpec((1, k), lambda pi, ti, sb, nv: (pi, 0)),
+        ],
+        scratch_shapes=[
+            pltpu.VMEM((k,), tables.dtype),
+            pltpu.VMEM((k,), jnp.int32),
+        ],
+    )
+    return pl.pallas_call(
+        functools.partial(
+            _adc_topk_windows_kernel, k=k, block_n=block_n, path=path,
+            add_offsets=add_offsets,
+        ),
+        grid_spec=grid_spec,
+        out_shape=[
+            jax.ShapeDtypeStruct((p, k), tables.dtype),
+            jax.ShapeDtypeStruct((p, k), jnp.int32),
+        ],
+        interpret=interpret,
+    )(
+        start_blocks.astype(jnp.int32),
+        n_valid.astype(jnp.int32),
+        tables,
+        codes,
+    )
+
+
+@functools.partial(
+    jax.jit, static_argnames=("k", "block_n", "path", "interpret")
+)
+def adc_topk_pairs_kernel(
+    tables: jax.Array,
+    addrs: jax.Array,
+    n_valid: jax.Array,
+    *,
+    k: int,
+    block_n: int = 1024,
+    path: str = "gather",
+    interpret: bool = False,
+) -> tuple[jax.Array, jax.Array]:
+    """Fused scan + top-k where each pair scans its own window.
+
+    Args:
+      tables: (P, T) float32 flat tables (one per (query, cluster) pair).
+      addrs: (P, L, W) int32 code windows, L % block_n == 0.
+      n_valid: (P,) int32 valid rows per window.
+
+    Returns:
+      ((P, k) ascending distances, (P, k) int32 window-row indices).
+    """
+    p, t_sz = tables.shape
+    _, l, w = addrs.shape
+    assert l % block_n == 0
+    grid = (p, l // block_n)
+    return pl.pallas_call(
+        functools.partial(
+            _adc_topk_pairs_kernel, k=k, block_n=block_n, path=path
+        ),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((p,), lambda pi, ti: (0,)),
+            pl.BlockSpec((1, t_sz), lambda pi, ti: (pi, 0)),
+            pl.BlockSpec((1, block_n, w), lambda pi, ti: (pi, ti, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, k), lambda pi, ti: (pi, 0)),
+            pl.BlockSpec((1, k), lambda pi, ti: (pi, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((p, k), tables.dtype),
+            jax.ShapeDtypeStruct((p, k), jnp.int32),
+        ],
+        scratch_shapes=[
+            pltpu.VMEM((k,), tables.dtype),
+            pltpu.VMEM((k,), jnp.int32),
+        ],
+        interpret=interpret,
+    )(n_valid, tables, addrs)
+
+
+@functools.partial(
+    jax.jit, static_argnames=("k", "block_n", "path", "interpret")
+)
+def adc_topk_kernel(
+    tables: jax.Array,
+    addrs: jax.Array,
+    n_valid: jax.Array,
+    *,
+    k: int,
+    block_n: int = 1024,
+    path: str = "gather",
+    interpret: bool = False,
+) -> tuple[jax.Array, jax.Array]:
+    """Fused scan + top-k over flat-address codes.
+
+    Args:
+      tables: (Q, T) float32 flat tables (one per query/probe).
+      addrs: (N, W) int32, N % block_n == 0 (ops.py pads).
+      n_valid: (1,) int32 -- true number of rows (padding masked to +inf).
+
+    Returns:
+      ((Q, k) ascending distances, (Q, k) int32 row indices).
+    """
+    q, t_sz = tables.shape
+    n, w = addrs.shape
+    assert n % block_n == 0
+    grid = (q, n // block_n)
+    return pl.pallas_call(
+        functools.partial(
+            _adc_topk_kernel, k=k, block_n=block_n, path=path
+        ),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1,), lambda qi, ti: (0,)),
+            pl.BlockSpec((1, t_sz), lambda qi, ti: (qi, 0)),
+            pl.BlockSpec((block_n, w), lambda qi, ti: (ti, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, k), lambda qi, ti: (qi, 0)),
+            pl.BlockSpec((1, k), lambda qi, ti: (qi, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((q, k), tables.dtype),
+            jax.ShapeDtypeStruct((q, k), jnp.int32),
+        ],
+        scratch_shapes=[
+            pltpu.VMEM((k,), tables.dtype),
+            pltpu.VMEM((k,), jnp.int32),
+        ],
+        interpret=interpret,
+    )(n_valid, tables, addrs)

@@ -1,0 +1,122 @@
+"""Pallas TPU kernels: LUT construction (paper stage (b)) and the fused
+extended-table build ([LUT | combo partial sums | 0], paper §4.3 online part).
+
+On the DPU, threads build LUT segments from the codebook and then compute the
+combo partial sums into a pre-arranged WRAM buffer; here the codebook tile
+lives in VMEM and one grid step emits a full (M, 256) table per query, with
+the combo sums appended by the fused variant.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+NCODES = 256
+
+
+def _lut_build_kernel(cb_ref, qmc_ref, out_ref):
+    cb = cb_ref[...]          # (1, 256, dsub) -- one subspace codebook
+    qr = qmc_ref[...]         # (1, 1, dsub)
+    diff = cb - qr            # broadcast over 256 codewords
+    out_ref[...] = jnp.sum(diff * diff, axis=-1, keepdims=False)[None]
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def lut_build_kernel(
+    codebook: jax.Array, qmc: jax.Array, *, interpret: bool = False
+) -> jax.Array:
+    """(M, 256, dsub) x (Q, M, dsub) -> (Q, M, 256) squared-L2 LUTs."""
+    m, ncodes, dsub = codebook.shape
+    q = qmc.shape[0]
+    return pl.pallas_call(
+        _lut_build_kernel,
+        grid=(q, m),
+        in_specs=[
+            pl.BlockSpec((1, ncodes, dsub), lambda qi, mi: (mi, 0, 0)),
+            pl.BlockSpec((1, 1, dsub), lambda qi, mi: (qi, mi, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, ncodes), lambda qi, mi: (qi, mi, 0)),
+        out_shape=jax.ShapeDtypeStruct((q, m, ncodes), codebook.dtype),
+        interpret=interpret,
+    )(codebook, qmc)
+
+
+@functools.partial(jax.jit, static_argnames=("t_pad", "interpret"))
+def ext_lut_pairs_kernel(
+    luts: jax.Array,
+    combo_addrs: jax.Array,
+    *,
+    t_pad: int,
+    interpret: bool = False,
+) -> jax.Array:
+    """Per-pair combos variant: combo_addrs (Q, n_combos, L) -- each probed
+    cluster brings its own mined combo set (paper mines per cluster)."""
+    q, m, ncodes = luts.shape
+    n_combos = combo_addrs.shape[1]
+    assert t_pad >= m * ncodes + n_combos + 1
+    return pl.pallas_call(
+        functools.partial(
+            _ext_lut_kernel, m_sub=m, n_combos=n_combos, t_pad=t_pad
+        ),
+        grid=(q,),
+        in_specs=[
+            pl.BlockSpec((1, m, ncodes), lambda qi: (qi, 0, 0)),
+            pl.BlockSpec(
+                (1,) + combo_addrs.shape[1:], lambda qi: (qi, 0, 0)
+            ),
+        ],
+        out_specs=pl.BlockSpec((1, t_pad), lambda qi: (qi, 0)),
+        out_shape=jax.ShapeDtypeStruct((q, t_pad), luts.dtype),
+        interpret=interpret,
+    )(luts, combo_addrs)
+
+
+def _ext_lut_kernel(lut_ref, caddr_ref, out_ref, *, m_sub, n_combos, t_pad):
+    lut_flat = lut_ref[...].reshape(-1)               # (M*256,)
+    caddr = caddr_ref[...].reshape(n_combos, -1)      # (n_combos, L) flat addrs
+    sums = jnp.sum(jnp.take(lut_flat, caddr, axis=0), axis=-1)  # (n_combos,)
+    base = m_sub * NCODES
+    pad = jnp.zeros((t_pad - base - n_combos,), lut_flat.dtype)
+    out_ref[...] = jnp.concatenate([lut_flat, sums, pad]).reshape(1, t_pad)
+
+
+@functools.partial(jax.jit, static_argnames=("t_pad", "interpret"))
+def ext_lut_kernel(
+    luts: jax.Array,
+    combo_addrs: jax.Array,
+    *,
+    t_pad: int,
+    interpret: bool = False,
+) -> jax.Array:
+    """Fused extended-table build.
+
+    Args:
+      luts: (Q, M, 256) tables from lut_build_kernel.
+      combo_addrs: (n_combos, L) int32 flat addresses (col*256 + code) of the
+        items of each mined combo.
+      t_pad: output width >= M*256 + n_combos + 1 (128-aligned by ops.py);
+        the tail beyond the combo sums is the zero-sentinel region.
+
+    Returns:
+      (Q, t_pad) float32 flat tables.
+    """
+    q, m, ncodes = luts.shape
+    n_combos = combo_addrs.shape[0]
+    assert t_pad >= m * ncodes + n_combos + 1
+    return pl.pallas_call(
+        functools.partial(
+            _ext_lut_kernel, m_sub=m, n_combos=n_combos, t_pad=t_pad
+        ),
+        grid=(q,),
+        in_specs=[
+            pl.BlockSpec((1, m, ncodes), lambda qi: (qi, 0, 0)),
+            pl.BlockSpec(combo_addrs.shape, lambda qi: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, t_pad), lambda qi: (qi, 0)),
+        out_shape=jax.ShapeDtypeStruct((q, t_pad), luts.dtype),
+        interpret=interpret,
+    )(luts, combo_addrs)

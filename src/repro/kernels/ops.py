@@ -1,0 +1,278 @@
+"""Public jit'd wrappers for the Pallas kernels: padding, dtype widening,
+block-size selection, backend dispatch (interpret=True off-TPU).
+
+API (all return the same values as the matching ref.py oracle):
+  adc_scan(lut, codes)                plain ADC distances
+  adc_scan_flat(ext_lut, addrs)       direct-address ADC distances
+  adc_topk(luts, codes, k)            fused scan + top-k (multi-query)
+  adc_topk_flat(ext_luts, addrs, k)   ... over co-occ encoded codes
+  build_luts(codebook, qmc)           stage-(b) LUT construction
+  build_ext_luts(luts, cols, codes)   fused [LUT | combo sums | 0] tables
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import adc_scan as _scan
+from repro.kernels import adc_topk as _topk
+from repro.kernels import lut_build as _lut
+
+NCODES = 256
+LANE = 128  # TPU lane width: pad tables/blocks to multiples of this
+
+
+def _interpret_default() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+def _round_up(x: int, mult: int) -> int:
+    return (x + mult - 1) // mult * mult
+
+
+def _pad_table(table: jax.Array) -> jax.Array:
+    """Pad flat table width to a LANE multiple (one-hot GEMM alignment)."""
+    t = table.shape[-1]
+    pad = _round_up(t, LANE) - t
+    if pad == 0:
+        return table
+    widths = [(0, 0)] * (table.ndim - 1) + [(0, pad)]
+    return jnp.pad(table, widths)
+
+
+def _codes_to_addrs(codes: jax.Array) -> jax.Array:
+    """(N, M) uint8 codes -> (N, M) int32 flat addresses col*256 + code."""
+    m = codes.shape[-1]
+    offs = (jnp.arange(m, dtype=jnp.int32) * NCODES)[None, :]
+    return codes.astype(jnp.int32) + offs
+
+
+def _pad_rows(addrs: jax.Array, block_n: int, fill: int) -> jax.Array:
+    n = addrs.shape[0]
+    pad = _round_up(max(n, block_n), block_n) - n
+    if pad == 0:
+        return addrs
+    return jnp.pad(addrs, ((0, pad), (0, 0)), constant_values=fill)
+
+
+@functools.partial(
+    jax.jit, static_argnames=("block_n", "path", "interpret")
+)
+def adc_scan(
+    lut: jax.Array,
+    codes: jax.Array,
+    *,
+    block_n: int = 1024,
+    path: str = "gather",
+    interpret: bool | None = None,
+) -> jax.Array:
+    """(M, 256) x (N, M) -> (N,) ADC distances via the Pallas kernel."""
+    if interpret is None:
+        interpret = _interpret_default()
+    n = codes.shape[0]
+    table = _pad_table(lut.reshape(-1))
+    addrs = _pad_rows(_codes_to_addrs(codes), block_n, fill=0)
+    out = _scan.adc_scan_kernel(
+        table, addrs, block_n=block_n, path=path, interpret=interpret
+    )
+    return out[:n]
+
+
+@functools.partial(
+    jax.jit, static_argnames=("block_n", "path", "interpret")
+)
+def adc_scan_flat(
+    ext_lut: jax.Array,
+    addrs: jax.Array,
+    *,
+    block_n: int = 1024,
+    path: str = "gather",
+    interpret: bool | None = None,
+) -> jax.Array:
+    """(A,) x (N, W) direct-address scan -> (N,)."""
+    if interpret is None:
+        interpret = _interpret_default()
+    n = addrs.shape[0]
+    table = _pad_table(ext_lut)
+    # pad rows with the zero-sentinel address (A-1 of the unpadded table)
+    sentinel = ext_lut.shape[-1] - 1
+    addrs_p = _pad_rows(addrs.astype(jnp.int32), block_n, fill=sentinel)
+    out = _scan.adc_scan_kernel(
+        table, addrs_p, block_n=block_n, path=path, interpret=interpret
+    )
+    return out[:n]
+
+
+@functools.partial(
+    jax.jit, static_argnames=("k", "block_n", "path", "interpret")
+)
+def adc_topk(
+    luts: jax.Array,
+    codes: jax.Array,
+    k: int,
+    *,
+    block_n: int = 1024,
+    path: str = "gather",
+    interpret: bool | None = None,
+) -> tuple[jax.Array, jax.Array]:
+    """(Q, M, 256) x (N, M) -> ((Q, k) dists, (Q, k) idx), fused."""
+    if interpret is None:
+        interpret = _interpret_default()
+    q = luts.shape[0]
+    n = codes.shape[0]
+    tables = _pad_table(luts.reshape(q, -1))
+    addrs = _pad_rows(_codes_to_addrs(codes), block_n, fill=0)
+    n_valid = jnp.asarray([n], jnp.int32)
+    return _topk.adc_topk_kernel(
+        tables,
+        addrs,
+        n_valid,
+        k=k,
+        block_n=block_n,
+        path=path,
+        interpret=interpret,
+    )
+
+
+@functools.partial(
+    jax.jit, static_argnames=("k", "block_n", "path", "interpret")
+)
+def adc_topk_flat(
+    ext_luts: jax.Array,
+    addrs: jax.Array,
+    k: int,
+    *,
+    block_n: int = 1024,
+    path: str = "gather",
+    interpret: bool | None = None,
+) -> tuple[jax.Array, jax.Array]:
+    """(Q, A) x (N, W) direct-address fused scan + top-k."""
+    if interpret is None:
+        interpret = _interpret_default()
+    n = addrs.shape[0]
+    tables = _pad_table(ext_luts)
+    sentinel = ext_luts.shape[-1] - 1
+    addrs_p = _pad_rows(addrs.astype(jnp.int32), block_n, fill=sentinel)
+    n_valid = jnp.asarray([n], jnp.int32)
+    return _topk.adc_topk_kernel(
+        tables,
+        addrs_p,
+        n_valid,
+        k=k,
+        block_n=block_n,
+        path=path,
+        interpret=interpret,
+    )
+
+
+@functools.partial(
+    jax.jit, static_argnames=("k", "block_n", "path", "interpret")
+)
+def adc_topk_pairs(
+    tables: jax.Array,
+    addrs: jax.Array,
+    n_valid: jax.Array,
+    k: int,
+    *,
+    block_n: int = 1024,
+    path: str = "gather",
+    interpret: bool | None = None,
+) -> tuple[jax.Array, jax.Array]:
+    """Per-pair fused scan+top-k: tables (P, A), addrs (P, L, W) int32
+    (already flat/direct addresses), n_valid (P,).  L must be a block_n
+    multiple (the retrieval layout aligns cluster slots)."""
+    if interpret is None:
+        interpret = _interpret_default()
+    tables_p = _pad_table(tables)
+    return _topk.adc_topk_pairs_kernel(
+        tables_p,
+        addrs.astype(jnp.int32),
+        n_valid.astype(jnp.int32),
+        k=k,
+        block_n=block_n,
+        path=path,
+        interpret=interpret,
+    )
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=(
+        "k", "window", "block_n", "path", "add_offsets", "interpret",
+    ),
+)
+def adc_topk_windows(
+    tables: jax.Array,
+    codes: jax.Array,
+    starts: jax.Array,
+    n_valid: jax.Array,
+    k: int,
+    *,
+    window: int,
+    block_n: int = 1024,
+    path: str = "gather",
+    add_offsets: bool = False,
+    interpret: bool | None = None,
+) -> tuple[jax.Array, jax.Array]:
+    """Per-pair window scan over a shared device-resident code array.
+
+    tables (P, A); codes (cap, W) flat addresses (uint8 raw codes when
+    add_offsets -- widened in VMEM, so HBM sees the compact dtype); starts
+    (P,) block_n-aligned row starts; n_valid (P,).  The production path:
+    windows are indexed via scalar prefetch, never materialized.
+    """
+    if interpret is None:
+        interpret = _interpret_default()
+    tables_p = _pad_table(tables)
+    start_blocks = starts.astype(jnp.int32) // block_n
+    return _topk.adc_topk_windows_kernel(
+        tables_p,
+        codes,
+        start_blocks,
+        n_valid.astype(jnp.int32),
+        k=k,
+        window=window,
+        block_n=block_n,
+        path=path,
+        add_offsets=add_offsets,
+        interpret=interpret,
+    )
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def build_luts(
+    codebook: jax.Array, qmc: jax.Array, *, interpret: bool | None = None
+) -> jax.Array:
+    """(M, 256, dsub) x (Q, M, dsub) -> (Q, M, 256)."""
+    if interpret is None:
+        interpret = _interpret_default()
+    return _lut.lut_build_kernel(codebook, qmc, interpret=interpret)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def build_ext_luts(
+    luts: jax.Array,
+    combo_cols: jax.Array,
+    combo_codes: jax.Array,
+    *,
+    interpret: bool | None = None,
+) -> jax.Array:
+    """Fused extended tables: (Q, M, 256) + (m, L) combos -> (Q, A).
+
+    A = M*256 + n_combos + 1 exactly (the sentinel is the last slot); any
+    LANE padding for the scan kernel happens inside adc_*_flat.
+    """
+    if interpret is None:
+        interpret = _interpret_default()
+    q, m, _ = luts.shape
+    n_combos = combo_cols.shape[0]
+    caddr = combo_cols.astype(jnp.int32) * NCODES + combo_codes.astype(
+        jnp.int32
+    )
+    t_pad = m * NCODES + n_combos + 1
+    return _lut.ext_lut_kernel(
+        luts, caddr, t_pad=t_pad, interpret=interpret
+    )

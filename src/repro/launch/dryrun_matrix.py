@@ -1,0 +1,114 @@
+"""Run the full dry-run matrix (every arch x shape x mesh + retrieval cells)
+as parallel subprocesses; each cell writes results/dryrun/<cell>.json.
+
+`python -m repro.launch.dryrun_matrix --out results/dryrun --jobs 6`
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import subprocess
+import sys
+import time
+
+
+def build_worklist(include_multipod: bool = True):
+    # imported lazily so this module never inits jax
+    from repro.configs import ARCH_IDS, SHAPES
+
+    jobs = []
+    meshes = ["pod", "multipod"] if include_multipod else ["pod"]
+    for arch in ARCH_IDS:
+        for shape in SHAPES:
+            for mesh in meshes:
+                jobs.append(["--arch", arch, "--shape", shape, "--mesh", mesh])
+    for ds in ("sift1b", "spacev1b"):
+        for mesh in meshes:
+            jobs.append(["--retrieval", ds, "--mesh", mesh])
+            jobs.append(["--retrieval", ds, "--mesh", mesh, "--cooc"])
+    return jobs
+
+
+def job_name(args: list[str]) -> str:
+    return "_".join(a.lstrip("-") for a in args)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default="results/dryrun")
+    ap.add_argument("--jobs", type=int, default=6)
+    ap.add_argument("--timeout", type=int, default=1800)
+    ap.add_argument("--skip-existing", action="store_true")
+    ap.add_argument("--pod-only", action="store_true")
+    args = ap.parse_args()
+    os.makedirs(args.out, exist_ok=True)
+    os.makedirs(os.path.join(args.out, "logs"), exist_ok=True)
+
+    work = build_worklist(include_multipod=not args.pod_only)
+    if args.skip_existing:
+        def done(j):
+            if "--retrieval" in j:
+                ds = j[j.index("--retrieval") + 1]
+                name = f"memanns-{ds}" + ("-cooc" if "--cooc" in j else "")
+                mesh = "dpu512" if "multipod" in j else "dpu256"
+                f = f"{name}__{mesh}.json"
+            else:
+                arch = j[j.index("--arch") + 1]
+                shape = j[j.index("--shape") + 1]
+                mesh = "pod2x16x16" if "multipod" in j else "pod16x16"
+                f = f"{arch}__{shape}__{mesh}.json".replace("/", "_")
+            return os.path.exists(os.path.join(args.out, f))
+        before = len(work)
+        work = [j for j in work if not done(j)]
+        print(f"skipping {before - len(work)} existing cells")
+
+    running: list[tuple[subprocess.Popen, list[str], float]] = []
+    pending = list(work)
+    results = {"ok": 0, "fail": 0, "skip": 0}
+    t_start = time.time()
+
+    def reap(block=False):
+        nonlocal running
+        keep = []
+        for proc, job, t0 in running:
+            rc = proc.poll()
+            if rc is None and block and len(running) >= args.jobs:
+                rc = proc.wait()
+            if rc is None and time.time() - t0 > args.timeout:
+                proc.kill()
+                rc = -9
+            if rc is None:
+                keep.append((proc, job, t0))
+            else:
+                tag = "ok" if rc == 0 else "fail"
+                results[tag] += 1
+                print(
+                    f"[{time.time()-t_start:7.1f}s] {tag:4s} "
+                    f"({time.time()-t0:6.1f}s) {job_name(job)}",
+                    flush=True,
+                )
+        running = keep
+
+    env = dict(os.environ)
+    env["PYTHONPATH"] = env.get("PYTHONPATH", "src") or "src"
+    while pending or running:
+        while pending and len(running) < args.jobs:
+            job = pending.pop(0)
+            log = open(
+                os.path.join(args.out, "logs", job_name(job) + ".log"), "w"
+            )
+            proc = subprocess.Popen(
+                [sys.executable, "-m", "repro.launch.dryrun", *job,
+                 "--out", args.out],
+                stdout=log, stderr=subprocess.STDOUT, env=env,
+            )
+            running.append((proc, job, time.time()))
+        reap()
+        time.sleep(2)
+    print(json.dumps(results))
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,45 @@
+"""Production meshes.
+
+Defined as FUNCTIONS so importing this module never touches jax device
+state; the dry-run sets XLA_FLAGS *before* any jax import to fake 512 host
+devices (see dryrun.py lines 1-2).
+"""
+
+from __future__ import annotations
+
+import math
+
+import numpy as np
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    """Single pod: (data=16, model=16) = 256 chips.
+    Multi-pod: (pod=2, data=16, model=16) = 512 chips."""
+    import jax
+
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_retrieval_mesh(n_devices: int | None = None):
+    """Flat 1-D 'dpu' mesh for the MemANNS index (device == DPU)."""
+    import jax
+    from repro.retrieval.search import DPU_AXIS
+
+    devs = jax.devices()
+    if n_devices is not None:
+        devs = devs[:n_devices]
+    return jax.sharding.Mesh(np.asarray(devs), (DPU_AXIS,))
+
+
+def make_local_mesh(data: int | None = None, model: int = 1):
+    """Development mesh over however many local devices exist."""
+    import jax
+
+    n = len(jax.devices())
+    if data is None:
+        data = n // model
+    assert data * model <= n
+    devs = np.asarray(jax.devices()[: data * model]).reshape(data, model)
+    return jax.sharding.Mesh(devs, ("data", "model"))

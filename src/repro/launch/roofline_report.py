@@ -1,0 +1,146 @@
+"""Aggregate results/dryrun/*.json into the EXPERIMENTS.md roofline tables.
+
+`PYTHONPATH=src python -m repro.launch.roofline_report --in results/dryrun`
+
+Roofline-fraction definition (the §Perf score):
+  LM cells      : (MODEL_FLOPS_per_chip / peak) / bound_s   -- an MFU bound
+  retrieval     : (ideal uint8 probed-code bytes / HBM bw) / bound_s
+The "what moves it" column is derived from which term dominates and the
+cell's useful-work ratio.
+"""
+
+from __future__ import annotations
+
+import argparse
+import glob
+import json
+import os
+
+PEAK_FLOPS = 197e12
+HBM_BW = 819e9
+
+
+def advice(cell: dict) -> str:
+    dom = cell.get("dominant", "?")
+    ur = cell.get("useful_ratio", 0)
+    if str(cell.get("status", "")).startswith("skip"):
+        return ""
+    if dom == "collective_s":
+        return "overlap/shrink collectives: bf16 comms, sequence-parallel norms, fewer reshards"
+    if dom == "memory_s":
+        if ur and ur < 0.2:
+            return "HLO bytes >> useful: fuse elementwise chains, drop remat re-reads, narrower dtypes"
+        return "stream larger fused blocks; bf16 activations end-to-end"
+    return "MXU-align tile shapes; raise arithmetic intensity per HBM byte"
+
+
+def fraction(cell: dict) -> float | None:
+    b = cell.get("bound_s")
+    if not b:
+        return None
+    if "model_flops_per_chip" in cell:
+        ideal = cell["model_flops_per_chip"] / PEAK_FLOPS
+        return ideal / b
+    if "useful_code_bytes_per_chip" in cell:
+        ideal = cell["useful_code_bytes_per_chip"] / HBM_BW
+        return ideal / b
+    return None
+
+
+def load(dirname: str) -> list[dict]:
+    cells = []
+    for f in sorted(glob.glob(os.path.join(dirname, "*.json"))):
+        with open(f) as fh:
+            cells.append(json.load(fh))
+    return cells
+
+
+def fmt(x, nd=3):
+    if x is None:
+        return "-"
+    if isinstance(x, float):
+        if x == 0:
+            return "0"
+        if abs(x) < 1e-3 or abs(x) >= 1e5:
+            return f"{x:.2e}"
+        return f"{x:.{nd}f}"
+    return str(x)
+
+
+def markdown_table(cells: list[dict]) -> str:
+    hdr = (
+        "| arch | shape | mesh | compute_s | memory_s | collective_s | "
+        "dominant | model GF/chip | useful ratio | roofline frac | next move |\n"
+        "|---|---|---|---|---|---|---|---|---|---|---|\n"
+    )
+    rows = []
+    for c in cells:
+        status = str(c.get("status", ""))
+        if status.startswith("skip"):
+            rows.append(
+                f"| {c['arch']} | {c['shape']} | {c['mesh']} | "
+                + " - | " * 7 + f"{status} |"
+            )
+            continue
+        if status != "ok":
+            rows.append(
+                f"| {c['arch']} | {c['shape']} | {c['mesh']} | "
+                + " - | " * 7 + f"{status[:60]} |"
+            )
+            continue
+        fr = fraction(c)
+        mf = c.get("model_flops_per_chip")
+        rows.append(
+            "| "
+            + " | ".join([
+                c["arch"], c["shape"], c["mesh"],
+                fmt(c.get("compute_s")), fmt(c.get("memory_s")),
+                fmt(c.get("collective_s")),
+                str(c.get("dominant", "-")).replace("_s", ""),
+                fmt(mf / 1e9 if mf else None, 1),
+                fmt(c.get("useful_ratio"), 3),
+                fmt(fr, 4),
+                advice(c),
+            ])
+            + " |"
+        )
+    return hdr + "\n".join(rows) + "\n"
+
+
+def pick_hillclimb(cells: list[dict]) -> dict:
+    ok = [c for c in cells if c.get("status") == "ok" and c["mesh"].startswith("pod")]
+    with_fr = [(fraction(c), c) for c in ok]
+    with_fr = [(f, c) for f, c in with_fr if f]
+    worst = min(with_fr, key=lambda t: t[0], default=(None, None))[1]
+    coll = max(
+        (c for c in ok if c.get("bound_s")),
+        key=lambda c: c.get("collective_s", 0) / c["bound_s"],
+        default=None,
+    )
+    paper = next(
+        (c for c in cells if c["arch"].startswith("memanns-sift1b") and c["mesh"] == "dpu256"),
+        None,
+    )
+    return {
+        "worst_fraction": worst and (worst["arch"], worst["shape"], worst["mesh"]),
+        "most_collective_bound": coll and (coll["arch"], coll["shape"], coll["mesh"]),
+        "paper_representative": paper and (paper["arch"], paper["shape"], paper["mesh"]),
+    }
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--in", dest="dirname", default="results/dryrun")
+    ap.add_argument("--out", default=None)
+    args = ap.parse_args()
+    cells = load(args.dirname)
+    md = markdown_table(cells)
+    print(md)
+    print("\nhillclimb candidates:", json.dumps(pick_hillclimb(cells), indent=1))
+    if args.out:
+        with open(args.out, "w") as f:
+            f.write(md)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,21 @@
+"""Decoder-LM model zoo covering the 10 assigned architectures.
+
+  config.py   -- ModelConfig: one dataclass, every family (dense/GQA, MLA,
+                 MoE, SSM/Mamba2, hybrid, VLM-stub, audio-stub)
+  layers.py   -- RMSNorm, RoPE, SwiGLU, chunked-flash GQA attention, KV cache
+  mla.py      -- DeepSeek-V2 Multi-head Latent Attention (+ absorbed decode)
+  moe.py      -- top-k router, sort-based capacity dispatch, shared experts
+  ssm.py      -- Mamba2 SSD (chunked state-space duality) + one-step decode
+  model.py    -- layer-scanned decoder stack: init / train forward / prefill
+                 / decode for all families
+  sharding.py -- parameter + activation PartitionSpec rules (FSDP x TP x DP)
+"""
+
+from repro.models.config import ModelConfig
+from repro.models.model import (
+    decode_step,
+    forward_train,
+    init_params,
+    init_decode_cache,
+    prefill,
+)

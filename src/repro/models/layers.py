@@ -1,0 +1,240 @@
+"""Common decoder layers: RMSNorm, RoPE, SwiGLU, chunked-flash GQA attention.
+
+Attention is implemented as an online-softmax scan over KV chunks (flash
+style) so prefill at 32k never materializes an (S, S) score matrix; XLA
+differentiates through the scan for training.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def rms_norm(x: jax.Array, scale: jax.Array, eps: float = 1e-6) -> jax.Array:
+    var = jnp.mean(jnp.square(x.astype(jnp.float32)), axis=-1, keepdims=True)
+    out = x.astype(jnp.float32) * jax.lax.rsqrt(var + eps)
+    return (out * scale.astype(jnp.float32)).astype(x.dtype)
+
+
+def rope_freqs(hd: int, theta: float) -> jax.Array:
+    return 1.0 / (theta ** (jnp.arange(0, hd, 2, dtype=jnp.float32) / hd))
+
+
+def apply_rope(x: jax.Array, positions: jax.Array, theta: float) -> jax.Array:
+    """x: (..., S, H, hd); positions: (..., S)."""
+    hd = x.shape[-1]
+    freqs = rope_freqs(hd, theta)                       # (hd/2,)
+    angles = positions[..., None].astype(jnp.float32) * freqs  # (..., S, hd/2)
+    cos = jnp.cos(angles)[..., None, :]                 # (..., S, 1, hd/2)
+    sin = jnp.sin(angles)[..., None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+def swiglu(x: jax.Array, w_gate: jax.Array, w_up: jax.Array, w_down: jax.Array) -> jax.Array:
+    g = jnp.einsum("...d,df->...f", x, w_gate)
+    u = jnp.einsum("...d,df->...f", x, w_up)
+    return jnp.einsum("...f,fd->...d", jax.nn.silu(g) * u, w_down)
+
+
+def _flash_chunk_scan(
+    q: jax.Array,           # (B, Sq, H, hd) f32
+    k: jax.Array,           # (B, Sk, KV, hd)
+    v: jax.Array,           # (B, Sk, KV, hd)
+    q_pos: jax.Array,       # (B, Sq) absolute positions of queries
+    kv_valid_len: jax.Array | None,  # (B,) or None: causal vs cache length
+    chunk: int,
+    scale: float,
+    unroll: bool = False,
+) -> jax.Array:
+    """Online-softmax attention over KV chunks; causal by absolute position.
+
+    v may have a different head dim than q/k (used by MLA's latent values).
+    """
+    b, sq, h, hd = q.shape
+    sk, kvh = k.shape[1], k.shape[2]
+    vd = v.shape[-1]
+    groups = h // kvh
+    chunk = min(chunk, sk)
+    n_chunks = (sk + chunk - 1) // chunk
+    pad = n_chunks * chunk - sk
+    if pad:
+        k = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    kc = k.reshape(b, n_chunks, chunk, kvh, hd).transpose(1, 0, 2, 3, 4)
+    vc = v.reshape(b, n_chunks, chunk, kvh, vd).transpose(1, 0, 2, 3, 4)
+
+    qf = q.astype(jnp.float32) * scale
+    # group query heads over kv heads: (B, Sq, KV, G, hd)
+    qg = qf.reshape(b, sq, kvh, groups, hd)
+
+    def body(carry, inp):
+        m, l, acc = carry          # (B,Sq,KV,G), (B,Sq,KV,G), (B,Sq,KV,G,hd)
+        ci, kci, vci = inp         # chunk idx, (B,chunk,KV,hd) x2
+        kpos = ci * chunk + jnp.arange(chunk)                # (chunk,)
+        s = jnp.einsum("bqkgd,bckd->bqkgc", qg, kci.astype(jnp.float32))
+        mask = kpos[None, None, :] <= q_pos[:, :, None]      # (B,Sq,chunk) causal
+        if kv_valid_len is not None:
+            mask = mask & (kpos[None, None, :] < kv_valid_len[:, None, None])
+        s = jnp.where(mask[:, :, None, None, :], s, -jnp.inf)
+        m_new = jnp.maximum(m, jnp.max(s, axis=-1))
+        # guard fully-masked rows
+        m_safe = jnp.where(jnp.isfinite(m_new), m_new, 0.0)
+        p = jnp.exp(s - m_safe[..., None])
+        p = jnp.where(mask[:, :, None, None, :], p, 0.0)
+        corr = jnp.where(jnp.isfinite(m), jnp.exp(m - m_safe), 0.0)
+        l_new = l * corr + jnp.sum(p, axis=-1)
+        acc_new = acc * corr[..., None] + jnp.einsum(
+            "bqkgc,bckd->bqkgd", p, vci.astype(jnp.float32)
+        )
+        return (m_new, l_new, acc_new), None
+
+    m0 = jnp.full((b, sq, kvh, groups), -jnp.inf, jnp.float32)
+    l0 = jnp.zeros((b, sq, kvh, groups), jnp.float32)
+    a0 = jnp.zeros((b, sq, kvh, groups, vd), jnp.float32)
+    if unroll:
+        # exact-cost mode (dry-run): XLA counts scan bodies once, so the
+        # chunk loop is unrolled when the layer stack is unrolled too
+        carry = (m0, l0, a0)
+        for ci in range(n_chunks):
+            carry, _ = body(carry, (jnp.asarray(ci), kc[ci], vc[ci]))
+        m, l, acc = carry
+    else:
+        (m, l, acc), _ = jax.lax.scan(
+            body, (m0, l0, a0), (jnp.arange(n_chunks), kc, vc)
+        )
+    out = acc / jnp.maximum(l[..., None], 1e-30)
+    return out.reshape(b, sq, h, vd)
+
+
+def _flash_decode(
+    q: jax.Array,            # (B, 1, H, hd)
+    ck: jax.Array,           # (B, S_max, KV, hd) -- the cache, read in place
+    cv: jax.Array,           # (B, S_max, KV, vd)
+    valid_len: jax.Array,    # (B,)
+    chunk: int,
+    scale: float,
+    unroll: bool = False,
+) -> jax.Array:
+    """Single-token decode attention that reads the cache EXACTLY once.
+
+    §Perf optimization: the generic chunk scan pads + reshapes + transposes
+    the cache into (nc, B, chunk, KV, hd) -- three full-cache HBM copies per
+    layer per step (measured 0.72 s/step memory term on deepseek-v2
+    decode_32k).  Here chunks are dynamic slices of the original layout and
+    the only large traffic is one cache read."""
+    b, _, h, hd = q.shape
+    s_max, kvh = ck.shape[1], ck.shape[2]
+    vd = cv.shape[-1]
+    groups = h // kvh
+    chunk = min(chunk, s_max)
+    n_chunks = (s_max + chunk - 1) // chunk
+    qg = q.astype(jnp.float32).reshape(b, kvh, groups, hd) * scale
+
+    def body(carry, ci):
+        m, l, acc = carry            # (B,KV,G), (B,KV,G), (B,KV,G,vd)
+        start = ci * chunk
+        kci = jax.lax.dynamic_slice_in_dim(ck, start, chunk, 1)
+        vci = jax.lax.dynamic_slice_in_dim(cv, start, chunk, 1)
+        s = jnp.einsum("bkgd,bckd->bkgc", qg, kci.astype(jnp.float32))
+        kpos = start + jnp.arange(chunk)
+        mask = kpos[None, :] < valid_len[:, None]          # (B, chunk)
+        s = jnp.where(mask[:, None, None, :], s, -jnp.inf)
+        m_new = jnp.maximum(m, jnp.max(s, axis=-1))
+        m_safe = jnp.where(jnp.isfinite(m_new), m_new, 0.0)
+        p = jnp.where(
+            mask[:, None, None, :], jnp.exp(s - m_safe[..., None]), 0.0
+        )
+        corr = jnp.where(jnp.isfinite(m), jnp.exp(m - m_safe), 0.0)
+        l_new = l * corr + jnp.sum(p, axis=-1)
+        acc_new = acc * corr[..., None] + jnp.einsum(
+            "bkgc,bckd->bkgd", p, vci.astype(jnp.float32)
+        )
+        return (m_new, l_new, acc_new), None
+
+    m0 = jnp.full((b, kvh, groups), -jnp.inf, jnp.float32)
+    l0 = jnp.zeros((b, kvh, groups), jnp.float32)
+    a0 = jnp.zeros((b, kvh, groups, vd), jnp.float32)
+    if unroll:
+        carry = (m0, l0, a0)
+        for ci in range(n_chunks):
+            carry, _ = body(carry, jnp.asarray(ci))
+        m, l, acc = carry
+    else:
+        (m, l, acc), _ = jax.lax.scan(
+            body, (m0, l0, a0), jnp.arange(n_chunks)
+        )
+    out = acc / jnp.maximum(l[..., None], 1e-30)
+    return out.reshape(b, 1, h, vd)
+
+
+def gqa_attention(
+    x: jax.Array,                   # (B, S, D)
+    params: dict,
+    positions: jax.Array,           # (B, S)
+    cfg,
+    kv_cache: tuple[jax.Array, jax.Array] | None = None,
+    cache_len: jax.Array | None = None,
+) -> tuple[jax.Array, tuple[jax.Array, jax.Array] | None]:
+    """GQA attention with RoPE, optional qk-norm, optional KV cache.
+
+    Training/prefill: kv_cache None -> self-attention over x (returns this
+    block's (k, v) so prefill can seed a cache).  Decode: kv_cache is a pair
+    of (B, S_max, KV, hd) buffers holding `cache_len` valid past positions;
+    this step's k/v are written at [cache_len, cache_len + S) and attention
+    runs over the whole valid prefix (positions enforce causality).
+    """
+    b, s, d = x.shape
+    h, kvh, hd = cfg.n_heads, cfg.n_kv_heads, cfg.hd
+    q = jnp.einsum("bsd,dhe->bshe", x, params["wq"].reshape(d, h, hd))
+    k = jnp.einsum("bsd,dhe->bshe", x, params["wk"].reshape(d, kvh, hd))
+    v = jnp.einsum("bsd,dhe->bshe", x, params["wv"].reshape(d, kvh, hd))
+    if cfg.qk_norm:
+        q = rms_norm(q, params["q_norm"])
+        k = rms_norm(k, params["k_norm"])
+    q = apply_rope(q, positions, cfg.rope_theta)
+    k = apply_rope(k, positions, cfg.rope_theta)
+
+    unroll = not cfg.scan_layers
+    if kv_cache is None:
+        out = _flash_chunk_scan(
+            q, k, v, positions, None, cfg.attn_chunk, 1.0 / hd**0.5,
+            unroll=unroll,
+        )
+        new_cache = (k, v)
+    else:
+        ck, cv = kv_cache
+        ck = jax.lax.dynamic_update_slice(ck, k.astype(ck.dtype), (0, cache_len, 0, 0))
+        cv = jax.lax.dynamic_update_slice(cv, v.astype(cv.dtype), (0, cache_len, 0, 0))
+        valid = jnp.full((b,), cache_len + s, jnp.int32)
+        if s == 1 and cfg.opt_decode:
+            out = _flash_decode(
+                q, ck, cv, valid, cfg.attn_chunk, 1.0 / hd**0.5,
+                unroll=unroll,
+            )
+        elif (
+            cfg.use_flash_kernel
+            and s > 1
+            and isinstance(cache_len, int)
+            and s % min(512, s) == 0
+            and ck.shape[1] % min(512, ck.shape[1]) == 0
+        ):
+            # Pallas flash forward: scores never touch HBM (prefill path)
+            from repro.kernels.flash_attn import flash_attention_fwd
+
+            out = flash_attention_fwd(
+                q, ck, cv, scale=1.0 / hd**0.5, q_offset=cache_len,
+                kv_valid=cache_len + s,
+                bq=min(512, s), bk=min(512, ck.shape[1]),
+                interpret=jax.default_backend() != "tpu",
+            )
+        else:
+            out = _flash_chunk_scan(
+                q, ck, cv, positions, valid, cfg.attn_chunk, 1.0 / hd**0.5,
+                unroll=unroll,
+            )
+        new_cache = (ck, cv)
+    o = jnp.einsum("bshe,hed->bsd", out, params["wo"].reshape(h, hd, d))
+    return o.astype(x.dtype), new_cache

@@ -1,0 +1,151 @@
+"""Multi-head Latent Attention (DeepSeek-V2, arXiv:2405.04434).
+
+K/V are generated from a shared low-rank latent c_kv (kv_lora_rank dims) plus
+a decoupled RoPE key shared across heads; queries come from their own
+low-rank latent.  The decode path caches only (c_kv, k_rope) -- the paper's
+93 % KV-cache reduction -- and uses the absorbed-matmul formulation so K/V
+are never re-materialized per step.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import _flash_chunk_scan, apply_rope, rms_norm
+
+
+def _project_q(x, params, cfg):
+    """x (B,S,D) -> q_nope (B,S,H,dn), q_rope (B,S,H,dr)."""
+    b, s, _ = x.shape
+    h, dn, dr = cfg.n_heads, cfg.qk_nope_dim, cfg.qk_rope_dim
+    cq = jnp.einsum("bsd,dr->bsr", x, params["w_dq"])          # (B,S,q_lora)
+    cq = rms_norm(cq, params["q_norm"])
+    q = jnp.einsum("bsr,rhe->bshe", cq, params["w_uq"].reshape(cfg.q_lora_rank, h, dn + dr))
+    return q[..., :dn], q[..., dn:]
+
+
+def _project_kv_latent(x, params, cfg, positions):
+    """x -> (c_kv (B,S,R), k_rope (B,S,1,dr) roped)."""
+    ckv_kr = jnp.einsum("bsd,dr->bsr", x, params["w_dkv"])     # (B,S,R+dr)
+    c_kv = rms_norm(ckv_kr[..., : cfg.kv_lora_rank], params["kv_norm"])
+    k_rope = ckv_kr[..., cfg.kv_lora_rank :][:, :, None, :]    # (B,S,1,dr)
+    k_rope = apply_rope(k_rope, positions, cfg.rope_theta)
+    return c_kv, k_rope
+
+
+def _mla_flash_decode(
+    q_lat: jax.Array,   # (B, H, R)  absorbed no-pe queries
+    q_rope: jax.Array,  # (B, H, dr)
+    cc: jax.Array,      # (B, S_max, R)   latent cache, read in place
+    ck: jax.Array,      # (B, S_max, dr)  rope-key cache
+    valid_len: jax.Array,
+    chunk: int,
+    scale: float,
+    unroll: bool = False,
+) -> jax.Array:
+    """§Perf optimization: decode without concatenating (c_kv | k_rope) --
+    the concat copies the whole latent cache every step.  Scores are the sum
+    of two chunked contractions and the value IS the latent chunk."""
+    b, h, r = q_lat.shape
+    s_max = cc.shape[1]
+    chunk = min(chunk, s_max)
+    n_chunks = (s_max + chunk - 1) // chunk
+    ql = q_lat.astype(jnp.float32) * scale
+    qr = q_rope.astype(jnp.float32) * scale
+
+    def body(carry, ci):
+        m, l, acc = carry                    # (B,H), (B,H), (B,H,R)
+        start = ci * chunk
+        cci = jax.lax.dynamic_slice_in_dim(cc, start, chunk, 1)
+        cki = jax.lax.dynamic_slice_in_dim(ck, start, chunk, 1)
+        s = jnp.einsum("bhr,bcr->bhc", ql, cci.astype(jnp.float32))
+        s = s + jnp.einsum("bhe,bce->bhc", qr, cki.astype(jnp.float32))
+        kpos = start + jnp.arange(chunk)
+        mask = kpos[None, :] < valid_len[:, None]
+        s = jnp.where(mask[:, None, :], s, -jnp.inf)
+        m_new = jnp.maximum(m, jnp.max(s, axis=-1))
+        m_safe = jnp.where(jnp.isfinite(m_new), m_new, 0.0)
+        p = jnp.where(mask[:, None, :], jnp.exp(s - m_safe[..., None]), 0.0)
+        corr = jnp.where(jnp.isfinite(m), jnp.exp(m - m_safe), 0.0)
+        l_new = l * corr + jnp.sum(p, axis=-1)
+        acc_new = acc * corr[..., None] + jnp.einsum(
+            "bhc,bcr->bhr", p, cci.astype(jnp.float32)
+        )
+        return (m_new, l_new, acc_new), None
+
+    m0 = jnp.full((b, h), -jnp.inf, jnp.float32)
+    l0 = jnp.zeros((b, h), jnp.float32)
+    a0 = jnp.zeros((b, h, r), jnp.float32)
+    if unroll:
+        carry = (m0, l0, a0)
+        for ci in range(n_chunks):
+            carry, _ = body(carry, jnp.asarray(ci))
+        m, l, acc = carry
+    else:
+        (m, l, acc), _ = jax.lax.scan(body, (m0, l0, a0), jnp.arange(n_chunks))
+    out = acc / jnp.maximum(l[..., None], 1e-30)
+    return out[:, None]  # (B, 1, H, R)
+
+
+def mla_attention(
+    x: jax.Array,
+    params: dict,
+    positions: jax.Array,
+    cfg,
+    cache: tuple[jax.Array, jax.Array] | None = None,
+    cache_len: jax.Array | None = None,
+) -> tuple[jax.Array, tuple[jax.Array, jax.Array]]:
+    """MLA forward.  cache = (c_kv (B,Smax,R), k_rope (B,Smax,dr))."""
+    b, s, d = x.shape
+    h = cfg.n_heads
+    dn, dr, dv, r = cfg.qk_nope_dim, cfg.qk_rope_dim, cfg.v_head_dim, cfg.kv_lora_rank
+
+    q_nope, q_rope = _project_q(x, params, cfg)
+    q_rope = apply_rope(q_rope, positions, cfg.rope_theta)
+    c_kv, k_rope = _project_kv_latent(x, params, cfg, positions)
+
+    w_ukv = params["w_ukv"].reshape(r, h, dn + dv)
+    w_uk = w_ukv[..., :dn]                                      # (R,H,dn)
+    w_uv = w_ukv[..., dn:]                                      # (R,H,dv)
+
+    # absorbed query: q' = q_nope @ W_uk^T  -> latent space
+    q_lat = jnp.einsum("bshe,rhe->bshr", q_nope, w_uk)          # (B,S,H,R)
+    # score(q, t) = q_lat . c_kv[t] + q_rope . k_rope[t]
+    q_cat = jnp.concatenate([q_lat, q_rope], axis=-1)           # (B,S,H,R+dr)
+
+    scale = 1.0 / (dn + dr) ** 0.5
+    if cache is None:
+        k_cat = jnp.concatenate(
+            [c_kv[:, :, None, :], k_rope], axis=-1
+        )                                                        # (B,S,1,R+dr)
+        o_lat = _flash_chunk_scan(
+            q_cat, k_cat, k_cat[..., :r], positions, None,
+            cfg.attn_chunk, scale, unroll=not cfg.scan_layers,
+        )                                                        # (B,S,H,R)
+    else:
+        cc, ck = cache
+        cc = jax.lax.dynamic_update_slice(cc, c_kv.astype(cc.dtype), (0, cache_len, 0))
+        ck = jax.lax.dynamic_update_slice(
+            ck, k_rope[:, :, 0, :].astype(ck.dtype), (0, cache_len, 0)
+        )
+        cache = (cc, ck)
+        kv_len = jnp.full((b,), cache_len + s, jnp.int32)
+        if s == 1 and cfg.opt_decode:
+            o_lat = _mla_flash_decode(
+                q_lat[:, 0], q_rope[:, 0], cc, ck, kv_len,
+                cfg.attn_chunk, scale, unroll=not cfg.scan_layers,
+            )
+        else:
+            k_cat = jnp.concatenate(
+                [cc[:, :, None, :], ck[:, :, None, :]], axis=-1
+            )
+            o_lat = _flash_chunk_scan(
+                q_cat, k_cat, k_cat[..., :r], positions, kv_len,
+                cfg.attn_chunk, scale, unroll=not cfg.scan_layers,
+            )
+    o = jnp.einsum("bshr,rhe->bshe", o_lat, w_uv)                # (B,S,H,dv)
+    out = jnp.einsum("bshe,hed->bsd", o, params["w_o"].reshape(h, dv, d))
+    if cache is None:
+        cache = (c_kv, k_rope[:, :, 0, :])
+    return out.astype(x.dtype), cache

@@ -1,0 +1,528 @@
+"""Layer-scanned decoder stack: init / train-forward / prefill / decode for
+every assigned family (dense GQA, MLA, MoE, Mamba2 SSD, Zamba2-style hybrid,
+VLM / audio backbones with stub frontends).
+
+Layer parameters are stacked along a leading L dimension and iterated with
+jax.lax.scan (keeps HLO size flat for 32-88 layer configs); the layer body is
+rematerialized when cfg.remat.  Hybrid models scan Mamba2 groups and apply a
+single *shared* attention+MLP block between groups (Zamba2's weight-sharing
+trick).
+"""
+
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.config import ModelConfig
+from repro.models.layers import gqa_attention, rms_norm, swiglu
+from repro.models.mla import mla_attention
+from repro.models.moe import moe_block
+from repro.models.ssm import mamba2_block
+
+# --------------------------------------------------------------------------- #
+# init
+# --------------------------------------------------------------------------- #
+
+
+def _dense_attn_params(key, cfg: ModelConfig, dtype):
+    d, h, kvh, hd = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.hd
+    ks = jax.random.split(key, 4)
+    std = 1.0 / math.sqrt(d)
+    p = {
+        "wq": jax.random.normal(ks[0], (d, h * hd), dtype) * std,
+        "wk": jax.random.normal(ks[1], (d, kvh * hd), dtype) * std,
+        "wv": jax.random.normal(ks[2], (d, kvh * hd), dtype) * std,
+        "wo": jax.random.normal(ks[3], (h * hd, d), dtype) * std,
+    }
+    if cfg.qk_norm:
+        p["q_norm"] = jnp.ones((hd,), dtype)
+        p["k_norm"] = jnp.ones((hd,), dtype)
+    return p
+
+
+def _mla_params(key, cfg: ModelConfig, dtype):
+    d, h = cfg.d_model, cfg.n_heads
+    r, qr = cfg.kv_lora_rank, cfg.q_lora_rank
+    dn, dr, dv = cfg.qk_nope_dim, cfg.qk_rope_dim, cfg.v_head_dim
+    ks = jax.random.split(key, 5)
+    std = 1.0 / math.sqrt(d)
+    return {
+        "w_dq": jax.random.normal(ks[0], (d, qr), dtype) * std,
+        "w_uq": jax.random.normal(ks[1], (qr, h * (dn + dr)), dtype) / math.sqrt(qr),
+        "w_dkv": jax.random.normal(ks[2], (d, r + dr), dtype) * std,
+        "w_ukv": jax.random.normal(ks[3], (r, h * (dn + dv)), dtype) / math.sqrt(r),
+        "w_o": jax.random.normal(ks[4], (h * dv, d), dtype) / math.sqrt(h * dv),
+        "q_norm": jnp.ones((qr,), dtype),
+        "kv_norm": jnp.ones((r,), dtype),
+    }
+
+
+def _mlp_params(key, cfg: ModelConfig, dtype, d_ff=None):
+    d = cfg.d_model
+    f = d_ff or cfg.d_ff
+    ks = jax.random.split(key, 3)
+    return {
+        "w_gate": jax.random.normal(ks[0], (d, f), dtype) / math.sqrt(d),
+        "w_up": jax.random.normal(ks[1], (d, f), dtype) / math.sqrt(d),
+        "w_down": jax.random.normal(ks[2], (f, d), dtype) / math.sqrt(f),
+    }
+
+
+def _moe_params(key, cfg: ModelConfig, dtype):
+    d, e, f = cfg.d_model, cfg.n_experts, cfg.moe_d_ff
+    ks = jax.random.split(key, 7)
+    p = {
+        "router": jax.random.normal(ks[0], (d, e), jnp.float32) / math.sqrt(d),
+        "w_gate": jax.random.normal(ks[1], (e, d, f), dtype) / math.sqrt(d),
+        "w_up": jax.random.normal(ks[2], (e, d, f), dtype) / math.sqrt(d),
+        "w_down": jax.random.normal(ks[3], (e, f, d), dtype) / math.sqrt(f),
+    }
+    if cfg.n_shared_experts:
+        fs = f * cfg.n_shared_experts
+        p["shared_gate"] = jax.random.normal(ks[4], (d, fs), dtype) / math.sqrt(d)
+        p["shared_up"] = jax.random.normal(ks[5], (d, fs), dtype) / math.sqrt(d)
+        p["shared_down"] = jax.random.normal(ks[6], (fs, d), dtype) / math.sqrt(fs)
+    return p
+
+
+def _mamba_params(key, cfg: ModelConfig, dtype):
+    d = cfg.d_model
+    di, h, n, k = cfg.d_inner, cfg.ssm_heads, cfg.ssm_state, cfg.ssm_conv
+    conv_dim = di + 2 * h * n
+    proj_out = 2 * di + 2 * h * n + h  # z | x | B | C | dt
+    ks = jax.random.split(key, 3)
+    return {
+        "in_proj": jax.random.normal(ks[0], (d, proj_out), dtype) / math.sqrt(d),
+        "conv_w": jax.random.normal(ks[1], (k, conv_dim), dtype) / math.sqrt(k),
+        "dt_bias": jnp.zeros((h,), jnp.float32),
+        "a_log": jnp.zeros((h,), jnp.float32),
+        "out_norm": jnp.ones((di,), dtype),
+        "out_proj": jax.random.normal(ks[2], (di, d), dtype) / math.sqrt(di),
+    }
+
+
+def _attn_mlp_block_params(key, cfg: ModelConfig, dtype):
+    k1, k2 = jax.random.split(key)
+    return {
+        "attn": _mla_params(k1, cfg, dtype) if cfg.use_mla
+        else _dense_attn_params(k1, cfg, dtype),
+        "mlp": _mlp_params(k2, cfg, dtype),
+        "ln1": jnp.ones((cfg.d_model,), dtype),
+        "ln2": jnp.ones((cfg.d_model,), dtype),
+    }
+
+
+def _layer_params(key, cfg: ModelConfig, dtype, moe_layer: bool):
+    k1, k2 = jax.random.split(key)
+    p = {
+        "attn": _mla_params(k1, cfg, dtype) if cfg.use_mla
+        else _dense_attn_params(k1, cfg, dtype),
+        "ln1": jnp.ones((cfg.d_model,), dtype),
+        "ln2": jnp.ones((cfg.d_model,), dtype),
+    }
+    if moe_layer:
+        p["moe"] = _moe_params(k2, cfg, dtype)
+    else:
+        p["mlp"] = _mlp_params(k2, cfg, dtype)
+    return p
+
+
+def init_params(key: jax.Array, cfg: ModelConfig) -> dict:
+    dtype = jnp.dtype(cfg.dtype)
+    keys = jax.random.split(key, 8)
+    d, v = cfg.d_model, cfg.vocab_size
+    params: dict = {
+        "embed": jax.random.normal(keys[0], (v, d), dtype) * 0.02,
+        "final_norm": jnp.ones((d,), dtype),
+        "lm_head": jax.random.normal(keys[1], (d, v), dtype) / math.sqrt(d),
+    }
+
+    if cfg.family == "ssm":
+        lkeys = jax.random.split(keys[2], cfg.n_layers)
+        params["layers"] = jax.vmap(
+            lambda k: {
+                "ssm": _mamba_params(k, cfg, dtype),
+                "ln1": jnp.ones((d,), dtype),
+            }
+        )(lkeys)
+        return params
+
+    if cfg.family == "hybrid":
+        lkeys = jax.random.split(keys[2], cfg.n_layers)
+        params["layers"] = jax.vmap(
+            lambda k: {
+                "ssm": _mamba_params(k, cfg, dtype),
+                "ln1": jnp.ones((d,), dtype),
+            }
+        )(lkeys)
+        params["shared_attn"] = _attn_mlp_block_params(keys[3], cfg, dtype)
+        return params
+
+    n_dense = cfg.first_k_dense if cfg.n_experts else 0
+    n_scanned = cfg.n_layers - n_dense
+    if n_dense:
+        dkeys = jax.random.split(keys[4], max(n_dense, 1))
+        params["dense_layers"] = jax.vmap(
+            lambda k: _layer_params(k, cfg, dtype, moe_layer=False)
+        )(dkeys[:n_dense])
+    if n_scanned:
+        lkeys = jax.random.split(keys[2], n_scanned)
+        params["layers"] = jax.vmap(
+            lambda k: _layer_params(k, cfg, dtype, moe_layer=bool(cfg.n_experts))
+        )(lkeys)
+    return params
+
+
+# --------------------------------------------------------------------------- #
+# layer iteration
+# --------------------------------------------------------------------------- #
+
+
+def _scan_layers(fn, x, xs, use_scan: bool):
+    """lax.scan or an unrolled Python loop (identical semantics).
+
+    The unrolled form exists because XLA's cost analysis counts a while-loop
+    body ONCE regardless of trip count; the dry-run lowers small unrolled
+    variants to extrapolate exact per-layer costs (launch/dryrun.py)."""
+    if use_scan:
+        return jax.lax.scan(fn, x, xs)
+    n = jax.tree.leaves(xs)[0].shape[0]
+    ys = []
+    for i in range(n):
+        x, y = fn(x, jax.tree.map(lambda t: t[i], xs))
+        ys.append(y)
+    if not ys or all(y is None for y in ys):
+        return x, None
+    return x, jax.tree.map(lambda *t: jnp.stack(t), *ys)
+
+
+# --------------------------------------------------------------------------- #
+# layer bodies
+# --------------------------------------------------------------------------- #
+
+
+def _attn_mlp_layer(x, layer, positions, cfg, cache=None, cache_len=None,
+                    use_moe=False):
+    h = rms_norm(x, layer["ln1"])
+    if cfg.use_mla:
+        a, new_cache = mla_attention(h, layer["attn"], positions, cfg, cache, cache_len)
+    else:
+        a, new_cache = gqa_attention(h, layer["attn"], positions, cfg, cache, cache_len)
+    x = x + a
+    h = rms_norm(x, layer["ln2"])
+    if use_moe:
+        m, aux = moe_block(
+            h, layer["moe"], cfg.n_experts, cfg.moe_top_k,
+            cfg.capacity_factor, cfg.n_shared_experts,
+        )
+    else:
+        m = swiglu(h, layer["mlp"]["w_gate"], layer["mlp"]["w_up"], layer["mlp"]["w_down"])
+        aux = jnp.zeros((), jnp.float32)
+    return x + m, new_cache, aux
+
+
+def _ssm_layer(x, layer, cfg, state=None):
+    h = rms_norm(x, layer["ln1"])
+    out, new_state = mamba2_block(h, layer["ssm"], cfg, state)
+    return x + out, new_state
+
+
+# --------------------------------------------------------------------------- #
+# forward (training)
+# --------------------------------------------------------------------------- #
+
+
+def _embed_inputs(params, cfg, tokens, embeddings=None):
+    x = params["embed"][tokens]                           # (B, S_tok, D)
+    if embeddings is not None:                            # VLM stub prefix
+        x = jnp.concatenate([embeddings.astype(x.dtype), x], axis=1)
+    return x
+
+
+def forward_train(
+    params: dict,
+    cfg: ModelConfig,
+    tokens: jax.Array,
+    embeddings: jax.Array | None = None,
+    logits_sharding=None,
+) -> tuple[jax.Array, jax.Array]:
+    """Full-sequence causal forward.  Returns (logits (B,S,V), aux loss).
+
+    logits_sharding (optional NamedSharding) is applied to the lm_head
+    output so the partitioner keeps the vocab dim sharded -- a downstream
+    constraint does not reliably propagate back into the dot."""
+    x = _embed_inputs(params, cfg, tokens, embeddings)
+    b, s, _ = x.shape
+    positions = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32), (b, s))
+    aux_total = jnp.zeros((), jnp.float32)
+
+    if cfg.family in ("ssm", "hybrid"):
+        def body(x, layer):
+            x, _ = _ssm_layer(x, layer, cfg)
+            return x, None
+
+        body_fn = jax.checkpoint(body) if cfg.remat else body
+        if cfg.family == "ssm":
+            x, _ = _scan_layers(body_fn, x, params["layers"], cfg.scan_layers)
+        else:
+            # groups of attn_every mamba layers + one shared attn block
+            per = cfg.attn_every
+            n_groups = cfg.n_layers // per
+            rest = cfg.n_layers - n_groups * per
+            layers = params["layers"]
+
+            def take(tree, start, count):
+                return jax.tree.map(lambda t: t[start : start + count], tree)
+
+            for g in range(n_groups):
+                x, _ = _scan_layers(
+                    body_fn, x, take(layers, g * per, per), cfg.scan_layers
+                )
+                x, _, _ = _attn_mlp_layer(
+                    x, params["shared_attn"], positions, cfg
+                )
+            if rest:
+                x, _ = _scan_layers(
+                    body_fn, x, take(layers, n_groups * per, rest),
+                    cfg.scan_layers,
+                )
+    else:
+        use_moe = bool(cfg.n_experts)
+
+        def body(x, layer):
+            x, _, aux = _attn_mlp_layer(
+                x, layer, positions, cfg, use_moe=use_moe
+            )
+            return x, aux
+
+        def body_dense(x, layer):
+            x, _, aux = _attn_mlp_layer(
+                x, layer, positions, cfg, use_moe=False
+            )
+            return x, aux
+
+        if "dense_layers" in params:
+            fn = jax.checkpoint(body_dense) if cfg.remat else body_dense
+            x, _ = _scan_layers(fn, x, params["dense_layers"], cfg.scan_layers)
+        if "layers" in params:
+            fn = jax.checkpoint(body) if cfg.remat else body
+            x, auxs = _scan_layers(fn, x, params["layers"], cfg.scan_layers)
+            aux_total = aux_total + jnp.sum(auxs)
+
+    x = rms_norm(x, params["final_norm"])
+    logits = jnp.einsum("bsd,dv->bsv", x, params["lm_head"])
+    if logits_sharding is not None:
+        logits = jax.lax.with_sharding_constraint(logits, logits_sharding)
+    return logits, aux_total
+
+
+# --------------------------------------------------------------------------- #
+# serving: prefill + decode
+# --------------------------------------------------------------------------- #
+
+
+def init_decode_cache(
+    cfg: ModelConfig, batch: int, max_len: int, dtype=jnp.bfloat16
+) -> dict:
+    """Allocate the (empty) decode cache pytree for a family."""
+    if cfg.family == "ssm":
+        return {
+            "conv": jnp.zeros(
+                (cfg.n_layers, batch, cfg.ssm_conv - 1,
+                 cfg.d_inner + 2 * cfg.ssm_heads * cfg.ssm_state), dtype
+            ),
+            "ssm": jnp.zeros(
+                (cfg.n_layers, batch, cfg.ssm_heads, cfg.ssm_head_dim,
+                 cfg.ssm_state), jnp.float32
+            ),
+        }
+    if cfg.family == "hybrid":
+        n_groups = cfg.n_layers // cfg.attn_every
+        return {
+            "conv": jnp.zeros(
+                (cfg.n_layers, batch, cfg.ssm_conv - 1,
+                 cfg.d_inner + 2 * cfg.ssm_heads * cfg.ssm_state), dtype
+            ),
+            "ssm": jnp.zeros(
+                (cfg.n_layers, batch, cfg.ssm_heads, cfg.ssm_head_dim,
+                 cfg.ssm_state), jnp.float32
+            ),
+            "attn_k": jnp.zeros(
+                (n_groups, batch, max_len, cfg.n_kv_heads, cfg.hd), dtype
+            ),
+            "attn_v": jnp.zeros(
+                (n_groups, batch, max_len, cfg.n_kv_heads, cfg.hd), dtype
+            ),
+        }
+    if cfg.use_mla:
+        return {
+            "c_kv": jnp.zeros(
+                (cfg.n_layers, batch, max_len, cfg.kv_lora_rank), dtype
+            ),
+            "k_rope": jnp.zeros(
+                (cfg.n_layers, batch, max_len, cfg.qk_rope_dim), dtype
+            ),
+        }
+    return {
+        "k": jnp.zeros((cfg.n_layers, batch, max_len, cfg.n_kv_heads, cfg.hd), dtype),
+        "v": jnp.zeros((cfg.n_layers, batch, max_len, cfg.n_kv_heads, cfg.hd), dtype),
+    }
+
+
+def _forward_cached(
+    params, cfg, x, positions, cache, cache_len
+):
+    """Shared by prefill (S>=1) and decode (S==1): runs the stack against the
+    cache, returns (hidden, new_cache)."""
+    if cfg.family in ("ssm", "hybrid"):
+        decode = cache_len is not None and x.shape[1] == 1 and cache is not None
+
+        def body(x, inp):
+            layer, conv, ssm = inp
+            st = {"conv": conv, "ssm": ssm} if decode else None
+            x, new_st = _ssm_layer(x, layer, cfg, st)
+            return x, (new_st["conv"], new_st["ssm"])
+
+        if cfg.family == "ssm":
+            x, (conv_s, ssm_s) = _scan_layers(
+                body, x, (params["layers"], cache["conv"], cache["ssm"]),
+                cfg.scan_layers,
+            )
+            return x, {"conv": conv_s, "ssm": ssm_s}
+
+        per = cfg.attn_every
+        n_groups = cfg.n_layers // per
+        rest = cfg.n_layers - n_groups * per
+        layers = params["layers"]
+
+        def take(tree, start, count):
+            return jax.tree.map(lambda t: t[start : start + count], tree)
+
+        convs, ssms, aks, avs = [], [], [], []
+        for g in range(n_groups):
+            seg = take(layers, g * per, per)
+            cseg = take(cache["conv"], g * per, per)
+            sseg = take(cache["ssm"], g * per, per)
+            x, (cs, ss) = _scan_layers(
+                body, x, (seg, cseg, sseg), cfg.scan_layers
+            )
+            convs.append(cs)
+            ssms.append(ss)
+            kv = (cache["attn_k"][g], cache["attn_v"][g])
+            x, new_kv, _ = _attn_mlp_layer(
+                x, params["shared_attn"], positions, cfg,
+                cache=kv if cache_len is not None else None,
+                cache_len=cache_len,
+            )
+            if cache_len is not None:
+                aks.append(new_kv[0])
+                avs.append(new_kv[1])
+            else:
+                aks.append(cache["attn_k"][g])
+                avs.append(cache["attn_v"][g])
+        if rest:
+            seg = take(layers, n_groups * per, rest)
+            cseg = take(cache["conv"], n_groups * per, rest)
+            sseg = take(cache["ssm"], n_groups * per, rest)
+            x, (cs, ss) = _scan_layers(
+                body, x, (seg, cseg, sseg), cfg.scan_layers
+            )
+            convs.append(cs)
+            ssms.append(ss)
+        new_cache = {
+            "conv": jnp.concatenate(convs, axis=0),
+            "ssm": jnp.concatenate(ssms, axis=0),
+            "attn_k": jnp.stack(aks) if aks else cache["attn_k"],
+            "attn_v": jnp.stack(avs) if avs else cache["attn_v"],
+        }
+        return x, new_cache
+
+    use_moe = bool(cfg.n_experts)
+    if cfg.use_mla:
+        cache_keys = ("c_kv", "k_rope")
+    else:
+        cache_keys = ("k", "v")
+
+    def body(x, inp):
+        layer, c0, c1 = inp
+        x, new_kv, _ = _attn_mlp_layer(
+            x, layer, positions, cfg,
+            cache=(c0, c1), cache_len=cache_len, use_moe=use_moe,
+        )
+        return x, new_kv
+
+    n_dense = cfg.first_k_dense if (use_moe and "dense_layers" in params) else 0
+
+    def body_dense(x, inp):
+        layer, c0, c1 = inp
+        x, new_kv, _ = _attn_mlp_layer(
+            x, layer, positions, cfg,
+            cache=(c0, c1), cache_len=cache_len, use_moe=False,
+        )
+        return x, new_kv
+
+    c0_all, c1_all = cache[cache_keys[0]], cache[cache_keys[1]]
+    outs0, outs1 = [], []
+    if n_dense:
+        x, (d0, d1) = _scan_layers(
+            body_dense, x,
+            (params["dense_layers"], c0_all[:n_dense], c1_all[:n_dense]),
+            cfg.scan_layers,
+        )
+        outs0.append(d0)
+        outs1.append(d1)
+    x, (s0, s1) = _scan_layers(
+        body, x, (params["layers"], c0_all[n_dense:], c1_all[n_dense:]),
+        cfg.scan_layers,
+    )
+    outs0.append(s0)
+    outs1.append(s1)
+    new_cache = {
+        cache_keys[0]: jnp.concatenate(outs0, axis=0) if len(outs0) > 1 else outs0[0],
+        cache_keys[1]: jnp.concatenate(outs1, axis=0) if len(outs1) > 1 else outs1[0],
+    }
+    return x, new_cache
+
+
+def prefill(
+    params: dict,
+    cfg: ModelConfig,
+    tokens: jax.Array,
+    max_len: int | None = None,
+    embeddings: jax.Array | None = None,
+    cache_dtype=jnp.bfloat16,
+) -> tuple[jax.Array, dict]:
+    """Process the prompt, build the decode cache, return last-pos logits."""
+    x = _embed_inputs(params, cfg, tokens, embeddings)
+    b, s, _ = x.shape
+    max_len = max_len or s
+    positions = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32), (b, s))
+    cache = init_decode_cache(cfg, b, max_len, cache_dtype)
+    cache_len = 0  # static zero: k/v written at [0, S)
+    x, cache = _forward_cached(params, cfg, x, positions, cache, cache_len)
+    x = rms_norm(x[:, -1:], params["final_norm"])
+    logits = jnp.einsum("bsd,dv->bsv", x, params["lm_head"])
+    return logits, cache
+
+
+def decode_step(
+    params: dict,
+    cfg: ModelConfig,
+    tokens: jax.Array,          # (B, 1)
+    cache: dict,
+    cache_len: jax.Array,       # scalar int32: valid positions in cache
+) -> tuple[jax.Array, dict]:
+    """One autoregressive step against the cache."""
+    x = params["embed"][tokens]
+    b, s, _ = x.shape
+    positions = cache_len + jnp.broadcast_to(
+        jnp.arange(s, dtype=jnp.int32), (b, s)
+    )
+    x, cache = _forward_cached(params, cfg, x, positions, cache, cache_len)
+    x = rms_norm(x, params["final_norm"])
+    logits = jnp.einsum("bsd,dv->bsv", x, params["lm_head"])
+    return logits, cache

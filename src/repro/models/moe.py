@@ -1,0 +1,98 @@
+"""Mixture-of-Experts: top-k router + sort-based capacity dispatch.
+
+Static-shaped, GSPMD-friendly: assignments are ranked inside their expert via
+a single stable sort + running-max segment trick; tokens beyond an expert's
+capacity are dropped (GShard semantics).  Experts are sharded over the
+'model' mesh axis (expert parallelism); the (E, C, D) dispatch buffer is the
+only materialized intermediate.
+
+Supports DeepSeek-style shared experts (always-on dense branch) and a
+load-balance auxiliary loss.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import swiglu
+
+
+def _rank_in_expert(flat_e: jax.Array, n_experts: int) -> jax.Array:
+    """Position of each assignment within its expert (stable order)."""
+    tk = flat_e.shape[0]
+    order = jnp.argsort(flat_e, stable=True)
+    sorted_e = flat_e[order]
+    idx = jnp.arange(tk, dtype=jnp.int32)
+    is_start = jnp.concatenate(
+        [jnp.ones((1,), bool), sorted_e[1:] != sorted_e[:-1]]
+    )
+    seg_start = jax.lax.associative_scan(
+        jnp.maximum, jnp.where(is_start, idx, 0)
+    )
+    rank_sorted = idx - seg_start
+    rank = jnp.zeros_like(rank_sorted).at[order].set(rank_sorted)
+    return rank
+
+
+def moe_block(
+    x: jax.Array,          # (B, S, D)
+    params: dict,
+    n_experts: int,
+    top_k: int,
+    capacity_factor: float,
+    n_shared: int = 0,
+) -> tuple[jax.Array, jax.Array]:
+    """Returns (output (B, S, D), aux load-balance loss scalar)."""
+    b, s, d = x.shape
+    t = b * s
+    xt = x.reshape(t, d)
+
+    logits = jnp.einsum("td,de->te", xt, params["router"].astype(x.dtype))
+    gates = jax.nn.softmax(logits.astype(jnp.float32), axis=-1)  # (T, E)
+    top_vals, top_idx = jax.lax.top_k(gates, top_k)              # (T, k)
+    top_vals = top_vals / jnp.maximum(
+        jnp.sum(top_vals, axis=-1, keepdims=True), 1e-9
+    )
+
+    # load-balance aux loss (Switch): E * sum_e f_e * p_e
+    me = jnp.mean(gates, axis=0)
+    assign_onehot = jax.nn.one_hot(top_idx[:, 0], n_experts, dtype=jnp.float32)
+    ce = jnp.mean(assign_onehot, axis=0)
+    aux = n_experts * jnp.sum(me * ce)
+
+    # ceil + a small floor so tiny decode batches never drop tokens
+    capacity = int(max(4, -(-capacity_factor * top_k * t // n_experts)))
+    capacity = min(capacity, t)
+    flat_e = top_idx.reshape(-1).astype(jnp.int32)               # (T*k,)
+    flat_w = top_vals.reshape(-1)
+    flat_t = jnp.repeat(jnp.arange(t, dtype=jnp.int32), top_k)
+
+    rank = _rank_in_expert(flat_e, n_experts)
+    keep = rank < capacity
+    slot = jnp.where(keep, flat_e * capacity + rank, n_experts * capacity)
+
+    # dispatch: scatter token activations into the (E*C [+1 overflow], D) buffer
+    buf = jnp.zeros((n_experts * capacity + 1, d), x.dtype)
+    buf = buf.at[slot].set(xt[flat_t])
+    buf = buf[:-1].reshape(n_experts, capacity, d)
+
+    # expert computation (E sharded over 'model')
+    g = jnp.einsum("ecd,edf->ecf", buf, params["w_gate"])
+    u = jnp.einsum("ecd,edf->ecf", buf, params["w_up"])
+    y = jnp.einsum("ecf,efd->ecd", jax.nn.silu(g) * u, params["w_down"])
+    y = y.reshape(n_experts * capacity, d)
+    y = jnp.concatenate([y, jnp.zeros((1, d), y.dtype)], axis=0)
+
+    # combine: gather back and weight
+    out = jnp.zeros((t, d), jnp.float32)
+    contrib = y[slot].astype(jnp.float32) * flat_w[:, None]
+    contrib = jnp.where(keep[:, None], contrib, 0.0)
+    out = out.at[flat_t].add(contrib)
+    out = out.astype(x.dtype)
+
+    if n_shared:
+        out = out + swiglu(
+            xt, params["shared_gate"], params["shared_up"], params["shared_down"]
+        )
+    return out.reshape(b, s, d), aux

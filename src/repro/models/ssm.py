@@ -1,0 +1,177 @@
+"""Mamba2 SSD block (state-space duality, arXiv:2405.21060) + 1-step decode.
+
+Chunked SSD: within a chunk the recurrence is computed as a masked quadratic
+attention-like product; across chunks a (H, hd, N) state is carried by a
+lax.scan.  The scalar-per-head A of Mamba2 makes the decay terms rank-1,
+which is what the chunk algebra below exploits.
+
+Layer structure follows the Mamba2 reference: in_proj -> (z | x | B | C | dt)
+-> causal conv1d on x,B,C -> SSD -> gated RMSNorm (z) -> out_proj.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import rms_norm
+
+
+def _segsum(x: jax.Array) -> jax.Array:
+    """Stable segment-sum: out[..., i, j] = sum_{j < t <= i} x[..., t].
+
+    Returns -inf above the diagonal (masked decay matrix in log space).
+    """
+    t = x.shape[-1]
+    cs = jnp.cumsum(x, axis=-1)
+    d = cs[..., :, None] - cs[..., None, :]
+    mask = jnp.tril(jnp.ones((t, t), bool), 0)
+    return jnp.where(mask, d, -jnp.inf)
+
+
+def ssd_chunked(
+    xh: jax.Array,     # (B, S, H, P) inputs per head
+    dt: jax.Array,     # (B, S, H)    softplus'd step sizes
+    a_log: jax.Array,  # (H,)         log A (negative decay)
+    bmat: jax.Array,   # (B, S, H, N) input projections
+    cmat: jax.Array,   # (B, S, H, N) output projections
+    chunk: int,
+    init_state: jax.Array | None = None,  # (B, H, P, N)
+    unroll: bool = False,
+) -> tuple[jax.Array, jax.Array]:
+    """Chunked state-space duality scan.  Returns (y (B,S,H,P), state)."""
+    b, s, h, p = xh.shape
+    n = bmat.shape[-1]
+    chunk = min(chunk, s)
+    assert s % chunk == 0, f"seq {s} % chunk {chunk} != 0"
+    nc = s // chunk
+
+    a = -jnp.exp(a_log.astype(jnp.float32))                    # (H,) negative
+    da = dt.astype(jnp.float32) * a[None, None, :]             # (B, S, H)
+    dax = xh.astype(jnp.float32) * dt.astype(jnp.float32)[..., None]
+
+    # reshape into chunks: (B, nc, L, ...)
+    def ch(t):
+        return t.reshape(b, nc, chunk, *t.shape[2:])
+
+    da_c, x_c = ch(da), ch(dax)
+    b_c, c_c = ch(bmat.astype(jnp.float32)), ch(cmat.astype(jnp.float32))
+
+    # --- intra-chunk (diagonal) term ---------------------------------------
+    l_log = _segsum(da_c.transpose(0, 1, 3, 2))                 # (B,nc,H,L,L)
+    l_mat = jnp.exp(l_log)
+    scores = jnp.einsum("bclhn,bcshn->bchls", c_c, b_c)         # (B,nc,H,L,L)
+    y_diag = jnp.einsum("bchls,bcshp->bclhp", scores * l_mat, x_c)
+
+    # --- chunk states --------------------------------------------------------
+    da_cum = jnp.cumsum(da_c, axis=2)                           # (B,nc,L,H)
+    da_tot = da_cum[:, :, -1, :]                                # (B,nc,H)
+    decay_to_end = jnp.exp(da_tot[:, :, None, :] - da_cum)      # (B,nc,L,H)
+    states = jnp.einsum("bclhn,bclh,bclhp->bchpn", b_c, decay_to_end, x_c)
+
+    # --- inter-chunk recurrence ----------------------------------------------
+    s0 = (
+        init_state.astype(jnp.float32)
+        if init_state is not None
+        else jnp.zeros((b, h, p, n), jnp.float32)
+    )
+
+    def step(carry, inp):
+        st_prev = carry
+        st_c, dtot = inp                                        # (B,H,P,N), (B,H)
+        new = st_c + jnp.exp(dtot)[:, :, None, None] * st_prev
+        return new, st_prev
+
+    states_t = states.transpose(1, 0, 2, 3, 4)                  # (nc,B,H,P,N)
+    dtot_t = da_tot.transpose(1, 0, 2)                          # (nc,B,H)
+    if unroll:  # exact-cost mode, see layers._flash_chunk_scan
+        carry, prevs_l = s0, []
+        for ci in range(nc):
+            carry, prev = step(carry, (states_t[ci], dtot_t[ci]))
+            prevs_l.append(prev)
+        final, prevs = carry, jnp.stack(prevs_l)
+    else:
+        final, prevs = jax.lax.scan(step, s0, (states_t, dtot_t))
+    prev_states = prevs.transpose(1, 0, 2, 3, 4)                # (B,nc,H,P,N)
+
+    # --- inter-chunk (off-diagonal) output ------------------------------------
+    decay_from_start = jnp.exp(da_cum)                          # (B,nc,L,H)
+    y_off = jnp.einsum(
+        "bclhn,bclh,bchpn->bclhp", c_c, decay_from_start, prev_states
+    )
+
+    y = (y_diag + y_off).reshape(b, s, h, p)
+    return y, final
+
+
+def mamba2_block(
+    x: jax.Array,               # (B, S, D)
+    params: dict,
+    cfg,
+    state: dict | None = None,  # decode: {'conv': (B,K-1,CD), 'ssm': (B,H,P,N)}
+) -> tuple[jax.Array, dict | None]:
+    """Full Mamba2 layer.  state=None -> training/prefill over the sequence;
+    state given -> single-step decode (S == 1)."""
+    b, s, d = x.shape
+    di = cfg.d_inner
+    h = cfg.ssm_heads
+    p = cfg.ssm_head_dim
+    n = cfg.ssm_state
+    k = cfg.ssm_conv
+    conv_dim = di + 2 * h * n
+
+    zxbcdt = jnp.einsum("bsd,de->bse", x, params["in_proj"])
+    z, xbc, dt = jnp.split(zxbcdt, [di, di + conv_dim], axis=-1)
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + params["dt_bias"])  # (B,S,H)
+
+    # causal depthwise conv over (x | B | C)
+    w = params["conv_w"]                                        # (K, convdim)
+    if state is None:
+        pad = jnp.zeros((b, k - 1, conv_dim), xbc.dtype)
+        xbc_p = jnp.concatenate([pad, xbc], axis=1)
+        new_conv = xbc_p[:, -(k - 1):, :] if k > 1 else jnp.zeros((b, 0, conv_dim), xbc.dtype)
+    else:
+        xbc_p = jnp.concatenate([state["conv"].astype(xbc.dtype), xbc], axis=1)
+        new_conv = xbc_p[:, -(k - 1):, :] if k > 1 else state["conv"]
+    conv_out = sum(
+        xbc_p[:, i : i + (xbc_p.shape[1] - k + 1), :] * w[i][None, None, :]
+        for i in range(k)
+    )
+    xbc = jax.nn.silu(conv_out)
+
+    xh = xbc[..., :di].reshape(b, s, h, p)
+    bmat = xbc[..., di : di + h * n].reshape(b, s, h, n)
+    cmat = xbc[..., di + h * n :].reshape(b, s, h, n)
+
+    if state is None:
+        # pad S to a chunk multiple; dt=0 padding is a provable no-op on the
+        # carried state (decay exp(0)=1, update 0) and the padded y is dropped
+        chunk = min(cfg.ssm_chunk, max(s, 1))
+        pad_s = (-s) % chunk
+        if pad_s:
+            zf = lambda t: jnp.pad(t, [(0, 0), (0, pad_s)] + [(0, 0)] * (t.ndim - 2))
+            xh_p, dt_p, b_p, c_p = zf(xh), zf(dt), zf(bmat), zf(cmat)
+        else:
+            xh_p, dt_p, b_p, c_p = xh, dt, bmat, cmat
+        y, final = ssd_chunked(xh_p, dt_p, params["a_log"], b_p, c_p, chunk,
+                               unroll=not cfg.scan_layers)
+        y = y[:, :s]
+        new_state = {"conv": new_conv, "ssm": final}
+    else:
+        # exact one-step recurrence: s' = exp(dt*a) s + dt * x b^T ; y = s' c
+        a = -jnp.exp(params["a_log"].astype(jnp.float32))
+        da = dt[:, 0, :] * a[None, :]                           # (B,H)
+        sx = state["ssm"].astype(jnp.float32)
+        upd = jnp.einsum(
+            "bhp,bhn->bhpn", xh[:, 0].astype(jnp.float32) * dt[:, 0][..., None],
+            bmat[:, 0].astype(jnp.float32),
+        )
+        new_ssm = jnp.exp(da)[:, :, None, None] * sx + upd
+        y = jnp.einsum("bhpn,bhn->bhp", new_ssm, cmat[:, 0].astype(jnp.float32))
+        y = y[:, None]                                          # (B,1,H,P)
+        new_state = {"conv": new_conv, "ssm": new_ssm}
+
+    y = y.reshape(b, s, di).astype(x.dtype)
+    y = rms_norm(y * jax.nn.silu(z), params["out_norm"])
+    out = jnp.einsum("bse,ed->bsd", y, params["out_proj"])
+    return out.astype(x.dtype), new_state

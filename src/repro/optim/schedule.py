@@ -1,0 +1,20 @@
+"""Learning-rate schedules."""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def cosine_schedule(step, cfg):
+    """Linear warmup + cosine decay to min_lr_ratio * lr."""
+    step = jnp.asarray(step, jnp.float32)
+    warm = jnp.minimum(step / jnp.maximum(cfg.warmup_steps, 1), 1.0)
+    prog = jnp.clip(
+        (step - cfg.warmup_steps)
+        / jnp.maximum(cfg.total_steps - cfg.warmup_steps, 1),
+        0.0,
+        1.0,
+    )
+    cos = 0.5 * (1 + jnp.cos(jnp.pi * prog))
+    scale = cfg.min_lr_ratio + (1 - cfg.min_lr_ratio) * cos
+    return cfg.lr * warm * scale

@@ -1,0 +1,12 @@
+"""Distributed MemANNS retrieval: cluster shards across the device mesh.
+
+  layout.py -- pack an IVFPQIndex + Placement (+ optional co-occ encoding)
+               into per-device, block-aligned storage arrays
+  search.py -- the shard_map online path: on-device LUT build, per-pair
+               fused ADC+top-k kernel, local per-query merge, one all-gather
+  engine.py -- MemANNSEngine: end-to-end build + query API (the paper's
+               whole system behind one object)
+"""
+
+from repro.retrieval.engine import MemANNSEngine
+from repro.retrieval.layout import DeviceShards, build_shards

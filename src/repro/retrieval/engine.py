@@ -1,0 +1,203 @@
+"""MemANNSEngine: the end-to-end system of paper Fig. 5 behind one object.
+
+Offline (build): IVF+PQ index -> frequency estimation from a historical query
+log -> Algorithm-1 placement (with replication + co-location) -> optional
+§4.3 co-occurrence re-encoding -> per-device packed shards.
+
+Online (search): host-side cluster filtering + Algorithm-2 scheduling, then
+one jitted shard_map step (LUT build, fused ADC+top-k, hierarchical merge).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.index import IVFPQIndex, build_index, filter_clusters
+from repro.core.placement import (
+    Placement,
+    estimate_frequencies,
+    place_clusters,
+)
+from repro.core.scheduling import Schedule, schedule_queries
+from repro.retrieval.layout import DeviceShards, build_shards
+from repro.retrieval.search import DPU_AXIS, sharded_search
+
+
+def make_dpu_mesh(devices=None) -> jax.sharding.Mesh:
+    """Flat 1-D mesh over all devices: device == the paper's DPU."""
+    if devices is None:
+        devices = jax.devices()
+    return jax.sharding.Mesh(np.asarray(devices), (DPU_AXIS,))
+
+
+@dataclasses.dataclass
+class MemANNSEngine:
+    index: IVFPQIndex
+    placement: Placement
+    shards: DeviceShards
+    mesh: jax.sharding.Mesh
+    path: str = "gather"
+    interpret: bool | None = None
+    _dev_arrays: tuple | None = None
+
+    @classmethod
+    def build(
+        cls,
+        key: jax.Array,
+        xs: np.ndarray,
+        n_clusters: int,
+        m: int,
+        mesh: jax.sharding.Mesh | None = None,
+        history_queries: np.ndarray | None = None,
+        nprobe_history: int = 32,
+        use_cooc: bool = False,
+        n_combos: int = 256,
+        block_n: int = 1024,
+        min_length_reduction: float = 0.0,
+        kmeans_iters: int = 15,
+        pq_iters: int = 10,
+        path: str = "gather",
+        interpret: bool | None = None,
+    ) -> "MemANNSEngine":
+        mesh = mesh or make_dpu_mesh()
+        ndev = math.prod(mesh.devices.shape)
+        index = build_index(
+            key, xs, n_clusters, m, kmeans_iters=kmeans_iters, pq_iters=pq_iters
+        )
+        # f_i from the historical query log (paper §4.1's predictor)
+        if history_queries is not None and len(history_queries):
+            probed, _ = filter_clusters(
+                jnp.asarray(index.centroids),
+                jnp.asarray(history_queries, jnp.float32),
+                min(nprobe_history, n_clusters),
+            )
+            freqs = estimate_frequencies(np.asarray(probed), n_clusters)
+        else:
+            freqs = np.ones(n_clusters) / n_clusters
+        placement = place_clusters(
+            index.cluster_sizes().astype(np.float64),
+            freqs,
+            ndev,
+            centroids=index.centroids,
+        )
+        shards = build_shards(
+            index,
+            placement,
+            use_cooc=use_cooc,
+            n_combos=n_combos,
+            block_n=block_n,
+            min_length_reduction=min_length_reduction,
+        )
+        return cls(
+            index=index,
+            placement=placement,
+            shards=shards,
+            mesh=mesh,
+            path=path,
+            interpret=interpret,
+        )
+
+    # ------------------------------------------------------------------ #
+
+    def _device_put(self):
+        """Shard the packed arrays over the mesh once, cache on device."""
+        if self._dev_arrays is not None:
+            return self._dev_arrays
+        spec_dev = jax.sharding.NamedSharding(
+            self.mesh, jax.sharding.PartitionSpec(DPU_AXIS)
+        )
+        spec_rep = jax.sharding.NamedSharding(
+            self.mesh, jax.sharding.PartitionSpec()
+        )
+        s = self.shards
+        self._dev_arrays = (
+            jax.device_put(s.codes, spec_dev),
+            jax.device_put(s.vec_ids, spec_dev),
+            jax.device_put(s.slot_start, spec_dev),
+            jax.device_put(s.slot_size, spec_dev),
+            jax.device_put(s.combo_addrs, spec_dev),
+            jax.device_put(self.index.codebook.astype(np.float32), spec_rep),
+        )
+        return self._dev_arrays
+
+    def schedule_batch(
+        self, queries: np.ndarray, nprobe: int
+    ) -> tuple[Schedule, np.ndarray, np.ndarray]:
+        """Host side: cluster filtering (stage a) + Algorithm 2."""
+        probed, qmc = filter_clusters(
+            jnp.asarray(self.index.centroids),
+            jnp.asarray(queries, jnp.float32),
+            nprobe,
+        )
+        probed = np.asarray(probed)
+        schedule = schedule_queries(
+            probed, self.index.cluster_sizes(), self.placement
+        )
+        return schedule, probed, np.asarray(qmc)
+
+    def search(
+        self,
+        queries: np.ndarray,
+        nprobe: int,
+        k: int,
+        pairs_per_dev: int | None = None,
+    ) -> tuple[np.ndarray, np.ndarray]:
+        """Full online path.  Returns (dists (Q, k), ids (Q, k))."""
+        queries = np.asarray(queries, np.float32)
+        q_n = queries.shape[0]
+        ndev = self.shards.ndev
+        schedule, probed, qmc = self.schedule_batch(queries, nprobe)
+
+        max_pairs = max(len(a) for a in schedule.assigned)
+        if pairs_per_dev is None:
+            # round up to limit jit re-compiles across batches
+            pairs_per_dev = max(8, 1 << math.ceil(math.log2(max(max_pairs, 1))))
+        if max_pairs > pairs_per_dev:
+            raise ValueError(
+                f"schedule needs {max_pairs} pairs/device > cap {pairs_per_dev}"
+            )
+
+        # densify: per-device pair arrays
+        qmc_pairs = np.zeros((ndev, pairs_per_dev, queries.shape[1]), np.float32)
+        pair_q = np.zeros((ndev, pairs_per_dev), np.int32)
+        pair_slot = np.zeros((ndev, pairs_per_dev), np.int32)
+        pair_valid = np.zeros((ndev, pairs_per_dev), bool)
+        # map probed (q, c) -> position in probed row for qmc lookup
+        pos = {
+            (qi, int(c)): j
+            for qi in range(q_n)
+            for j, c in enumerate(probed[qi])
+        }
+        for d, pairs in enumerate(schedule.assigned):
+            for p, (qi, c) in enumerate(pairs):
+                qmc_pairs[d, p] = qmc[qi, pos[(qi, c)]]
+                pair_q[d, p] = qi
+                pair_slot[d, p] = self.shards.local_slot[(d, c)]
+                pair_valid[d, p] = True
+
+        dev = self._device_put()
+        spec_dev = jax.sharding.NamedSharding(
+            self.mesh, jax.sharding.PartitionSpec(DPU_AXIS)
+        )
+        out_d, out_i = sharded_search(
+            *dev[:5],
+            dev[5],
+            jax.device_put(qmc_pairs, spec_dev),
+            jax.device_put(pair_q, spec_dev),
+            jax.device_put(pair_slot, spec_dev),
+            jax.device_put(pair_valid, spec_dev),
+            mesh=self.mesh,
+            n_queries=q_n,
+            k=k,
+            block_n=self.shards.block_n,
+            window=self.shards.window,
+            path=self.path,
+            add_offsets=self.shards.add_offsets,
+            interpret=self.interpret,
+        )
+        return np.asarray(out_d), np.asarray(out_i)

@@ -1,0 +1,211 @@
+"""Pack an IVFPQ index + Algorithm-1 placement into per-device storage.
+
+Every array carries a leading `ndev` dimension that is sharded over the flat
+'dpu' mesh axis at runtime (device == the paper's DPU).  Cluster slots are
+block-aligned so the scan kernel's tiles never straddle two clusters, and all
+codes are stored as *flat direct addresses* (§4.3 layout) -- in plain mode the
+address of code j at column m is simply m*256 + j, so one kernel serves both
+encodings.
+
+Table layout per (query, cluster) pair: [LUT (M*256) | combo sums (m) | 0].
+The final zero slot is the sentinel every padding address points at.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+from repro.core.cooc import ComboSet, CoocCodes, mine_combos, reencode
+from repro.core.index import IVFPQIndex
+from repro.core.placement import Placement
+
+NCODES = 256
+
+
+@dataclasses.dataclass
+class DeviceShards:
+    """Device-sharded MemANNS storage (leading dim = ndev everywhere)."""
+
+    codes: np.ndarray        # (ndev, cap, W) flat addresses (uint16/int32)
+                             # or raw uint8 codes when add_offsets (plain
+                             # mode: direct address = col*256 + code is
+                             # reconstructed inside the kernel, so HBM holds
+                             # the paper's 1-byte codes)
+    add_offsets: bool        # True: codes are raw uint8, kernel adds offsets
+    vec_ids: np.ndarray      # (ndev, cap) int32, -1 on padding
+    slot_start: np.ndarray   # (ndev, S) int32 block-aligned row starts
+    slot_size: np.ndarray    # (ndev, S) int32 valid rows per slot
+    slot_cluster: np.ndarray # (ndev, S) int32 cluster id, -1 for empty slot
+    combo_addrs: np.ndarray  # (ndev, S, m, L) int32 flat combo item addrs
+    local_slot: dict         # (dev, cluster_id) -> slot
+    m_subspaces: int
+    n_combos: int
+    block_n: int
+    window: int              # Lpad: per-pair scan window (block multiple)
+
+    @property
+    def ndev(self) -> int:
+        return self.codes.shape[0]
+
+    @property
+    def width(self) -> int:
+        return self.codes.shape[2]
+
+    @property
+    def table_size(self) -> int:
+        return self.m_subspaces * NCODES + self.n_combos + 1
+
+    @property
+    def sentinel(self) -> int:
+        return self.table_size - 1
+
+    def bytes_per_device(self) -> int:
+        return int(
+            self.codes.shape[1] * self.width * self.codes.dtype.itemsize
+        )
+
+
+def _align(x: int, b: int) -> int:
+    return (x + b - 1) // b * b
+
+
+def build_shards(
+    index: IVFPQIndex,
+    placement: Placement,
+    use_cooc: bool = False,
+    n_combos: int = 256,
+    combo_len: int = 3,
+    block_n: int = 1024,
+    min_length_reduction: float = 0.0,
+    mine_rows: int = 50_000,
+    compact_dtype: bool = True,
+) -> DeviceShards:
+    """Offline packing: re-encode (optionally), align, replicate, pad.
+
+    Args:
+      min_length_reduction: apply co-occ re-encoding to a cluster only when
+        its average length reduction exceeds this (paper uses 0.5; default 0
+        = always apply, benchmarks sweep it).
+    """
+    ndev = len(placement.dev_clusters)
+    m = index.m
+    c_n = index.n_clusters
+
+    # ---- per-cluster (re-)encoding, done once and shared by all replicas --
+    cluster_addrs: list[np.ndarray] = []
+    cluster_combo_addrs = np.zeros((c_n, n_combos if use_cooc else 0, combo_len), np.int32)
+    width = m
+    encodings: list[CoocCodes | None] = [None] * c_n
+    if use_cooc:
+        width = 0
+        for c in range(c_n):
+            codes_c = index.cluster_codes(c)
+            combos = mine_combos(
+                codes_c, n_combos=n_combos, combo_len=combo_len,
+                max_rows=mine_rows, seed=c,
+            )
+            # pad the mined set up to n_combos with never-matching dummies
+            k_found = combos.n_combos
+            cols = np.zeros((n_combos, combo_len), np.int32)
+            cods = np.zeros((n_combos, combo_len), np.int32)
+            cols[:k_found] = combos.cols
+            cods[:k_found] = combos.codes
+            padded = ComboSet(cols=cols, codes=cods,
+                              support=np.zeros(n_combos, np.int64))
+            enc = reencode(codes_c, padded) if len(codes_c) else None
+            if enc is not None and enc.length_reduction() < min_length_reduction:
+                # paper §4.3: fall back to plain encoding for this cluster
+                enc = None
+            encodings[c] = enc
+            cluster_combo_addrs[c] = cols * NCODES + cods
+            if enc is not None:
+                width = max(width, int(enc.lengths.max(initial=0)))
+        width = max(width, 1)
+        if any(e is None for e in encodings):
+            width = m  # plain fallback rows need full width
+
+    sentinel = m * NCODES + (n_combos if use_cooc else 0)
+    # storage dtype: raw uint8 codes in plain mode (kernel reconstructs the
+    # direct address), uint16 addresses in co-occ mode -- the paper's own
+    # byte budget, 4x / 2x less HBM traffic than int32
+    add_offsets = bool(compact_dtype) and not use_cooc
+    if add_offsets:
+        store_dtype = np.uint8
+    elif compact_dtype and use_cooc:
+        assert m * NCODES + n_combos + 1 <= 65536
+        store_dtype = np.uint16
+    else:
+        store_dtype = np.int32
+    for c in range(c_n):
+        codes_c = index.cluster_codes(c)
+        enc = encodings[c]
+        if use_cooc and enc is not None:
+            a = enc.addrs.astype(np.int32)
+            if a.shape[1] < width:
+                pad = np.full((a.shape[0], width - a.shape[1]), sentinel, np.int32)
+                a = np.concatenate([a, pad], axis=1)
+            else:
+                a = a[:, :width]
+        elif add_offsets:
+            a = codes_c.astype(np.int32)  # raw codes; offsets added in-kernel
+        else:
+            a = np.arange(m, dtype=np.int32)[None, :] * NCODES + codes_c.astype(np.int32)
+            if width > m:
+                a = np.concatenate(
+                    [a, np.full((a.shape[0], width - m), sentinel, np.int32)], axis=1
+                )
+        cluster_addrs.append(a)
+
+    # ---- per-device packing, block-aligned slots --------------------------
+    sizes = index.cluster_sizes()
+    s_max = max((len(cl) for cl in placement.dev_clusters), default=1)
+    s_max = max(s_max, 1)
+    window = _align(int(max(sizes.max(initial=1), 1)), block_n)
+
+    caps = []
+    for d in range(ndev):
+        caps.append(sum(_align(int(sizes[c]), block_n) for c in placement.dev_clusters[d]))
+    cap = max(max(caps, default=block_n), block_n) + window  # window overrun pad
+
+    fill = 0 if add_offsets else sentinel  # padding rows are n_valid-masked
+    codes = np.full((ndev, cap, width), fill, store_dtype)
+    vec_ids = np.full((ndev, cap), -1, np.int32)
+    slot_start = np.zeros((ndev, s_max), np.int32)
+    slot_size = np.zeros((ndev, s_max), np.int32)
+    slot_cluster = np.full((ndev, s_max), -1, np.int32)
+    combo_addrs = np.zeros(
+        (ndev, s_max, n_combos if use_cooc else 0, combo_len), np.int32
+    )
+    local_slot: dict[tuple[int, int], int] = {}
+
+    for d in range(ndev):
+        cursor = 0
+        for s, c in enumerate(placement.dev_clusters[d]):
+            rows = cluster_addrs[c]
+            n_rows = rows.shape[0]
+            codes[d, cursor : cursor + n_rows] = rows
+            vec_ids[d, cursor : cursor + n_rows] = index.cluster_ids(c)
+            slot_start[d, s] = cursor
+            slot_size[d, s] = n_rows
+            slot_cluster[d, s] = c
+            if use_cooc:
+                combo_addrs[d, s] = cluster_combo_addrs[c]
+            local_slot[(d, c)] = s
+            cursor += _align(n_rows, block_n)
+
+    return DeviceShards(
+        codes=codes,
+        add_offsets=add_offsets,
+        vec_ids=vec_ids,
+        slot_start=slot_start,
+        slot_size=slot_size,
+        slot_cluster=slot_cluster,
+        combo_addrs=combo_addrs,
+        local_slot=local_slot,
+        m_subspaces=m,
+        n_combos=n_combos if use_cooc else 0,
+        block_n=block_n,
+        window=window,
+    )

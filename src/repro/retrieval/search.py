@@ -1,0 +1,160 @@
+"""The online sharded search step (paper Fig. 5 right half) under shard_map.
+
+Per device (== DPU):
+  1. build LUTs for the (query, cluster) pairs Algorithm 2 assigned here
+     (the host ships q - c residuals, the paper ships the same);
+  2. extend each LUT with its cluster's combo partial sums (§4.3);
+  3. per-pair fused ADC scan + top-k Pallas kernel over the cluster's
+     block-aligned window (§4.2 + §4.4);
+  4. per-query local merge of pair results (thread-heap merge analogue);
+  5. one k-sized all-gather over the 'dpu' axis + final top-k
+     (replaces the paper's DPU->CPU partial top-k transfer).
+
+Everything is shape-static: P pairs/device, window rows/pair, Q queries.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ops
+
+DPU_AXIS = "dpu"
+
+
+def _device_search(
+    codes,        # (cap, W) int32        [device-local]
+    vec_ids,      # (cap,) int32          [device-local]
+    slot_start,   # (S,) int32            [device-local]
+    slot_size,    # (S,) int32            [device-local]
+    combo_addrs,  # (S, m, L) int32       [device-local]  (m may be 0)
+    codebook,     # (M, 256, dsub) f32    [replicated]
+    qmc,          # (P, D) f32            [device-local pairs]
+    pair_q,       # (P,) int32
+    pair_slot,    # (P,) int32
+    pair_valid,   # (P,) bool
+    *,
+    n_queries: int,
+    k: int,
+    block_n: int,
+    window: int,
+    path: str,
+    add_offsets: bool,
+    interpret: bool | None,
+):
+    p, d_dim = qmc.shape
+    m = codebook.shape[0]
+    dsub = codebook.shape[2]
+
+    # --- stage (b): LUT construction on device ------------------------------
+    luts = ops.build_luts(
+        codebook, qmc.reshape(p, m, dsub), interpret=interpret
+    )  # (P, M, 256)
+    if combo_addrs.shape[1] > 0:
+        pair_combos = combo_addrs[pair_slot]  # (P, m_combos, L)
+        from repro.kernels.lut_build import ext_lut_pairs_kernel
+
+        t_pad = m * 256 + combo_addrs.shape[1] + 1
+        tables = ext_lut_pairs_kernel(
+            luts,
+            pair_combos,
+            t_pad=t_pad,
+            interpret=bool(interpret)
+            if interpret is not None
+            else jax.default_backend() != "tpu",
+        )  # (P, A)
+    else:
+        zero = jnp.zeros((p, 1), luts.dtype)
+        tables = jnp.concatenate([luts.reshape(p, -1), zero], axis=-1)
+
+    # --- stages (c)+(d): per-pair windowed fused scan + top-k ---------------
+    # windows are scalar-prefetch indexed inside the kernel (never
+    # materialized): the HBM->VMEM streaming loop of the DPU.
+    starts = slot_start[pair_slot]  # (P,) block-aligned by layout.py
+    n_valid = jnp.where(pair_valid, slot_size[pair_slot], 0)
+    tv, ti = ops.adc_topk_windows(
+        tables, codes, starts, n_valid, k,
+        window=window, block_n=block_n, path=path,
+        add_offsets=add_offsets, interpret=interpret,
+    )  # (P, k) dists, (P, k) window-row idx
+
+    rows = starts[:, None] + ti                     # (P, k) device rows
+    gids = jnp.where(ti >= 0, vec_ids[jnp.clip(rows, 0, None)], -1)
+    tv = jnp.where(pair_valid[:, None], tv, jnp.inf)
+
+    # --- per-query local merge (thread-local heap merge analogue) -----------
+    qsel = pair_q[None, :] == jnp.arange(n_queries)[:, None]   # (Q, P)
+    bd = jnp.where(qsel[:, :, None], tv[None], jnp.inf)        # (Q, P, k)
+    bi = jnp.broadcast_to(gids[None], bd.shape)
+    bd = bd.reshape(n_queries, -1)
+    bi = bi.reshape(n_queries, -1)
+    neg, sel = jax.lax.top_k(-bd, k)                           # (Q, k)
+    local_d = -neg
+    local_i = jnp.take_along_axis(bi, sel, axis=-1)
+
+    # --- global merge over the 'dpu' axis ------------------------------------
+    all_d = jax.lax.all_gather(local_d, DPU_AXIS, axis=0)      # (ndev, Q, k)
+    all_i = jax.lax.all_gather(local_i, DPU_AXIS, axis=0)
+    ndev = all_d.shape[0]
+    all_d = jnp.moveaxis(all_d, 0, 1).reshape(n_queries, ndev * k)
+    all_i = jnp.moveaxis(all_i, 0, 1).reshape(n_queries, ndev * k)
+    neg, sel = jax.lax.top_k(-all_d, k)
+    out_d = -neg
+    out_i = jnp.take_along_axis(all_i, sel, axis=-1)
+    return out_d, out_i
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=(
+        "mesh", "n_queries", "k", "block_n", "window", "path",
+        "add_offsets", "interpret",
+    ),
+)
+def sharded_search(
+    codes, vec_ids, slot_start, slot_size, combo_addrs,
+    codebook, qmc, pair_q, pair_slot, pair_valid,
+    *,
+    mesh: jax.sharding.Mesh,
+    n_queries: int,
+    k: int,
+    block_n: int,
+    window: int,
+    path: str = "gather",
+    add_offsets: bool = False,
+    interpret: bool | None = None,
+):
+    """shard_map wrapper: leading dim of device arrays is the 'dpu' axis."""
+    spec_dev = jax.sharding.PartitionSpec(DPU_AXIS)
+    spec_rep = jax.sharding.PartitionSpec()
+    fn = functools.partial(
+        _device_search,
+        n_queries=n_queries, k=k, block_n=block_n,
+        window=window, path=path, add_offsets=add_offsets,
+        interpret=interpret,
+    )
+
+    def per_device(codes, vec_ids, slot_start, slot_size, combo_addrs,
+                   codebook, qmc, pair_q, pair_slot, pair_valid):
+        # strip the leading (size-1) shard dim
+        return fn(
+            codes[0], vec_ids[0], slot_start[0], slot_size[0], combo_addrs[0],
+            codebook, qmc[0], pair_q[0], pair_slot[0], pair_valid[0],
+        )
+
+    return jax.shard_map(
+        per_device,
+        mesh=mesh,
+        in_specs=(
+            spec_dev, spec_dev, spec_dev, spec_dev, spec_dev,
+            spec_rep, spec_dev, spec_dev, spec_dev, spec_dev,
+        ),
+        out_specs=(spec_rep, spec_rep),
+        check_vma=False,
+    )(
+        codes, vec_ids, slot_start, slot_size, combo_addrs,
+        codebook, qmc, pair_q, pair_slot, pair_valid,
+    )

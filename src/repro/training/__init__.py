@@ -1,0 +1,1 @@
+from repro.training.trainer import Trainer, loss_fn, make_train_step

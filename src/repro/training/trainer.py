@@ -1,0 +1,208 @@
+"""Training substrate: loss, jitted sharded train step, fault-tolerant loop.
+
+Distribution (DESIGN.md §3):
+  batch  : sharded over ('pod', 'data')
+  params : FSDP over 'data', TP/EP over 'model', replicated over 'pod'
+  grads  : all-reduced over 'pod' (optionally int8-compressed, shard_map)
+  opt    : same shards as params (ZeRO)
+
+Fault tolerance: deterministic data (seed, step) + atomic checkpoints; the
+Trainer retries a failed step, restores the latest checkpoint after repeated
+failures, and resumes -- the driver-level behaviour a 1000-node job needs
+(node loss surfaces as a step failure; the replacement worker replays from
+the last checkpoint with identical data).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+import logging
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.checkpoint import latest_step, restore, save
+from repro.models import forward_train
+from repro.models.sharding import batch_spec, param_shardings
+from repro.optim import AdamWConfig, adamw_update, cosine_schedule, init_opt_state
+from repro.training.compression import compressed_psum_pods
+
+log = logging.getLogger("repro.trainer")
+
+
+def loss_fn(params, cfg, tokens, embeddings=None, aux_weight: float = 0.01,
+            logits_sharding=None):
+    """Next-token cross entropy (+ MoE aux loss).
+
+    logits_sharding keeps the (B, S, V) tensor vocab-sharded over 'model'
+    through the CE math -- without it GSPMD replicates full logits
+    (B x S x V x 4 bytes of all-reduce per step; measured 100x the rest of
+    the step's collectives on yi-6b/251k-vocab qwen3)."""
+    logits, aux = forward_train(
+        params, cfg, tokens, embeddings, logits_sharding=logits_sharding
+    )
+    # VLM: frontend prefix positions predict nothing; align on token tail
+    n_front = logits.shape[1] - tokens.shape[1]
+    logits = logits[:, n_front:]
+    tgt = tokens[:, 1:]
+    lg = logits[:, :-1].astype(jnp.float32)
+    logz = jax.nn.logsumexp(lg, axis=-1)
+    # gold logit via a one-hot contraction: keeps the vocab dim sharded
+    # (take_along_axis over a sharded axis makes GSPMD gather full logits)
+    onehot = jax.nn.one_hot(tgt, lg.shape[-1], dtype=lg.dtype)
+    gold = jnp.einsum("bsv,bsv->bs", lg, onehot)
+    ce = jnp.mean(logz - gold)
+    return ce + aux_weight * aux, (ce, aux)
+
+
+def make_train_step(
+    cfg,
+    mesh: jax.sharding.Mesh,
+    opt_cfg: AdamWConfig,
+    grad_compress: bool = False,
+    donate: bool = True,
+):
+    """Builds the jitted train step for (params, opt, tokens[, embeddings])."""
+    has_frontend = cfg.frontend == "vision"
+    from repro.models.sharding import fit_spec, mesh_axes
+
+    dp, _, tp = mesh_axes(mesh)
+    if grad_compress and "pod" in mesh.axis_names:
+        # inside the pod-manual shard_map only auto axes may be constrained
+        dp = tuple(a for a in dp if a != "pod")
+    tp_ok = tp is not None and cfg.vocab_size % mesh.shape[tp] == 0
+    lg_spec = jax.sharding.PartitionSpec(
+        dp if dp else None, None, tp if tp_ok else None
+    )
+    lg_sh = jax.sharding.NamedSharding(mesh, lg_spec)
+    del fit_spec  # (vocab-dim divisibility handled above)
+
+    def step_fn(params, opt_state, tokens, embeddings=None):
+        (loss, (ce, aux)), grads = jax.value_and_grad(
+            lambda p: loss_fn(
+                p, cfg, tokens, embeddings, logits_sharding=lg_sh
+            ),
+            has_aux=True,
+        )(params)
+        if grad_compress and "pod" in mesh.axis_names:
+            grads = compressed_psum_pods(grads, mesh)
+        lr = cosine_schedule(opt_state["step"], opt_cfg)
+        params, opt_state, metrics = adamw_update(
+            params, grads, opt_state, opt_cfg, lr
+        )
+        metrics.update({"loss": loss, "ce": ce, "aux": aux})
+        return params, opt_state, metrics
+
+    if grad_compress and "pod" in mesh.axis_names:
+        inner = step_fn
+
+        def step_fn(params, opt_state, tokens, embeddings=None):  # noqa: F811
+            args = (params, opt_state, tokens) + (
+                (embeddings,) if has_frontend else ()
+            )
+            f = inner if has_frontend else (
+                lambda p, o, t: inner(p, o, t, None)
+            )
+            p_rep = jax.sharding.PartitionSpec()
+            p_pod = jax.sharding.PartitionSpec("pod")
+            in_specs = (p_rep, p_rep, p_pod) + (
+                (p_pod,) if has_frontend else ()
+            )
+            return jax.shard_map(
+                f,
+                mesh=mesh,
+                in_specs=in_specs,
+                out_specs=(p_rep, p_rep, p_rep),
+                axis_names={"pod"},
+                check_vma=False,
+            )(*args)
+
+    donate_args = (0, 1) if donate else ()
+    return jax.jit(step_fn, donate_argnums=donate_args)
+
+
+def shard_train_state(params, opt_state, mesh):
+    """Place params + optimizer state according to the sharding rules."""
+    pshard = param_shardings(params, mesh)
+    oshard = {
+        "mu": pshard,
+        "nu": pshard,
+        "step": jax.sharding.NamedSharding(mesh, jax.sharding.PartitionSpec()),
+    }
+    params = jax.device_put(params, pshard)
+    opt_state = jax.device_put(opt_state, oshard)
+    return params, opt_state, pshard, oshard
+
+
+@dataclasses.dataclass
+class Trainer:
+    """Fault-tolerant training driver."""
+
+    cfg: object
+    mesh: jax.sharding.Mesh
+    opt_cfg: AdamWConfig
+    dataset: object
+    ckpt_dir: str | None = None
+    ckpt_every: int = 50
+    max_retries: int = 3
+    grad_compress: bool = False
+
+    def run(self, key: jax.Array, n_steps: int, params=None):
+        from repro.models import init_params
+
+        if params is None:
+            params = init_params(key, self.cfg)
+        opt_state = init_opt_state(params)
+        params, opt_state, pshard, oshard = shard_train_state(
+            params, opt_state, self.mesh
+        )
+        step_jit = make_train_step(
+            self.cfg, self.mesh, self.opt_cfg, self.grad_compress
+        )
+        bspec = jax.sharding.NamedSharding(self.mesh, batch_spec(self.mesh))
+
+        start = 0
+        if self.ckpt_dir and (ls := latest_step(self.ckpt_dir)) is not None:
+            params, opt_state, meta = restore(
+                self.ckpt_dir, ls, params, opt_state, pshard, oshard
+            )
+            start = meta["step"]
+            log.info("restored checkpoint at step %d", start)
+
+        history = []
+        step = start
+        retries = 0
+        t0 = time.time()
+        while step < n_steps:
+            try:
+                tokens = jax.device_put(self.dataset.batch(step), bspec)
+                args = [params, opt_state, tokens]
+                if self.cfg.frontend == "vision":
+                    emb = self.dataset.frontend_embeddings(
+                        step, self.cfg.n_frontend_tokens, self.cfg.d_model
+                    )
+                    args.append(jax.device_put(emb, bspec))
+                params, opt_state, metrics = step_jit(*args)
+                metrics = {k: float(v) for k, v in metrics.items()}
+                history.append({"step": step, **metrics})
+                retries = 0
+                step += 1
+                if self.ckpt_dir and step % self.ckpt_every == 0:
+                    save(self.ckpt_dir, step, params, opt_state)
+            except Exception:  # noqa: BLE001 -- node-failure surface
+                retries += 1
+                log.exception("step %d failed (retry %d)", step, retries)
+                if retries > self.max_retries:
+                    raise
+                if self.ckpt_dir and (ls := latest_step(self.ckpt_dir)) is not None:
+                    params, opt_state, meta = restore(
+                        self.ckpt_dir, ls, params, opt_state, pshard, oshard
+                    )
+                    step = meta["step"]
+        if self.ckpt_dir:
+            save(self.ckpt_dir, step, params, opt_state)
+        wall = time.time() - t0
+        return params, opt_state, history, wall

@@ -1,0 +1,28 @@
+import numpy as np
+import pytest
+
+# NOTE: no XLA_FLAGS here on purpose -- smoke tests and benches must see the
+# single real CPU device; only launch/dryrun.py fakes 512 devices.
+
+
+@pytest.fixture(scope="session")
+def rng():
+    return np.random.default_rng(0)
+
+
+@pytest.fixture(scope="session")
+def clustered_data():
+    """Shared small clustered dataset (xs, centers, queries, history)."""
+    rng = np.random.default_rng(0)
+    centers = rng.normal(0, 5, (32, 32)).astype(np.float32)
+    assign = rng.integers(0, 32, 12000)
+    xs = centers[assign] + rng.normal(0, 1, (12000, 32)).astype(np.float32)
+    qs = (
+        centers[rng.integers(0, 32, 24)]
+        + rng.normal(0, 1, (24, 32)).astype(np.float32)
+    )
+    hist = (
+        centers[rng.integers(0, 32, 100)]
+        + rng.normal(0, 1, (100, 32)).astype(np.float32)
+    )
+    return xs, centers, qs, hist

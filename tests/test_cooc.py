@@ -1,0 +1,120 @@
+"""§4.3 co-occurrence encoding: mining, re-encoding, distance preservation
+(the paper's recall-invariance claim), incl. hypothesis property tests."""
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.cooc import (
+    ComboSet,
+    build_ext_lut,
+    max_combo_frequency,
+    mine_combos,
+    reencode,
+)
+from repro.core.search import adc_scan, adc_scan_flat
+
+SETTINGS = dict(max_examples=20, deadline=None)
+
+
+def _inject(codes, rows_mask, cols, vals):
+    codes[np.ix_(np.flatnonzero(rows_mask), cols)] = vals
+    return codes
+
+
+def test_miner_finds_planted_combo(rng):
+    codes = rng.integers(0, 256, (4000, 16)).astype(np.uint8)
+    _inject(codes, rng.random(4000) < 0.35, [2, 7, 11], [9, 99, 199])
+    combos = mine_combos(codes, n_combos=16)
+    found = {
+        tuple(sorted(zip(c, v)))
+        for c, v in zip(combos.cols.tolist(), combos.codes.tolist())
+    }
+    assert tuple(sorted([(2, 9), (7, 99), (11, 199)])) in found
+    # support ordering
+    assert (np.diff(combos.support) <= 0).all()
+
+
+def test_reencode_shrinks_length(rng):
+    codes = rng.integers(0, 256, (3000, 16)).astype(np.uint8)
+    _inject(codes, rng.random(3000) < 0.5, [0, 1, 2], [1, 15, 26])
+    combos = mine_combos(codes, n_combos=8)
+    enc = reencode(codes, combos)
+    assert enc.length_reduction() > 0.04
+    assert enc.addrs.dtype == np.uint16  # paper: uint16 direct addresses
+    assert (enc.lengths <= 16).all() and (enc.lengths >= 1).all()
+
+
+def test_distances_preserved_exactly(rng):
+    """The central §4.3 invariant: re-encoded flat scan == plain ADC."""
+    m = 16
+    codes = rng.integers(0, 256, (2000, m)).astype(np.uint8)
+    _inject(codes, rng.random(2000) < 0.4, [0, 1, 2], [1, 15, 26])
+    _inject(codes, rng.random(2000) < 0.2, [5, 9, 14], [7, 70, 170])
+    combos = mine_combos(codes, n_combos=32)
+    enc = reencode(codes, combos)
+    lut = jnp.asarray(rng.normal(0, 1, (m, 256)).astype(np.float32))
+    ext = build_ext_lut(
+        lut, jnp.asarray(combos.cols), jnp.asarray(combos.codes)
+    )
+    d_plain = adc_scan(lut, jnp.asarray(codes))
+    d_flat = adc_scan_flat(ext, jnp.asarray(enc.addrs.astype(np.int32)))
+    np.testing.assert_allclose(d_plain, d_flat, rtol=1e-5, atol=1e-4)
+
+
+def test_sentinel_address_is_zero(rng):
+    codes = rng.integers(0, 256, (100, 8)).astype(np.uint8)
+    combos = mine_combos(codes, n_combos=4)
+    enc = reencode(codes, combos)
+    lut = jnp.asarray(rng.normal(0, 1, (8, 256)).astype(np.float32))
+    ext = build_ext_lut(
+        lut, jnp.asarray(combos.cols), jnp.asarray(combos.codes)
+    )
+    assert float(ext[enc.sentinel]) == 0.0
+
+
+def test_max_combo_frequency_planted(rng):
+    codes = rng.integers(0, 256, (2000, 8)).astype(np.uint8)
+    _inject(codes, rng.random(2000) < 0.3, [3, 4, 5], [1, 2, 3])
+    freq = max_combo_frequency(codes, lengths=(3,))
+    assert freq[3] >= 0.25
+
+
+@given(
+    n=st.integers(10, 400),
+    m=st.sampled_from([4, 8, 16]),
+    n_combos=st.integers(1, 32),
+    seed=st.integers(0, 10_000),
+)
+@settings(**SETTINGS)
+def test_property_distance_invariance(n, m, n_combos, seed):
+    """For ANY codes and ANY mined combo set, re-encoding preserves ADC
+    distances -- the optimization can never change recall."""
+    rng = np.random.default_rng(seed)
+    # low-cardinality codes -> dense co-occurrence structure
+    codes = rng.integers(0, 7, (n, m)).astype(np.uint8)
+    combos = mine_combos(codes, n_combos=n_combos, max_rows=n)
+    enc = reencode(codes, combos)
+    lut = rng.normal(0, 1, (m, 256)).astype(np.float32)
+    ext = build_ext_lut(
+        jnp.asarray(lut), jnp.asarray(combos.cols), jnp.asarray(combos.codes)
+    )
+    d_plain = np.asarray(adc_scan(jnp.asarray(lut), jnp.asarray(codes)))
+    d_flat = np.asarray(
+        adc_scan_flat(ext, jnp.asarray(enc.addrs.astype(np.int32)))
+    )
+    np.testing.assert_allclose(d_plain, d_flat, rtol=1e-4, atol=1e-4)
+
+
+@given(seed=st.integers(0, 10_000))
+@settings(**SETTINGS)
+def test_property_reencode_lengths(seed):
+    rng = np.random.default_rng(seed)
+    codes = rng.integers(0, 5, (200, 8)).astype(np.uint8)
+    combos = mine_combos(codes, n_combos=16, max_rows=200)
+    enc = reencode(codes, combos)
+    # each matched combo removes exactly combo_len - 1 entries
+    assert ((8 - enc.lengths) % (combos.combo_len - 1) == 0).all()
+    # addresses inside table bounds
+    assert int(enc.addrs.max(initial=0)) < enc.table_size

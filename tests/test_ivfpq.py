@@ -1,0 +1,104 @@
+"""Core IVFPQ correctness: k-means, PQ round-trip, LUT math, recall."""
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.core import build_index, flat_search, kmeans, pq_encode, train_pq
+from repro.core.index import brute_force, filter_clusters, recall_at_k
+from repro.core.lut import build_lut
+from repro.core.pq import pq_decode
+from repro.core.search import adc_scan, merge_topk, topk_smallest
+
+
+def test_kmeans_reduces_distortion(rng):
+    x = jnp.asarray(rng.normal(0, 1, (2000, 8)).astype(np.float32))
+    c, assign = kmeans(jax.random.PRNGKey(0), x, 16, iters=15)
+    d = jnp.sum((x - c[assign]) ** 2, axis=1).mean()
+    c1, a1 = kmeans(jax.random.PRNGKey(0), x, 16, iters=1)
+    d1 = jnp.sum((x - c1[a1]) ** 2, axis=1).mean()
+    assert float(d) < float(d1)
+    assert len(np.unique(np.asarray(assign))) > 1
+
+
+def test_pq_roundtrip_reduces_error(rng):
+    res = rng.normal(0, 1, (3000, 16)).astype(np.float32)
+    cb = train_pq(jax.random.PRNGKey(1), jnp.asarray(res), m=4, iters=10)
+    codes = pq_encode(cb, jnp.asarray(res))
+    assert codes.shape == (3000, 4) and codes.dtype == jnp.uint8
+    recon = pq_decode(cb, codes)
+    err = float(jnp.mean(jnp.sum((jnp.asarray(res) - recon) ** 2, axis=1)))
+    base = float(jnp.mean(jnp.sum(jnp.asarray(res) ** 2, axis=1)))
+    assert err < 0.9 * base  # quantization must explain variance
+
+
+def test_lut_adc_equals_decoded_distance(rng):
+    """ADC distance == exact distance to the DECODED (quantized) point."""
+    m, dsub = 8, 4
+    cb = jnp.asarray(rng.normal(0, 1, (m, 256, dsub)).astype(np.float32))
+    codes = jnp.asarray(rng.integers(0, 256, (500, m)).astype(np.uint8))
+    q = jnp.asarray(rng.normal(0, 1, (m * dsub,)).astype(np.float32))
+    lut = build_lut(cb, q)
+    adc = adc_scan(lut, codes)
+    recon = pq_decode(cb, codes)
+    exact = jnp.sum((recon - q[None, :]) ** 2, axis=1)
+    np.testing.assert_allclose(adc, exact, rtol=1e-4, atol=1e-4)
+
+
+def test_topk_merge_equals_global(rng):
+    a = jnp.asarray(rng.normal(0, 1, (100,)).astype(np.float32))
+    b = jnp.asarray(rng.normal(0, 1, (80,)).astype(np.float32))
+    va, ia = topk_smallest(a, 10)
+    vb, ib = topk_smallest(b, 10)
+    mv, mi = merge_topk(va, ia, vb, ib + 100, 10)
+    gv, gi = topk_smallest(jnp.concatenate([a, b]), 10)
+    np.testing.assert_allclose(mv, gv, rtol=1e-6)
+    assert jnp.all(mi == gi)
+
+
+def test_recall_reasonable(clustered_data):
+    xs, centers, qs, _ = clustered_data
+    idx = build_index(
+        jax.random.PRNGKey(0), xs, n_clusters=32, m=8,
+        kmeans_iters=10, pq_iters=8,
+    )
+    assert idx.n_vectors == len(xs)
+    assert np.all(np.diff(idx.offsets) >= 0)
+    # every vector appears exactly once
+    assert len(np.unique(idx.vec_ids)) == len(xs)
+    d, i = flat_search(idx, qs, nprobe=32, k=10)  # all clusters: PQ-only loss
+    _, ti = brute_force(xs, qs, 10)
+    r = recall_at_k(i, ti)
+    assert r > 0.45, f"recall@10 too low: {r}"
+    # distances ascending per row
+    assert np.all(np.diff(d, axis=1) >= -1e-5)
+
+
+def test_more_probes_never_hurt_recall(clustered_data):
+    xs, _, qs, _ = clustered_data
+    idx = build_index(
+        jax.random.PRNGKey(0), xs, n_clusters=32, m=8,
+        kmeans_iters=10, pq_iters=8,
+    )
+    _, ti = brute_force(xs, qs, 10)
+    r = []
+    for nprobe in (2, 8, 32):
+        _, i = flat_search(idx, qs, nprobe=nprobe, k=10)
+        r.append(recall_at_k(i, ti))
+    assert r[0] <= r[1] + 1e-9 and r[1] <= r[2] + 1e-9
+
+
+def test_filter_clusters_matches_numpy(clustered_data):
+    xs, _, qs, _ = clustered_data
+    cents = xs[:16]
+    cids, qmc = filter_clusters(jnp.asarray(cents), jnp.asarray(qs), 4)
+    d2 = ((qs[:, None, :] - cents[None]) ** 2).sum(-1)
+    want = np.argsort(d2, axis=1, kind="stable")[:, :4]
+    got = np.sort(np.asarray(cids), axis=1)
+    np.testing.assert_array_equal(np.sort(want, axis=1), got)
+    np.testing.assert_allclose(
+        np.asarray(qmc),
+        qs[:, None, :] - cents[np.asarray(cids)],
+        rtol=1e-6,
+    )

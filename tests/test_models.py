@@ -1,0 +1,123 @@
+"""Per-architecture smoke tests: reduced same-family config, one forward /
+train step on CPU, output shapes, no NaNs; prefill+decode == full forward."""
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.configs import ARCH_IDS, get_config, reduced_config
+from repro.models import (
+    decode_step,
+    forward_train,
+    init_params,
+    prefill,
+)
+from repro.optim import AdamWConfig
+from repro.training.trainer import loss_fn, make_train_step
+from repro.optim import init_opt_state
+
+B, S = 2, 64
+
+
+def _inputs(cfg, key, s=S):
+    tok = jax.random.randint(key, (B, s), 0, cfg.vocab_size)
+    emb = None
+    if cfg.frontend == "vision":
+        tok = tok[:, : s - cfg.n_frontend_tokens]
+        emb = jax.random.normal(
+            key, (B, cfg.n_frontend_tokens, cfg.d_model), jnp.float32
+        )
+    return tok, emb
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_smoke_forward(arch):
+    cfg = reduced_config(get_config(arch))
+    params = init_params(jax.random.PRNGKey(0), cfg)
+    tok, emb = _inputs(cfg, jax.random.PRNGKey(1))
+    logits, aux = forward_train(params, cfg, tok, emb)
+    assert logits.shape == (B, S, cfg.vocab_size)
+    assert np.isfinite(np.asarray(logits)).all()
+    assert np.isfinite(float(aux))
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_smoke_train_step(arch):
+    cfg = reduced_config(get_config(arch))
+    mesh = jax.sharding.Mesh(
+        np.asarray(jax.devices()[:1]).reshape(1, 1), ("data", "model")
+    )
+    params = init_params(jax.random.PRNGKey(0), cfg)
+    opt = init_opt_state(params)
+    step = make_train_step(
+        cfg, mesh, AdamWConfig(lr=1e-3, warmup_steps=1), donate=False
+    )
+    tok, emb = _inputs(cfg, jax.random.PRNGKey(1))
+    args = (params, opt, tok) + ((emb,) if emb is not None else ())
+    new_params, new_opt, metrics = step(*args)
+    assert np.isfinite(metrics["loss"])
+    assert int(new_opt["step"]) == 1
+    # step again (warmup LR is 0 at step 0 by design): params must move
+    args = (new_params, new_opt, tok) + ((emb,) if emb is not None else ())
+    new_params2, new_opt2, metrics2 = step(*args)
+    assert np.isfinite(metrics2["loss"])
+    diff = jax.tree.map(
+        lambda a, b: float(jnp.max(jnp.abs(a.astype(jnp.float32) - b.astype(jnp.float32)))),
+        new_params, new_params2,
+    )
+    assert max(jax.tree.leaves(diff)) > 0
+
+
+@pytest.mark.parametrize(
+    "arch",
+    ["qwen3-8b", "phi3.5-moe-42b", "deepseek-v2-236b", "zamba2-7b",
+     "mamba2-130m", "musicgen-medium"],
+)
+def test_prefill_decode_matches_forward(arch):
+    cfg = reduced_config(get_config(arch), capacity_factor=4.0)
+    params = init_params(jax.random.PRNGKey(0), cfg)
+    tok, _ = _inputs(cfg, jax.random.PRNGKey(1))
+    lg, cache = prefill(params, cfg, tok[:, :32], max_len=S, cache_dtype=jnp.float32)
+    l2, cache = decode_step(params, cfg, tok[:, 32:33], cache, jnp.int32(32))
+    full, _ = forward_train(params, cfg, tok[:, :33])
+    np.testing.assert_allclose(
+        np.asarray(lg[:, 0]), np.asarray(full[:, 31]), rtol=2e-3, atol=2e-3
+    )
+    np.testing.assert_allclose(
+        np.asarray(l2[:, 0]), np.asarray(full[:, 32]), rtol=2e-3, atol=2e-3
+    )
+
+
+def test_loss_decreases_qwen3():
+    cfg = reduced_config(get_config("qwen3-8b"))
+    mesh = jax.sharding.Mesh(
+        np.asarray(jax.devices()[:1]).reshape(1, 1), ("data", "model")
+    )
+    from repro.data import SyntheticTokenDataset
+
+    ds = SyntheticTokenDataset(cfg.vocab_size, 64, 4)
+    params = init_params(jax.random.PRNGKey(0), cfg)
+    opt = init_opt_state(params)
+    step = make_train_step(cfg, mesh, AdamWConfig(lr=3e-3, warmup_steps=2, total_steps=30))
+    losses = []
+    for i in range(25):
+        params, opt, m = step(params, opt, jnp.asarray(ds.batch(i)))
+        losses.append(float(m["loss"]))
+    assert np.mean(losses[-5:]) < np.mean(losses[:5]) - 0.1, losses
+
+
+def test_n_params_accounting():
+    """Config param counts track actual init sizes within 5%."""
+    for arch in ("qwen3-8b", "yi-6b", "mamba2-130m"):
+        cfg = get_config(arch)
+        # count analytically vs init at reduced scale won't match full cfg;
+        # instead check full-config eval_shape totals
+        import functools
+
+        shapes = jax.eval_shape(
+            functools.partial(init_params, cfg=cfg), jax.random.PRNGKey(0)
+        )
+        total = sum(int(np.prod(s.shape)) for s in jax.tree.leaves(shapes))
+        est = cfg.n_params()
+        assert abs(total - est) / total < 0.05, (arch, total, est)

@@ -1,0 +1,136 @@
+"""Algorithm 1 (placement) + Algorithm 2 (scheduling) invariants,
+including hypothesis property tests."""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.placement import estimate_frequencies, place_clusters
+from repro.core.scheduling import schedule_queries
+
+SETTINGS = dict(max_examples=25, deadline=None)
+
+
+def _zipf_sizes(rng, c):
+    return (rng.zipf(1.4, c) * 40).clip(5, 30000).astype(np.int64)
+
+
+def test_every_cluster_placed(rng):
+    sizes = _zipf_sizes(rng, 200)
+    freqs = rng.random(200)
+    pl = place_clusters(sizes, freqs, ndev=16)
+    assert all(len(r) >= 1 for r in pl.replicas)
+    # replicas of one cluster live on distinct devices
+    for r in pl.replicas:
+        assert len(set(r)) == len(r)
+    # device bookkeeping consistent
+    for d in range(16):
+        assert sorted(
+            c for c in range(200) if d in pl.replicas[c]
+        ) == sorted(pl.dev_clusters[d])
+
+
+def test_hot_clusters_replicated(rng):
+    sizes = np.full(64, 1000, np.int64)
+    freqs = np.full(64, 1.0)
+    freqs[0] = 500.0  # paper Fig. 4a: up to 500x access skew
+    pl = place_clusters(sizes, freqs, ndev=8)
+    assert len(pl.replicas[0]) > 1, "hot cluster must be replicated"
+
+
+def test_placement_balances_load(rng):
+    sizes = _zipf_sizes(rng, 256)
+    freqs = rng.zipf(1.3, 256).astype(np.float64)
+    pl = place_clusters(sizes, freqs, ndev=16, centroids=rng.normal(0, 1, (256, 8)))
+    assert pl.max_imbalance() < 1.6, pl.max_imbalance()
+
+
+def test_schedule_covers_all_pairs(rng):
+    sizes = _zipf_sizes(rng, 128)
+    freqs = rng.random(128)
+    pl = place_clusters(sizes, freqs, ndev=8)
+    probed = np.stack(
+        [rng.choice(128, 8, replace=False) for _ in range(40)]
+    )
+    sch = schedule_queries(probed, sizes, pl)
+    got = sorted(
+        (q, c) for d in range(8) for q, c in sch.assigned[d]
+    )
+    want = sorted((q, int(c)) for q in range(40) for c in probed[q])
+    assert got == want
+    # every assignment on a device that holds a replica
+    for d in range(8):
+        for _, c in sch.assigned[d]:
+            assert d in pl.replicas[c]
+
+
+def test_schedule_beats_naive(rng):
+    """Algorithm 2 balances better than hashing queries to devices."""
+    sizes = _zipf_sizes(rng, 256)
+    freqs = rng.zipf(1.2, 256).astype(np.float64)
+    pl = place_clusters(sizes, freqs, ndev=16)
+    p = freqs / freqs.sum()
+    probed = np.stack(
+        [rng.choice(256, 16, replace=False, p=p) for _ in range(128)]
+    )
+    sch = schedule_queries(probed, sizes, pl)
+    # naive: first replica always
+    naive = np.zeros(16)
+    for q in range(128):
+        for c in probed[q]:
+            naive[pl.replicas[int(c)][0]] += sizes[int(c)]
+    naive_imb = naive.max() / naive.mean()
+    assert sch.max_imbalance() <= naive_imb + 1e-9
+
+
+def test_estimate_frequencies():
+    hist = np.array([[0, 1], [0, 2], [0, 1]])
+    f = estimate_frequencies(hist, 4, smoothing=0.0)
+    np.testing.assert_allclose(f, [1.0, 2 / 3, 1 / 3, 0.0])
+
+
+@given(
+    c=st.integers(4, 64),
+    ndev=st.integers(1, 12),
+    seed=st.integers(0, 1000),
+)
+@settings(**SETTINGS)
+def test_placement_properties(c, ndev, seed):
+    rng = np.random.default_rng(seed)
+    sizes = (rng.zipf(1.5, c) * 10).clip(1, 5000).astype(np.int64)
+    freqs = rng.random(c) + 1e-3
+    pl = place_clusters(sizes, freqs, ndev)
+    assert all(len(r) >= 1 for r in pl.replicas)
+    assert all(len(set(r)) == len(r) for r in pl.replicas)
+    assert (pl.dev_load >= 0).all()
+    # total placed workload == sum of w_i (each cluster's workload split
+    # across its replicas)
+    np.testing.assert_allclose(
+        pl.dev_load.sum(), (sizes * freqs).sum(), rtol=1e-9
+    )
+
+
+@given(
+    q=st.integers(1, 30),
+    nprobe=st.integers(1, 8),
+    seed=st.integers(0, 1000),
+)
+@settings(**SETTINGS)
+def test_schedule_properties(q, nprobe, seed):
+    rng = np.random.default_rng(seed)
+    c, ndev = 32, 6
+    sizes = (rng.zipf(1.5, c) * 10).clip(1, 2000).astype(np.int64)
+    freqs = rng.random(c) + 1e-3
+    pl = place_clusters(sizes, freqs, ndev)
+    probed = np.stack(
+        [rng.choice(c, nprobe, replace=False) for _ in range(q)]
+    )
+    sch = schedule_queries(probed, sizes, pl)
+    assert sch.num_pairs() == q * nprobe
+    for d in range(ndev):
+        for qi, ci in sch.assigned[d]:
+            assert d in pl.replicas[ci]
+    # scheduled load accounting matches
+    np.testing.assert_allclose(
+        sch.dev_load.sum(), sum(sizes[c_] for row in probed for c_ in row)
+    )

@@ -1,0 +1,78 @@
+"""End-to-end distributed retrieval: MemANNSEngine == flat IVFPQ search,
+with and without co-occurrence encoding; shard layout invariants."""
+
+import numpy as np
+import jax
+import pytest
+
+from repro.core.index import brute_force, recall_at_k, search as flat_search
+from repro.retrieval import MemANNSEngine, build_shards
+from repro.retrieval.layout import DeviceShards
+
+
+@pytest.fixture(scope="module")
+def engines(clustered_data):
+    xs, centers, qs, hist = clustered_data
+    out = {}
+    for use_cooc in (False, True):
+        out[use_cooc] = MemANNSEngine.build(
+            jax.random.PRNGKey(0), xs, n_clusters=32, m=8,
+            history_queries=hist, use_cooc=use_cooc, n_combos=32,
+            block_n=256, kmeans_iters=8, pq_iters=6,
+        )
+    return out
+
+
+@pytest.mark.parametrize("use_cooc", [False, True])
+def test_engine_matches_flat_search(engines, clustered_data, use_cooc):
+    xs, _, qs, _ = clustered_data
+    eng = engines[use_cooc]
+    d, i = eng.search(qs, nprobe=8, k=10)
+    fd, fi = flat_search(eng.index, qs, nprobe=8, k=10)
+    overlap = np.mean(
+        [len(set(a.tolist()) & set(b.tolist())) / 10 for a, b in zip(i, fi)]
+    )
+    assert overlap == 1.0
+    np.testing.assert_allclose(np.sort(d), np.sort(fd), rtol=1e-3, atol=1e-3)
+
+
+def test_engine_recall(engines, clustered_data):
+    xs, _, qs, _ = clustered_data
+    _, ti = brute_force(xs, qs, 10)
+    r_plain = recall_at_k(engines[False].search(qs, 8, 10)[1], ti)
+    r_cooc = recall_at_k(engines[True].search(qs, 8, 10)[1], ti)
+    # paper §5.1: "The optimizations in MemANNS do not impact the recall."
+    assert r_plain == pytest.approx(r_cooc, abs=1e-9)
+    assert r_plain > 0.3
+
+
+def test_shard_layout_invariants(engines):
+    eng = engines[True]
+    s: DeviceShards = eng.shards
+    # block-aligned slot starts
+    assert (np.asarray(s.slot_start) % s.block_n == 0).all()
+    # every placed cluster is found at its slot with the right size
+    sizes = eng.index.cluster_sizes()
+    for (d, c), slot in s.local_slot.items():
+        assert s.slot_cluster[d, slot] == c
+        assert s.slot_size[d, slot] == sizes[c]
+        start = s.slot_start[d, slot]
+        ids = s.vec_ids[d, start : start + sizes[c]]
+        np.testing.assert_array_equal(np.sort(ids), np.sort(eng.index.cluster_ids(c)))
+    # addresses within table bounds; padding rows point at the sentinel
+    assert int(s.codes.max()) <= s.sentinel
+    # replication: every cluster is present on every device of its replica set
+    for c, reps in enumerate(eng.placement.replicas):
+        for d in reps:
+            assert (d, c) in s.local_slot
+
+
+def test_engine_batch_invariance(engines, clustered_data):
+    """Searching queries in two half-batches == one batch (scheduling is
+    per-batch but results must not depend on batch composition)."""
+    xs, _, qs, _ = clustered_data
+    eng = engines[False]
+    d_all, i_all = eng.search(qs, nprobe=8, k=5)
+    d1, i1 = eng.search(qs[:12], nprobe=8, k=5)
+    d2, i2 = eng.search(qs[12:], nprobe=8, k=5)
+    np.testing.assert_array_equal(i_all, np.concatenate([i1, i2]))

@@ -1,0 +1,70 @@
+"""Sharding rules: spec matching, divisibility fallback, cache specs."""
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+from jax.sharding import Mesh, PartitionSpec as P
+
+from repro.configs import get_config
+from repro.models.sharding import (
+    batch_spec,
+    cache_spec,
+    fit_spec,
+    mesh_axes,
+    param_spec_for,
+)
+
+
+@pytest.fixture
+def mesh():
+    # abstract mesh: no devices needed for spec logic
+    return jax.sharding.AbstractMesh((4, 2), ("data", "model"))
+
+
+def test_param_rules(mesh):
+    assert param_spec_for(("embed",), 2, mesh) == P("model", None)
+    assert param_spec_for(("layers", "attn", "wq"), 3, mesh) == P(
+        None, "data", "model"
+    )
+    assert param_spec_for(("layers", "mlp", "w_down"), 3, mesh) == P(
+        None, "model", "data"
+    )
+    assert param_spec_for(("layers", "moe", "w_gate"), 4, mesh) == P(
+        None, "model", "data", None
+    )
+    assert param_spec_for(("layers", "ln1"), 2, mesh) == P()
+
+
+def test_fit_spec_drops_nondivisible(mesh):
+    # vocab 50280 % 2 == 0 -> keep; % 4 != 0 on data -> drop
+    assert fit_spec(P("model", "data"), (50280, 768), mesh) == P("model", "data")
+    assert fit_spec(P("data", None), (50281, 768), mesh) == P(None, None)
+    # tuple axes partially dropped
+    m3 = jax.sharding.AbstractMesh((2, 4, 2), ("pod", "data", "model"))
+    assert fit_spec(P(("pod", "data")), (2,), m3) == P("pod")
+    assert fit_spec(P(("pod", "data")), (8,), m3) == P(("pod", "data"))
+    assert fit_spec(P(("pod", "data")), (1,), m3) == P(None)
+
+
+def test_mesh_axes_and_batch_spec(mesh):
+    dp, fsdp, tp = mesh_axes(mesh)
+    assert dp == ("data",) and fsdp == "data" and tp == "model"
+    assert batch_spec(mesh) == P(("data",), None)
+    m3 = jax.sharding.AbstractMesh((2, 4, 2), ("pod", "data", "model"))
+    assert batch_spec(m3) == P(("pod", "data"), None)
+
+
+def test_cache_spec_batch_vs_seq(mesh):
+    cfg = get_config("yi-6b")
+    # divisible batch -> batch over dp
+    assert cache_spec(cfg, "k", mesh, batch=8) == P(
+        None, ("data",), None, "model", None
+    )
+    # batch=1 -> sequence over fsdp axis instead
+    assert cache_spec(cfg, "k", mesh, batch=1) == P(
+        None, None, "data", "model", None
+    )
+    assert cache_spec(cfg, "ssm", mesh, batch=8) == P(
+        None, ("data",), "model", None, None
+    )

@@ -1,0 +1,103 @@
+"""End-to-end behaviour tests for the whole MemANNS system (paper Fig. 5):
+offline build -> placement -> co-occ encoding -> online schedule -> sharded
+scan -> merged top-k, plus the serving integration."""
+
+import numpy as np
+import jax
+import pytest
+
+from repro.configs.memanns import SIFT1B, reduced_retrieval
+from repro.core.index import brute_force, recall_at_k
+from repro.data import SkewedVectorDataset, make_clustered_vectors
+from repro.retrieval import MemANNSEngine
+
+
+@pytest.fixture(scope="module")
+def system():
+    rcfg = reduced_retrieval(SIFT1B, n_vectors=15000, n_clusters=48,
+                             batch_queries=32)
+    xs, centers, _ = make_clustered_vectors(
+        rcfg.n_vectors, rcfg.dim, rcfg.n_clusters, pattern_pool=32,
+        size_zipf=1.2,
+    )
+    qstream = SkewedVectorDataset(centers, popularity_zipf=1.1)
+    hist = qstream.queries(200, seed=1)
+    eng = MemANNSEngine.build(
+        jax.random.PRNGKey(0), xs, rcfg.n_clusters, rcfg.m,
+        history_queries=hist, use_cooc=True, n_combos=rcfg.n_combos,
+        block_n=rcfg.block_n, kmeans_iters=10, pq_iters=8,
+    )
+    return rcfg, xs, qstream, eng
+
+
+def test_full_pipeline_recall(system):
+    rcfg, xs, qstream, eng = system
+    qs = qstream.queries(rcfg.batch_queries, seed=2)
+    d, ids = eng.search(qs, nprobe=rcfg.nprobe, k=rcfg.k)
+    _, truth = brute_force(xs, qs, rcfg.k)
+    r = recall_at_k(ids, truth)
+    assert r > 0.35, f"system recall@{rcfg.k} = {r}"
+    assert (np.diff(d, axis=1) >= -1e-5).all()  # sorted results
+    assert (ids >= 0).all()
+
+
+def test_skewed_workload_balances(system):
+    """The paper's central claim for Alg 1+2: skewed query popularity still
+    yields balanced per-device scan loads (Fig. 7)."""
+    rcfg, xs, qstream, eng = system
+    qs = qstream.queries(256, seed=3)
+    schedule, probed, _ = eng.schedule_batch(qs, rcfg.nprobe)
+    imb = schedule.max_imbalance()
+    assert imb < 2.0, f"scheduled imbalance {imb}"
+
+
+def test_cooc_reduces_scan_entries(system):
+    """§4.3's purpose: fewer table accesses per scanned vector."""
+    rcfg, xs, qstream, eng = system
+    sizes = eng.index.cluster_sizes()
+    total_entries_plain = int(sizes.sum()) * rcfg.m
+    lengths = []
+    for d in range(eng.shards.ndev):
+        for (dd, c), slot in eng.shards.local_slot.items():
+            pass
+    # effective width from the shards: count non-sentinel addresses
+    s = eng.shards
+    real = (np.asarray(s.codes) != s.sentinel).sum()
+    stored_vecs = int(np.asarray(s.slot_size).sum())
+    avg_len = real / max(stored_vecs, 1)
+    assert avg_len < rcfg.m, f"no access reduction: {avg_len} vs {rcfg.m}"
+
+
+def test_replica_failover(system):
+    """Fault tolerance: dropping one device's replicas still leaves every
+    hot (replicated) cluster reachable via surviving copies.  Placement is
+    pure host logic, so this runs on a synthetic 8-device layout even in a
+    single-device test container."""
+    from repro.core.placement import place_clusters
+
+    rcfg, xs, qstream, eng = system
+    sizes = eng.index.cluster_sizes().astype(float)
+    freqs = np.zeros(len(sizes))
+    freqs[:] = 1.0
+    freqs[0] = 200.0  # paper Fig. 4a skew: one very hot cluster
+    pl = place_clusters(sizes, freqs, ndev=8)
+    replicated = [c for c, r in enumerate(pl.replicas) if len(r) > 1]
+    assert replicated, "expected replicated hot clusters under skew"
+    dead = pl.replicas[replicated[0]][0]
+    for c in replicated:
+        survivors = [d for d in pl.replicas[c] if d != dead]
+        assert survivors, f"cluster {c} lost all replicas"
+
+
+def test_serving_integration_runs():
+    """serve.py wiring: decode loop + retrieval co-exist (tiny scale)."""
+    import subprocess, sys, json, os
+    env = dict(os.environ, PYTHONPATH="src")
+    out = subprocess.run(
+        [sys.executable, "-m", "repro.launch.serve", "--arch", "musicgen-medium",
+         "--reduced", "--batch", "2", "--prompt-len", "16", "--steps", "4"],
+        capture_output=True, text=True, env=env, timeout=600,
+    )
+    assert out.returncode == 0, out.stderr[-2000:]
+    rep = json.loads(out.stdout)
+    assert rep["decode_tok_per_s"] > 0
