@@ -1,15 +1,28 @@
 """Paper Fig. 13: QPS of MemANNS vs the Faiss-CPU-style flat baseline across
-nprobe x IVF settings (normalized as in the paper), + co-occ on/off."""
+nprobe x IVF settings (normalized as in the paper), + co-occ on/off.
+
+Also reports the host-vs-device time split of the online path (schedule +
+densify vs the shard_map step) and the throughput of the vectorized
+Algorithm 2 against the retained per-pair loop reference at Q=256,
+nprobe=32 -- the host-bottleneck numbers the serving layer depends on.
+"""
 
 from __future__ import annotations
 
 import time
 
 import numpy as np
-import jax
+import jax.numpy as jnp
 
 from benchmarks.common import emit, small_system
-from repro.core.index import search as flat_search
+from repro.core.index import filter_clusters, search as flat_search
+from repro.core.scheduling import (
+    densify_schedule,
+    schedule_queries,
+    schedule_queries_loop,
+    schedule_to_arrays,
+)
+from repro.retrieval.engine import round_capacity
 
 
 def _qps(fn, q_n, iters=3):
@@ -20,6 +33,30 @@ def _qps(fn, q_n, iters=3):
         fn()
         ts.append(time.perf_counter() - t0)
     return q_n / float(np.median(ts))
+
+
+def _median_time(fn, iters=5, warmup=1):
+    """Median wall-seconds per call (host-side numpy, no device sync)."""
+    for _ in range(warmup):
+        fn()
+    ts = []
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        fn()
+        ts.append(time.perf_counter() - t0)
+    return float(np.median(ts))
+
+
+def _host_device_split(eng, qs, nprobe, k=10, iters=3):
+    """Per-batch host (plan) vs device (execute) median times in seconds."""
+    plan = eng.plan_batch(qs, nprobe)  # warm filter jit + capacity
+    eng.execute_plan(plan, k)          # warm search jit
+    host = _median_time(
+        lambda: eng.plan_batch(qs, nprobe, pairs_per_dev=plan.pairs_per_dev),
+        iters=iters,
+    )
+    dev = _median_time(lambda: eng.execute_plan(plan, k), iters=iters)
+    return host, dev
 
 
 def run():
@@ -39,6 +76,55 @@ def run():
                 f"memanns_qps={qps_mem:.1f};flat_qps={qps_flat:.1f};"
                 f"speedup={qps_mem/qps_flat:.2f}",
             )
+        # host (schedule + densify) vs device (shard_map step) per batch
+        host_s, dev_s = _host_device_split(eng, qs, nprobe=16)
+        emit(
+            f"qps_host_device_split_ivf{c}",
+            1e6 * (host_s + dev_s),
+            f"host_us={1e6 * host_s:.1f};device_us={1e6 * dev_s:.1f};"
+            f"host_frac={host_s / (host_s + dev_s):.3f}",
+        )
+
+    # --- scheduling throughput: vectorized Algorithm 2 vs loop reference ----
+    # Q=256, nprobe=32: the acceptance point for the vectorized host path.
+    q_n, nprobe = 256, 32
+    xs, stream, eng = small_system(n=15000, c=64)
+    qs = stream.queries(q_n, seed=4)
+    probed = np.asarray(
+        filter_clusters(
+            jnp.asarray(eng.index.centroids), jnp.asarray(qs, jnp.float32),
+            nprobe,
+        )[0]
+    )
+    sizes = eng.index.cluster_sizes()
+    pl = eng.placement
+    local_slot = eng.shards.local_slot
+    cap = round_capacity(
+        int(schedule_queries(probed, sizes, pl).counts_per_dev().max())
+    )
+
+    def vec_path():
+        sch = schedule_queries(probed, sizes, pl)
+        return densify_schedule(sch, local_slot, cap)
+
+    def loop_path():
+        sch = schedule_queries_loop(probed, sizes, pl)
+        return schedule_to_arrays(sch, local_slot, cap)
+
+    t_vec = _median_time(vec_path)
+    t_loop = _median_time(loop_path)
+    speedup = t_loop / t_vec
+    pairs = q_n * nprobe
+    emit(
+        "sched_vectorized_q256_nprobe32",
+        1e6 * t_vec,
+        f"vec_us={1e6 * t_vec:.1f};loop_us={1e6 * t_loop:.1f};"
+        f"speedup={speedup:.1f}x;pairs_per_s={pairs / t_vec:.0f}",
+    )
+    assert speedup >= 5.0, (
+        f"vectorized schedule+densify only {speedup:.1f}x faster than loop "
+        f"reference (need >= 5x)"
+    )
 
 
 if __name__ == "__main__":

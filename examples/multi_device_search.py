@@ -36,7 +36,7 @@ print("vectors/device:", pl.dev_vectors.tolist())
 queries = stream.queries(128, seed=2)
 schedule, _, _ = engine.schedule_batch(queries, nprobe=16)
 print(f"schedule imbalance: {schedule.max_imbalance():.2f}")
-print("pairs/device:", [len(a) for a in schedule.assigned])
+print("pairs/device:", schedule.counts_per_dev().tolist())
 
 dists, ids = engine.search(queries, nprobe=16, k=10)
 _, truth = brute_force(xs, queries, 10)

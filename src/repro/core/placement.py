@@ -41,6 +41,29 @@ class Placement:
         mean = float(self.dev_load.mean())
         return float(self.dev_load.max()) / max(mean, 1e-12)
 
+    def replica_table(self) -> tuple[np.ndarray, np.ndarray]:
+        """Dense replica map for the vectorized scheduler.
+
+        Cached after the first call: placement is immutable once built, and
+        the table is consumed on every online batch.
+
+        Returns:
+          (table (C, R_max) int32 device ids padded with -1, preserving the
+           per-cluster replica list order; n_replicas (C,) int32).
+        """
+        cached = getattr(self, "_replica_table", None)
+        if cached is not None:
+            return cached
+        c = len(self.replicas)
+        n_rep = np.fromiter(
+            (len(r) for r in self.replicas), np.int32, count=c
+        )
+        table = np.full((c, max(int(n_rep.max(initial=1)), 1)), -1, np.int32)
+        for ci, reps in enumerate(self.replicas):
+            table[ci, : len(reps)] = reps
+        self._replica_table = (table, n_rep)
+        return self._replica_table
+
 
 def estimate_frequencies(
     probed_history: np.ndarray, n_clusters: int, smoothing: float = 1.0

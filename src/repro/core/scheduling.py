@@ -8,8 +8,15 @@ that per-device scan load is balanced:
   2. remaining clusters are processed in descending size order, each pair
      going to its least-loaded replica device.
 
-Runs on the host CPU at online time; complexity O(|Q| * nprobe * max_replicas)
-(negligible vs the billion-scale scan, as the paper argues).
+Runs on the host CPU at online time.  The primary implementation
+(`schedule_queries`) is numpy-vectorized: single-replica pairs are bound by
+one scatter-add, and multi-replica clusters are resolved segment-by-segment
+with an event-merge that reproduces the greedy least-loaded choice exactly
+(the i-th greedy pick equals the i-th smallest (load + t*size, replica) key
+in the merged per-replica event streams).  The original per-pair loop is
+kept as `schedule_queries_loop`, the reference oracle for tests; both
+implementations produce identical device loads (and identical per-pair
+devices for integer sizes, where float accumulation is exact).
 """
 
 from __future__ import annotations
@@ -23,7 +30,7 @@ from repro.core.placement import Placement
 
 @dataclasses.dataclass
 class Schedule:
-    """Result of Algorithm 2 for one query batch.
+    """Loop-reference result of Algorithm 2 for one query batch.
 
     Attributes:
       assigned: assigned[d] = list of (query_idx, cluster_id) pairs on dev d.
@@ -41,12 +48,97 @@ class Schedule:
         return sum(len(a) for a in self.assigned)
 
 
+@dataclasses.dataclass
+class ArraySchedule:
+    """Vectorized result of Algorithm 2: flat per-pair arrays.
+
+    Pairs appear in canonical order (single-replica pairs in query-major
+    order first, then multi-replica pairs in descending-size processing
+    order), so a stable sort by `pair_dev` reproduces the reference
+    per-device assignment lists.
+
+    Attributes:
+      pair_q: (N,) int32 query index of each (query, cluster) pair.
+      pair_c: (N,) int32 cluster id of each pair.
+      pair_dev: (N,) int32 device chosen by Algorithm 2.
+      dev_load: (ndev,) float64 scheduled scan load per device.
+    """
+
+    pair_q: np.ndarray
+    pair_c: np.ndarray
+    pair_dev: np.ndarray
+    dev_load: np.ndarray
+
+    @property
+    def ndev(self) -> int:
+        return self.dev_load.shape[0]
+
+    def max_imbalance(self) -> float:
+        mean = float(self.dev_load.mean())
+        return float(self.dev_load.max()) / max(mean, 1e-12)
+
+    def num_pairs(self) -> int:
+        return int(self.pair_q.shape[0])
+
+    def counts_per_dev(self) -> np.ndarray:
+        """(ndev,) number of pairs scheduled onto each device."""
+        return np.bincount(self.pair_dev, minlength=self.ndev)
+
+    def device_order(self) -> np.ndarray:
+        """Stable pair permutation grouping pairs by device."""
+        return np.argsort(self.pair_dev, kind="stable")
+
+    def device_positions(self) -> tuple[np.ndarray, np.ndarray, np.ndarray]:
+        """Dense packing coordinates for every pair.
+
+        Returns:
+          (order (N,) pair permutation grouped by device, d_sorted (N,)
+           device of each permuted pair, pos (N,) its slot index within
+           that device's pair list).
+        """
+        order = self.device_order()
+        d_sorted = self.pair_dev[order]
+        counts = self.counts_per_dev()
+        offsets = np.zeros(self.ndev, np.int64)
+        np.cumsum(counts[:-1], out=offsets[1:])
+        pos = np.arange(order.shape[0], dtype=np.int64) - offsets[d_sorted]
+        return order, d_sorted, pos
+
+    @property
+    def assigned(self) -> list[list[tuple[int, int]]]:
+        """Reference-compatible per-device pair lists (materialized)."""
+        out: list[list[tuple[int, int]]] = [[] for _ in range(self.ndev)]
+        for i in self.device_order():
+            out[int(self.pair_dev[i])].append(
+                (int(self.pair_q[i]), int(self.pair_c[i]))
+            )
+        return out
+
+
+def _greedy_segment_picks(
+    loads: np.ndarray, size: float, k: int
+) -> np.ndarray:
+    """Replica positions chosen by k greedy least-loaded steps, vectorized.
+
+    Greedy repeatedly assigns one size-`size` item to the replica with the
+    smallest current load (first index wins ties).  Because each replica's
+    load sequence load + t*size is strictly increasing (size > 0), the k
+    greedy picks are exactly the k lexicographically-smallest
+    (load + t*size, replica) events of the merged streams.
+    """
+    r = loads.shape[0]
+    vals = loads[:, None] + size * np.arange(k, dtype=np.float64)[None, :]
+    rpos = np.broadcast_to(np.arange(r)[:, None], vals.shape)
+    sel = np.lexsort((rpos.ravel(), vals.ravel()))[:k]
+    return rpos.ravel()[sel]
+
+
 def schedule_queries(
     probed: np.ndarray,
     sizes: np.ndarray,
     placement: Placement,
-) -> Schedule:
-    """Algorithm 2.
+) -> ArraySchedule:
+    """Vectorized Algorithm 2.
 
     Args:
       probed: (Q, nprobe) int cluster ids selected by cluster filtering.
@@ -54,7 +146,64 @@ def schedule_queries(
       placement: Algorithm 1 output (replica map).
 
     Returns:
-      Schedule covering every (query, cluster) pair exactly once.
+      ArraySchedule covering every (query, cluster) pair exactly once.
+    """
+    ndev = placement.dev_load.shape[0]
+    q_n, nprobe = probed.shape
+    sizes = np.asarray(sizes, np.float64)
+    table, n_rep = placement.replica_table()
+
+    pair_q = np.repeat(np.arange(q_n, dtype=np.int32), nprobe)
+    pair_c = np.ascontiguousarray(probed, np.int32).reshape(-1)
+    load = np.zeros(ndev, np.float64)
+
+    # Lines 4-7: single-replica pairs -> forced device, one scatter-add
+    single = n_rep[pair_c] == 1
+    dev = np.empty(pair_q.shape[0], np.int32)
+    dev[single] = table[pair_c[single], 0]
+    np.add.at(load, dev[single], sizes[pair_c[single]])
+
+    # Lines 8-14: multi-replica pairs, descending cluster size.  The sort is
+    # stable with key (-size, cluster), so each cluster forms one contiguous
+    # segment holding its pairs in query order.
+    multi = np.flatnonzero(~single)
+    if multi.size:
+        mc = pair_c[multi]
+        order = np.lexsort((mc, -sizes[mc]))
+        multi, mc = multi[order], mc[order]
+        seg_starts = np.flatnonzero(np.r_[True, mc[1:] != mc[:-1]])
+        seg_ends = np.r_[seg_starts[1:], mc.size]
+        for s0, s1 in zip(seg_starts, seg_ends):
+            c = int(mc[s0])
+            reps = table[c, : n_rep[c]]
+            s = float(sizes[c])
+            k = int(s1 - s0)
+            if s <= 0.0:  # zero-size cluster: load never moves, first min wins
+                dev[multi[s0:s1]] = reps[int(np.argmin(load[reps]))]
+                continue
+            picks = _greedy_segment_picks(load[reps], s, k)
+            dev[multi[s0:s1]] = reps[picks]
+            load[reps] += np.bincount(picks, minlength=reps.shape[0]) * s
+
+    # canonical pair order: singles (query-major) then multi (processing order)
+    perm = np.r_[np.flatnonzero(single), multi].astype(np.int64)
+    return ArraySchedule(
+        pair_q=pair_q[perm],
+        pair_c=pair_c[perm],
+        pair_dev=dev[perm],
+        dev_load=load,
+    )
+
+
+def schedule_queries_loop(
+    probed: np.ndarray,
+    sizes: np.ndarray,
+    placement: Placement,
+) -> Schedule:
+    """Reference per-pair loop implementation of Algorithm 2 (test oracle).
+
+    Complexity O(|Q| * nprobe * max_replicas); retained only to validate the
+    vectorized path and to quantify its speedup in benchmarks.
     """
     ndev = placement.dev_load.shape[0]
     q_n, nprobe = probed.shape
@@ -74,8 +223,10 @@ def schedule_queries(
             else:
                 multi.append((qi, c))
 
-    # Lines 8-14: descending cluster size, least-loaded replica wins
-    multi.sort(key=lambda qc: -sizes[qc[1]])
+    # Lines 8-14: descending cluster size, least-loaded replica wins.  Ties
+    # in size break by cluster id so the order matches the vectorized
+    # segment processing (the paper leaves tie order unspecified).
+    multi.sort(key=lambda qc: (-sizes[qc[1]], qc[1]))
     for qi, c in multi:
         reps = placement.replicas[c]
         d = min(reps, key=lambda r: load[r] + sizes[c])
@@ -85,17 +236,52 @@ def schedule_queries(
     return Schedule(assigned=assigned, dev_load=load)
 
 
-def schedule_to_arrays(
-    schedule: Schedule,
-    local_slot: dict[tuple[int, int], int],
+def densify_schedule(
+    schedule: ArraySchedule,
+    local_slot: np.ndarray,
     pairs_per_dev: int,
 ) -> tuple[np.ndarray, np.ndarray, np.ndarray]:
-    """Densify a Schedule for shard_map execution.
+    """Vectorized densify: pack an ArraySchedule into shard_map inputs.
 
     Args:
-      local_slot: maps (device, cluster_id) -> local cluster slot on that
-        device (from the retrieval shard layout).
-      pairs_per_dev: fixed per-device pair capacity (pad with -1 sentinels).
+      local_slot: (ndev, C) int32 dense lookup, local_slot[d, c] = slot of
+        cluster c on device d (-1 when absent; never indexed for scheduled
+        pairs since Algorithm 2 only uses replica devices).
+      pairs_per_dev: fixed per-device pair capacity (padded tail invalid).
+
+    Returns:
+      (q_idx (ndev, P), slot_idx (ndev, P), valid (ndev, P)) int32/bool.
+    """
+    ndev = schedule.ndev
+    counts = schedule.counts_per_dev()
+    over = int(counts.max(initial=0))
+    if over > pairs_per_dev:
+        d_bad = int(counts.argmax())
+        raise ValueError(
+            f"device {d_bad} got {over} pairs > capacity {pairs_per_dev}"
+        )
+    order, d_sorted, pos = schedule.device_positions()
+
+    q_idx = np.zeros((ndev, pairs_per_dev), np.int32)
+    s_idx = np.zeros((ndev, pairs_per_dev), np.int32)
+    valid = np.zeros((ndev, pairs_per_dev), bool)
+    q_idx[d_sorted, pos] = schedule.pair_q[order]
+    s_idx[d_sorted, pos] = local_slot[d_sorted, schedule.pair_c[order]]
+    valid[d_sorted, pos] = True
+    return q_idx, s_idx, valid
+
+
+def schedule_to_arrays(
+    schedule: Schedule,
+    local_slot: np.ndarray,
+    pairs_per_dev: int,
+) -> tuple[np.ndarray, np.ndarray, np.ndarray]:
+    """Loop-reference densify of a (loop) Schedule (test oracle).
+
+    Args:
+      local_slot: (ndev, C) int32 dense (device, cluster) -> slot lookup
+        (from the retrieval shard layout).
+      pairs_per_dev: fixed per-device pair capacity (padded tail invalid).
 
     Returns:
       (q_idx (ndev, P), slot_idx (ndev, P), valid (ndev, P)) int32/bool.
@@ -111,6 +297,6 @@ def schedule_to_arrays(
             )
         for p, (qi, c) in enumerate(pairs):
             q_idx[d, p] = qi
-            s_idx[d, p] = local_slot[(d, c)]
+            s_idx[d, p] = local_slot[d, c]
             valid[d, p] = True
     return q_idx, s_idx, valid

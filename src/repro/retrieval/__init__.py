@@ -6,7 +6,20 @@
                fused ADC+top-k kernel, local per-query merge, one all-gather
   engine.py -- MemANNSEngine: end-to-end build + query API (the paper's
                whole system behind one object)
+  serving.py -- ServingEngine: micro-batched steady-state serving with
+               shape-bucketed, pre-warmed sharded_search instances
 """
 
-from repro.retrieval.engine import MemANNSEngine
+from repro.retrieval.engine import MemANNSEngine, SearchPlan, round_capacity
 from repro.retrieval.layout import DeviceShards, build_shards
+from repro.retrieval.serving import ServingEngine, ServingStats
+
+__all__ = [
+    "MemANNSEngine",
+    "SearchPlan",
+    "round_capacity",
+    "DeviceShards",
+    "build_shards",
+    "ServingEngine",
+    "ServingStats",
+]

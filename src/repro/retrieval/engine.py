@@ -23,7 +23,11 @@ from repro.core.placement import (
     estimate_frequencies,
     place_clusters,
 )
-from repro.core.scheduling import Schedule, schedule_queries
+from repro.core.scheduling import (
+    ArraySchedule,
+    densify_schedule,
+    schedule_queries,
+)
 from repro.retrieval.layout import DeviceShards, build_shards
 from repro.retrieval.search import DPU_AXIS, sharded_search
 
@@ -33,6 +37,32 @@ def make_dpu_mesh(devices=None) -> jax.sharding.Mesh:
     if devices is None:
         devices = jax.devices()
     return jax.sharding.Mesh(np.asarray(devices), (DPU_AXIS,))
+
+
+def round_capacity(max_pairs: int, floor: int = 8) -> int:
+    """Round a pair count up to the next power-of-two capacity bucket.
+
+    Serving reuses these buckets so `sharded_search` compiles once per
+    bucket instead of once per batch shape.
+    """
+    return max(floor, 1 << math.ceil(math.log2(max(max_pairs, 1))))
+
+
+@dataclasses.dataclass
+class SearchPlan:
+    """Densified host-side plan for one `sharded_search` invocation.
+
+    Produced by `MemANNSEngine.plan_batch` (cluster filtering + Algorithm 2
+    + array densify); consumed by `MemANNSEngine.execute_plan`.
+    """
+
+    qmc_pairs: np.ndarray   # (ndev, P, D) f32 per-pair query - centroid
+    pair_q: np.ndarray      # (ndev, P) int32 query index
+    pair_slot: np.ndarray   # (ndev, P) int32 local cluster slot
+    pair_valid: np.ndarray  # (ndev, P) bool
+    schedule: ArraySchedule | None  # None for synthetic warmup plans
+    n_queries: int
+    pairs_per_dev: int
 
 
 @dataclasses.dataclass
@@ -127,8 +157,8 @@ class MemANNSEngine:
 
     def schedule_batch(
         self, queries: np.ndarray, nprobe: int
-    ) -> tuple[Schedule, np.ndarray, np.ndarray]:
-        """Host side: cluster filtering (stage a) + Algorithm 2."""
+    ) -> tuple[ArraySchedule, np.ndarray, np.ndarray]:
+        """Host side: cluster filtering (stage a) + vectorized Algorithm 2."""
         probed, qmc = filter_clusters(
             jnp.asarray(self.index.centroids),
             jnp.asarray(queries, jnp.float32),
@@ -140,46 +170,53 @@ class MemANNSEngine:
         )
         return schedule, probed, np.asarray(qmc)
 
-    def search(
+    def plan_batch(
         self,
         queries: np.ndarray,
         nprobe: int,
-        k: int,
         pairs_per_dev: int | None = None,
-    ) -> tuple[np.ndarray, np.ndarray]:
-        """Full online path.  Returns (dists (Q, k), ids (Q, k))."""
+        capacity_floor: int = 8,
+    ) -> SearchPlan:
+        """Host-side online phase: filter + schedule + array densify.
+
+        Everything after `filter_clusters` is pure numpy array ops — no
+        per-pair Python loops survive on this path.
+        """
         queries = np.asarray(queries, np.float32)
         q_n = queries.shape[0]
         ndev = self.shards.ndev
         schedule, probed, qmc = self.schedule_batch(queries, nprobe)
 
-        max_pairs = max(len(a) for a in schedule.assigned)
+        max_pairs = int(schedule.counts_per_dev().max(initial=0))
         if pairs_per_dev is None:
             # round up to limit jit re-compiles across batches
-            pairs_per_dev = max(8, 1 << math.ceil(math.log2(max(max_pairs, 1))))
-        if max_pairs > pairs_per_dev:
-            raise ValueError(
-                f"schedule needs {max_pairs} pairs/device > cap {pairs_per_dev}"
-            )
+            pairs_per_dev = round_capacity(max_pairs, floor=capacity_floor)
 
-        # densify: per-device pair arrays
+        # densify the index arrays (raises on capacity overflow), then
+        # scatter the per-pair residuals with the same packing coordinates
+        pair_q, pair_slot, pair_valid = densify_schedule(
+            schedule, self.shards.local_slot, pairs_per_dev
+        )
+        order, d_sorted, pos = schedule.device_positions()
+        pq, pc = schedule.pair_q[order], schedule.pair_c[order]
+        # column of each pair's cluster within its probed row (qmc lookup)
+        cols = np.argmax(probed[pq] == pc[:, None], axis=1)
         qmc_pairs = np.zeros((ndev, pairs_per_dev, queries.shape[1]), np.float32)
-        pair_q = np.zeros((ndev, pairs_per_dev), np.int32)
-        pair_slot = np.zeros((ndev, pairs_per_dev), np.int32)
-        pair_valid = np.zeros((ndev, pairs_per_dev), bool)
-        # map probed (q, c) -> position in probed row for qmc lookup
-        pos = {
-            (qi, int(c)): j
-            for qi in range(q_n)
-            for j, c in enumerate(probed[qi])
-        }
-        for d, pairs in enumerate(schedule.assigned):
-            for p, (qi, c) in enumerate(pairs):
-                qmc_pairs[d, p] = qmc[qi, pos[(qi, c)]]
-                pair_q[d, p] = qi
-                pair_slot[d, p] = self.shards.local_slot[(d, c)]
-                pair_valid[d, p] = True
+        qmc_pairs[d_sorted, pos] = qmc[pq, cols]
+        return SearchPlan(
+            qmc_pairs=qmc_pairs,
+            pair_q=pair_q,
+            pair_slot=pair_slot,
+            pair_valid=pair_valid,
+            schedule=schedule,
+            n_queries=q_n,
+            pairs_per_dev=pairs_per_dev,
+        )
 
+    def execute_plan(
+        self, plan: SearchPlan, k: int
+    ) -> tuple[np.ndarray, np.ndarray]:
+        """Device-side online phase: one jitted shard_map step."""
         dev = self._device_put()
         spec_dev = jax.sharding.NamedSharding(
             self.mesh, jax.sharding.PartitionSpec(DPU_AXIS)
@@ -187,12 +224,12 @@ class MemANNSEngine:
         out_d, out_i = sharded_search(
             *dev[:5],
             dev[5],
-            jax.device_put(qmc_pairs, spec_dev),
-            jax.device_put(pair_q, spec_dev),
-            jax.device_put(pair_slot, spec_dev),
-            jax.device_put(pair_valid, spec_dev),
+            jax.device_put(plan.qmc_pairs, spec_dev),
+            jax.device_put(plan.pair_q, spec_dev),
+            jax.device_put(plan.pair_slot, spec_dev),
+            jax.device_put(plan.pair_valid, spec_dev),
             mesh=self.mesh,
-            n_queries=q_n,
+            n_queries=plan.n_queries,
             k=k,
             block_n=self.shards.block_n,
             window=self.shards.window,
@@ -201,3 +238,14 @@ class MemANNSEngine:
             interpret=self.interpret,
         )
         return np.asarray(out_d), np.asarray(out_i)
+
+    def search(
+        self,
+        queries: np.ndarray,
+        nprobe: int,
+        k: int,
+        pairs_per_dev: int | None = None,
+    ) -> tuple[np.ndarray, np.ndarray]:
+        """Full online path.  Returns (dists (Q, k), ids (Q, k))."""
+        plan = self.plan_batch(queries, nprobe, pairs_per_dev=pairs_per_dev)
+        return self.execute_plan(plan, k)

@@ -39,7 +39,9 @@ class DeviceShards:
     slot_size: np.ndarray    # (ndev, S) int32 valid rows per slot
     slot_cluster: np.ndarray # (ndev, S) int32 cluster id, -1 for empty slot
     combo_addrs: np.ndarray  # (ndev, S, m, L) int32 flat combo item addrs
-    local_slot: dict         # (dev, cluster_id) -> slot
+    local_slot: np.ndarray   # (ndev, C) int32 slot of cluster c on dev d,
+                             # -1 where the device holds no replica (dense
+                             # lookup consumed by the vectorized densify)
     m_subspaces: int
     n_combos: int
     block_n: int
@@ -178,7 +180,7 @@ def build_shards(
     combo_addrs = np.zeros(
         (ndev, s_max, n_combos if use_cooc else 0, combo_len), np.int32
     )
-    local_slot: dict[tuple[int, int], int] = {}
+    local_slot = np.full((ndev, c_n), -1, np.int32)
 
     for d in range(ndev):
         cursor = 0
@@ -192,7 +194,7 @@ def build_shards(
             slot_cluster[d, s] = c
             if use_cooc:
                 combo_addrs[d, s] = cluster_combo_addrs[c]
-            local_slot[(d, c)] = s
+            local_slot[d, c] = s
             cursor += _align(n_rows, block_n)
 
     return DeviceShards(

@@ -1,0 +1,223 @@
+"""Batched serving on top of MemANNSEngine: micro-batching + shape buckets.
+
+`sharded_search` is jitted with static (n_queries, pairs_per_dev, k, ...),
+so naive per-request calls recompile whenever the batch shape drifts.  The
+serving layer removes that hazard:
+
+  * incoming queries are grouped into fixed-size micro-batches (ragged tails
+    padded with a copy of the first query and sliced off the results, so
+    padding never changes any real query's top-k);
+  * per-device pair capacities are rounded up to power-of-two *buckets*
+    (`round_capacity`), and `warmup()` executes one dummy search per bucket
+    so every steady-state batch hits an already-compiled executable;
+  * `ServingStats` tracks cold compiles, bucket hits, and the host
+    (schedule + densify) vs device (shard_map step) time split — the same
+    split `benchmarks/bench_qps.py` reports.
+
+This is the host-side half of the paper's "negligible vs the billion-scale
+scan" assumption made real: scheduling is vectorized numpy, and the device
+step never waits on a recompile.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+import time
+
+import numpy as np
+
+from repro.retrieval.engine import MemANNSEngine, SearchPlan, round_capacity
+from repro.retrieval.search import search_static_key
+
+
+@dataclasses.dataclass
+class ServingStats:
+    """Counters accumulated across `ServingEngine` batches."""
+
+    batches: int = 0
+    queries: int = 0
+    compiles: int = 0      # searches that hit a non-warmed (cold) shape
+    host_s: float = 0.0    # cluster filter + Algorithm 2 + densify
+    device_s: float = 0.0  # sharded_search execution (incl. transfers)
+    bucket_hits: dict[int, int] = dataclasses.field(default_factory=dict)
+
+    def host_fraction(self) -> float:
+        total = self.host_s + self.device_s
+        return self.host_s / total if total > 0 else 0.0
+
+
+class ServingEngine:
+    """Steady-state serving wrapper around one `MemANNSEngine`.
+
+    Args:
+      engine: built MemANNSEngine.
+      nprobe: clusters probed per query (fixed per serving config).
+      k: neighbours returned per query.
+      micro_batch: queries per shard_map step; requests are padded/split to
+        this size so `n_queries` stays static.
+      capacity_floor: smallest pairs-per-device bucket.
+    """
+
+    def __init__(
+        self,
+        engine: MemANNSEngine,
+        *,
+        nprobe: int,
+        k: int,
+        micro_batch: int = 32,
+        capacity_floor: int = 8,
+    ):
+        self.engine = engine
+        self.nprobe = int(nprobe)
+        self.k = int(k)
+        self.micro_batch = int(micro_batch)
+        self.capacity_floor = int(capacity_floor)
+        self.stats = ServingStats()
+        self._warm: set[tuple] = set()
+        self._pending: list[np.ndarray] = []
+
+    # ------------------------------------------------------------------ #
+
+    def _key(self, pairs_per_dev: int) -> tuple:
+        s = self.engine.shards
+        return search_static_key(
+            ndev=s.ndev,
+            n_queries=self.micro_batch,
+            pairs_per_dev=pairs_per_dev,
+            k=self.k,
+            block_n=s.block_n,
+            window=s.window,
+            path=self.engine.path,
+            add_offsets=s.add_offsets,
+        )
+
+    def default_buckets(self) -> list[int]:
+        """Power-of-two capacities from the balanced share to the worst case.
+
+        A perfectly balanced schedule puts Q*nprobe/ndev pairs on each
+        device; the worst case (every probed cluster single-replica on one
+        device) is Q*nprobe.  Warming every power of two in between covers
+        any schedule this config can produce.
+        """
+        total = self.micro_batch * self.nprobe
+        ndev = self.engine.shards.ndev
+        lo = round_capacity(
+            math.ceil(total / ndev), floor=self.capacity_floor
+        )
+        hi = round_capacity(total, floor=self.capacity_floor)
+        return [lo << i for i in range(int(math.log2(hi // lo)) + 1)]
+
+    def _dummy_plan(self, pairs_per_dev: int) -> SearchPlan:
+        """Shape-exact all-invalid plan: compiles without scheduling anything."""
+        ndev = self.engine.shards.ndev
+        dim = self.engine.index.centroids.shape[1]
+        return SearchPlan(
+            qmc_pairs=np.zeros((ndev, pairs_per_dev, dim), np.float32),
+            pair_q=np.zeros((ndev, pairs_per_dev), np.int32),
+            pair_slot=np.zeros((ndev, pairs_per_dev), np.int32),
+            pair_valid=np.zeros((ndev, pairs_per_dev), bool),
+            schedule=None,
+            n_queries=self.micro_batch,
+            pairs_per_dev=pairs_per_dev,
+        )
+
+    def warmup(self, buckets: list[int] | None = None) -> list[int]:
+        """Compile `sharded_search` for every bucket with a dummy batch.
+
+        jit caching is keyed by input shapes + static args, so one
+        execution per bucket shape is the warm (the dummy plan marks every
+        pair invalid, so nothing is scanned); afterwards any batch whose
+        capacity falls in `buckets` runs without compiling.
+        """
+        buckets = sorted(buckets or self.default_buckets())
+        for b in buckets:
+            self.engine.execute_plan(self._dummy_plan(b), self.k)
+            self._warm.add(self._key(b))
+        # warm the host path too (filter_clusters jit for this batch shape);
+        # auto capacity, so a degenerate dummy schedule can never overflow
+        dim = self.engine.index.centroids.shape[1]
+        self.engine.plan_batch(
+            np.zeros((self.micro_batch, dim), np.float32), self.nprobe
+        )
+        return buckets
+
+    # ------------------------------------------------------------------ #
+
+    def _search_micro_batch(
+        self, queries: np.ndarray
+    ) -> tuple[np.ndarray, np.ndarray]:
+        """One padded micro-batch through plan -> bucket -> execute."""
+        q_n = queries.shape[0]
+        if q_n < self.micro_batch:  # pad; padded rows sliced off below
+            pad = np.broadcast_to(
+                queries[:1], (self.micro_batch - q_n, queries.shape[1])
+            )
+            queries = np.concatenate([queries, pad], axis=0)
+
+        t0 = time.perf_counter()
+        plan = self.engine.plan_batch(
+            queries, self.nprobe, capacity_floor=self.capacity_floor
+        )
+        t1 = time.perf_counter()
+        key = self._key(plan.pairs_per_dev)
+        if key not in self._warm:
+            self.stats.compiles += 1
+            self._warm.add(key)
+        d, i = self.engine.execute_plan(plan, self.k)
+        t2 = time.perf_counter()
+
+        self.stats.batches += 1
+        self.stats.queries += q_n
+        self.stats.host_s += t1 - t0
+        self.stats.device_s += t2 - t1
+        self.stats.bucket_hits[plan.pairs_per_dev] = (
+            self.stats.bucket_hits.get(plan.pairs_per_dev, 0) + 1
+        )
+        return d[:q_n], i[:q_n]
+
+    def search(self, queries: np.ndarray) -> tuple[np.ndarray, np.ndarray]:
+        """Serve a query array of any length via fixed micro-batches.
+
+        Returns (dists (Q, k), ids (Q, k)) in the input order.
+        """
+        queries = np.asarray(queries, np.float32)
+        if queries.ndim == 1:
+            queries = queries[None]
+        if queries.shape[0] == 0:
+            return (
+                np.zeros((0, self.k), np.float32),
+                np.zeros((0, self.k), np.int32),
+            )
+        outs_d, outs_i = [], []
+        for s in range(0, queries.shape[0], self.micro_batch):
+            d, i = self._search_micro_batch(
+                queries[s : s + self.micro_batch]
+            )
+            outs_d.append(d)
+            outs_i.append(i)
+        return np.concatenate(outs_d), np.concatenate(outs_i)
+
+    # ------------------------------------------------------------------ #
+
+    def submit(self, queries: np.ndarray) -> None:
+        """Enqueue queries for the next `flush()` (request accumulation)."""
+        queries = np.asarray(queries, np.float32)
+        if queries.ndim == 1:
+            queries = queries[None]
+        if queries.shape[0]:
+            self._pending.append(queries)
+
+    def pending(self) -> int:
+        return sum(q.shape[0] for q in self._pending)
+
+    def flush(self) -> tuple[np.ndarray, np.ndarray]:
+        """Serve everything submitted since the last flush, in order."""
+        if not self._pending:
+            return (
+                np.zeros((0, self.k), np.float32),
+                np.zeros((0, self.k), np.int32),
+            )
+        queries = np.concatenate(self._pending)
+        self._pending = []
+        return self.search(queries)

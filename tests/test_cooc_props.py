@@ -1,0 +1,57 @@
+"""Hypothesis property tests for §4.3 co-occurrence encoding.
+
+Requires the `[test]` extra (`pip install -e .[test]`); skipped cleanly when
+hypothesis is missing so the tier-1 suite still collects.
+"""
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+
+pytest.importorskip("hypothesis")
+
+from hypothesis import given, settings, strategies as st  # noqa: E402
+
+from repro.core.cooc import build_ext_lut, mine_combos, reencode  # noqa: E402
+from repro.core.search import adc_scan, adc_scan_flat  # noqa: E402
+
+SETTINGS = dict(max_examples=20, deadline=None)
+
+
+@given(
+    n=st.integers(10, 400),
+    m=st.sampled_from([4, 8, 16]),
+    n_combos=st.integers(1, 32),
+    seed=st.integers(0, 10_000),
+)
+@settings(**SETTINGS)
+def test_property_distance_invariance(n, m, n_combos, seed):
+    """For ANY codes and ANY mined combo set, re-encoding preserves ADC
+    distances -- the optimization can never change recall."""
+    rng = np.random.default_rng(seed)
+    # low-cardinality codes -> dense co-occurrence structure
+    codes = rng.integers(0, 7, (n, m)).astype(np.uint8)
+    combos = mine_combos(codes, n_combos=n_combos, max_rows=n)
+    enc = reencode(codes, combos)
+    lut = rng.normal(0, 1, (m, 256)).astype(np.float32)
+    ext = build_ext_lut(
+        jnp.asarray(lut), jnp.asarray(combos.cols), jnp.asarray(combos.codes)
+    )
+    d_plain = np.asarray(adc_scan(jnp.asarray(lut), jnp.asarray(codes)))
+    d_flat = np.asarray(
+        adc_scan_flat(ext, jnp.asarray(enc.addrs.astype(np.int32)))
+    )
+    np.testing.assert_allclose(d_plain, d_flat, rtol=1e-4, atol=1e-4)
+
+
+@given(seed=st.integers(0, 10_000))
+@settings(**SETTINGS)
+def test_property_reencode_lengths(seed):
+    rng = np.random.default_rng(seed)
+    codes = rng.integers(0, 5, (200, 8)).astype(np.uint8)
+    combos = mine_combos(codes, n_combos=16, max_rows=200)
+    enc = reencode(codes, combos)
+    # each matched combo removes exactly combo_len - 1 entries
+    assert ((8 - enc.lengths) % (combos.combo_len - 1) == 0).all()
+    # addresses inside table bounds
+    assert int(enc.addrs.max(initial=0)) < enc.table_size

@@ -1,0 +1,91 @@
+"""Hypothesis property tests for Algorithm 1 + Algorithm 2.
+
+Requires the `[test]` extra (`pip install -e .[test]`); skipped cleanly when
+hypothesis is missing so the tier-1 suite still collects.
+"""
+
+import numpy as np
+import pytest
+
+pytest.importorskip("hypothesis")
+
+from hypothesis import given, settings, strategies as st  # noqa: E402
+
+from repro.core.placement import place_clusters  # noqa: E402
+from repro.core.scheduling import (  # noqa: E402
+    schedule_queries,
+    schedule_queries_loop,
+)
+
+SETTINGS = dict(max_examples=25, deadline=None)
+
+
+@given(
+    c=st.integers(4, 64),
+    ndev=st.integers(1, 12),
+    seed=st.integers(0, 1000),
+)
+@settings(**SETTINGS)
+def test_placement_properties(c, ndev, seed):
+    rng = np.random.default_rng(seed)
+    sizes = (rng.zipf(1.5, c) * 10).clip(1, 5000).astype(np.int64)
+    freqs = rng.random(c) + 1e-3
+    pl = place_clusters(sizes, freqs, ndev)
+    assert all(len(r) >= 1 for r in pl.replicas)
+    assert all(len(set(r)) == len(r) for r in pl.replicas)
+    assert (pl.dev_load >= 0).all()
+    # total placed workload == sum of w_i (each cluster's workload split
+    # across its replicas)
+    np.testing.assert_allclose(
+        pl.dev_load.sum(), (sizes * freqs).sum(), rtol=1e-9
+    )
+
+
+@given(
+    q=st.integers(1, 30),
+    nprobe=st.integers(1, 8),
+    seed=st.integers(0, 1000),
+)
+@settings(**SETTINGS)
+def test_schedule_properties(q, nprobe, seed):
+    rng = np.random.default_rng(seed)
+    c, ndev = 32, 6
+    sizes = (rng.zipf(1.5, c) * 10).clip(1, 2000).astype(np.int64)
+    freqs = rng.random(c) + 1e-3
+    pl = place_clusters(sizes, freqs, ndev)
+    probed = np.stack(
+        [rng.choice(c, nprobe, replace=False) for _ in range(q)]
+    )
+    sch = schedule_queries(probed, sizes, pl)
+    assert sch.num_pairs() == q * nprobe
+    for d in range(ndev):
+        for qi, ci in sch.assigned[d]:
+            assert d in pl.replicas[ci]
+    # scheduled load accounting matches
+    np.testing.assert_allclose(
+        sch.dev_load.sum(), sum(sizes[c_] for row in probed for c_ in row)
+    )
+
+
+@given(
+    q=st.integers(1, 40),
+    nprobe=st.integers(1, 8),
+    ndev=st.integers(1, 10),
+    seed=st.integers(0, 5000),
+)
+@settings(**SETTINGS)
+def test_vectorized_matches_loop_oracle(q, nprobe, ndev, seed):
+    """Vectorized Algorithm 2 == per-pair loop oracle on arbitrary inputs."""
+    rng = np.random.default_rng(seed)
+    c = max(nprobe, 16)
+    sizes = (rng.zipf(1.5, c) * 10).clip(1, 2000).astype(np.int64)
+    freqs = rng.zipf(1.3, c).astype(np.float64)
+    pl = place_clusters(sizes, freqs, ndev)
+    probed = np.stack(
+        [rng.choice(c, nprobe, replace=False) for _ in range(q)]
+    )
+    vec = schedule_queries(probed, sizes, pl)
+    ref = schedule_queries_loop(probed, sizes, pl)
+    np.testing.assert_allclose(vec.dev_load, ref.dev_load, rtol=1e-12)
+    assert vec.max_imbalance() == pytest.approx(ref.max_imbalance(), rel=1e-12)
+    assert vec.assigned == ref.assigned

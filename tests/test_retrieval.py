@@ -53,7 +53,8 @@ def test_shard_layout_invariants(engines):
     assert (np.asarray(s.slot_start) % s.block_n == 0).all()
     # every placed cluster is found at its slot with the right size
     sizes = eng.index.cluster_sizes()
-    for (d, c), slot in s.local_slot.items():
+    for d, c in zip(*np.nonzero(s.local_slot >= 0)):
+        slot = s.local_slot[d, c]
         assert s.slot_cluster[d, slot] == c
         assert s.slot_size[d, slot] == sizes[c]
         start = s.slot_start[d, slot]
@@ -64,7 +65,7 @@ def test_shard_layout_invariants(engines):
     # replication: every cluster is present on every device of its replica set
     for c, reps in enumerate(eng.placement.replicas):
         for d in reps:
-            assert (d, c) in s.local_slot
+            assert s.local_slot[d, c] >= 0
 
 
 def test_engine_batch_invariance(engines, clustered_data):

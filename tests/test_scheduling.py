@@ -1,0 +1,120 @@
+"""Vectorized Algorithm 2 + densify vs the retained loop-reference oracle.
+
+These are the correctness gates for the vectorized host-side online path:
+the array implementation must cover every (query, cluster) pair exactly
+once, only use replica devices, and reproduce the reference greedy's device
+loads (hence `max_imbalance()`) exactly on integer cluster sizes.
+"""
+
+import numpy as np
+import pytest
+
+from repro.core.placement import place_clusters
+from repro.core.scheduling import (
+    densify_schedule,
+    schedule_queries,
+    schedule_queries_loop,
+    schedule_to_arrays,
+)
+
+
+def _random_case(seed, q=40, nprobe=8, c=64, ndev=8, zipf=1.4):
+    rng = np.random.default_rng(seed)
+    sizes = (rng.zipf(zipf, c) * 20).clip(1, 20000).astype(np.int64)
+    freqs = rng.zipf(1.3, c).astype(np.float64)
+    pl = place_clusters(sizes, freqs, ndev, centroids=rng.normal(0, 1, (c, 8)))
+    probed = np.stack([rng.choice(c, nprobe, replace=False) for _ in range(q)])
+    return probed, sizes, pl
+
+
+@pytest.mark.parametrize("seed", range(8))
+def test_covers_every_pair_exactly_once(seed):
+    probed, sizes, pl = _random_case(seed)
+    sch = schedule_queries(probed, sizes, pl)
+    got = sorted(zip(sch.pair_q.tolist(), sch.pair_c.tolist()))
+    want = sorted(
+        (q, int(c)) for q in range(probed.shape[0]) for c in probed[q]
+    )
+    assert got == want
+    # every pair lands on a device holding a replica of its cluster
+    for qi, c, d in zip(sch.pair_q, sch.pair_c, sch.pair_dev):
+        assert int(d) in pl.replicas[int(c)]
+
+
+@pytest.mark.parametrize(
+    "seed,q,nprobe,ndev",
+    [(s, q, p, n) for s in range(6) for q, p, n in [(40, 8, 8), (7, 3, 3)]]
+    + [(0, 1, 1, 1), (1, 64, 16, 12), (2, 5, 1, 16)],
+)
+def test_matches_loop_oracle(seed, q, nprobe, ndev):
+    """dev_load / max_imbalance / per-device pair lists all match exactly.
+
+    Cluster sizes are integers, so every load accumulation is exact in
+    float64 and the greedy tie-breaks are bit-identical between paths.
+    """
+    probed, sizes, pl = _random_case(seed, q=q, nprobe=nprobe, ndev=ndev)
+    vec = schedule_queries(probed, sizes, pl)
+    ref = schedule_queries_loop(probed, sizes, pl)
+    np.testing.assert_array_equal(vec.dev_load, ref.dev_load)
+    assert vec.max_imbalance() == ref.max_imbalance()
+    assert vec.num_pairs() == ref.num_pairs()
+    assert vec.assigned == ref.assigned
+
+
+def test_matches_loop_oracle_heavy_replication():
+    """One extremely hot cluster -> many replicas -> deep multi-replica path."""
+    rng = np.random.default_rng(0)
+    c, ndev = 32, 8
+    sizes = np.full(c, 500, np.int64)
+    freqs = np.ones(c)
+    freqs[3] = 400.0  # paper Fig. 4a skew: forces ncpy > 1
+    pl = place_clusters(sizes, freqs, ndev)
+    assert len(pl.replicas[3]) > 1
+    probed = np.stack(
+        [np.r_[3, rng.choice(c, 7, replace=False)] for _ in range(64)]
+    )
+    vec = schedule_queries(probed, sizes, pl)
+    ref = schedule_queries_loop(probed, sizes, pl)
+    np.testing.assert_array_equal(vec.dev_load, ref.dev_load)
+    assert vec.assigned == ref.assigned
+
+
+def test_zero_size_cluster():
+    """Empty clusters add no load and all go to the first least-loaded replica."""
+    sizes = np.array([0, 100], np.int64)
+    pl = place_clusters(np.array([1, 100]), np.array([5.0, 1.0]), 2)
+    probed = np.zeros((6, 1), np.int64)  # everyone probes cluster 0
+    vec = schedule_queries(probed, sizes, pl)
+    ref = schedule_queries_loop(probed, sizes, pl)
+    np.testing.assert_array_equal(vec.dev_load, ref.dev_load)
+    assert vec.assigned == ref.assigned
+    assert vec.dev_load.sum() == 0.0
+
+
+@pytest.mark.parametrize("seed", range(5))
+def test_densify_matches_reference(seed):
+    """Vectorized densify == loop `schedule_to_arrays` on the same schedule."""
+    probed, sizes, pl = _random_case(seed)
+    vec = schedule_queries(probed, sizes, pl)
+    ref = schedule_queries_loop(probed, sizes, pl)
+    ndev = vec.ndev
+    # synthetic dense local_slot covering every replica (slot = rank on dev)
+    local_slot = np.full((ndev, sizes.shape[0]), -1, np.int32)
+    for d in range(ndev):
+        for s, c in enumerate(pl.dev_clusters[d]):
+            local_slot[d, c] = s
+    cap = int(vec.counts_per_dev().max())
+    q_v, s_v, v_v = densify_schedule(vec, local_slot, cap)
+    q_r, s_r, v_r = schedule_to_arrays(ref, local_slot, cap)
+    np.testing.assert_array_equal(q_v, q_r)
+    np.testing.assert_array_equal(s_v, s_r)
+    np.testing.assert_array_equal(v_v, v_r)
+
+
+def test_densify_overflow_raises():
+    probed, sizes, pl = _random_case(0)
+    vec = schedule_queries(probed, sizes, pl)
+    local_slot = np.zeros((vec.ndev, sizes.shape[0]), np.int32)
+    cap = int(vec.counts_per_dev().max())
+    with pytest.raises(ValueError, match="capacity"):
+        densify_schedule(vec, local_slot, cap - 1)

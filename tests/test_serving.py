@@ -1,0 +1,82 @@
+"""ServingEngine: micro-batched serving must equal direct engine search,
+never recompile in steady state after warmup, and keep honest stats."""
+
+import numpy as np
+import jax
+import pytest
+
+from repro.retrieval import MemANNSEngine, ServingEngine, round_capacity
+
+
+@pytest.fixture(scope="module")
+def engine(clustered_data):
+    xs, centers, qs, hist = clustered_data
+    return MemANNSEngine.build(
+        jax.random.PRNGKey(0), xs, n_clusters=32, m=8,
+        history_queries=hist, use_cooc=False, n_combos=32,
+        block_n=256, kmeans_iters=8, pq_iters=6,
+    )
+
+
+def test_round_capacity():
+    assert round_capacity(0) == 8
+    assert round_capacity(1) == 8
+    assert round_capacity(8) == 8
+    assert round_capacity(9) == 16
+    assert round_capacity(100) == 128
+    assert round_capacity(3, floor=2) == 4
+
+
+def test_serving_matches_engine(engine, clustered_data):
+    xs, _, qs, _ = clustered_data
+    srv = ServingEngine(engine, nprobe=8, k=10, micro_batch=8)
+    srv.warmup()
+    sd, si = srv.search(qs)
+    # the whole batch at once through the plain engine
+    ed, ei = engine.search(qs, nprobe=8, k=10)
+    np.testing.assert_array_equal(si, ei)
+    np.testing.assert_allclose(sd, ed, rtol=1e-5, atol=1e-5)
+
+
+def test_ragged_tail_padding(engine, clustered_data):
+    """A final partial micro-batch is padded, results sliced: same answers."""
+    xs, _, qs, _ = clustered_data
+    srv = ServingEngine(engine, nprobe=8, k=5, micro_batch=16)
+    srv.warmup()
+    sd, si = srv.search(qs[:13])  # 13 < 16 -> padded tail
+    ed, ei = engine.search(qs[:13], nprobe=8, k=5)
+    np.testing.assert_array_equal(si, ei)
+    assert si.shape == (13, 5)
+
+
+def test_no_recompile_after_warmup(engine, clustered_data):
+    xs, _, qs, _ = clustered_data
+    srv = ServingEngine(engine, nprobe=8, k=10, micro_batch=8)
+    buckets = srv.warmup()
+    assert buckets == sorted(buckets)
+    rng = np.random.default_rng(0)
+    for _ in range(4):  # steady-state traffic, varying content
+        batch = qs[rng.integers(0, qs.shape[0], 8)]
+        srv.search(batch)
+    assert srv.stats.compiles == 0, srv.stats
+    assert srv.stats.batches == 4
+    assert srv.stats.queries == 32
+    assert set(srv.stats.bucket_hits) <= set(buckets)
+    assert srv.stats.host_s > 0 and srv.stats.device_s > 0
+    assert 0.0 < srv.stats.host_fraction() < 1.0
+
+
+def test_submit_flush(engine, clustered_data):
+    xs, _, qs, _ = clustered_data
+    srv = ServingEngine(engine, nprobe=8, k=5, micro_batch=8)
+    srv.warmup()
+    srv.submit(qs[0])          # single 1-D query
+    srv.submit(qs[1:6])
+    assert srv.pending() == 6
+    fd, fi = srv.flush()
+    assert srv.pending() == 0
+    ed, ei = engine.search(qs[:6], nprobe=8, k=5)
+    np.testing.assert_array_equal(fi, ei)
+    # empty flush is a no-op
+    d0, i0 = srv.flush()
+    assert d0.shape == (0, 5) and i0.shape == (0, 5)

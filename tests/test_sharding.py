@@ -16,10 +16,17 @@ from repro.models.sharding import (
 )
 
 
+def _abstract_mesh(sizes, names):
+    try:  # jax >= 0.5 signature: (sizes, names)
+        return jax.sharding.AbstractMesh(sizes, names)
+    except TypeError:  # jax 0.4.x signature: ((name, size), ...)
+        return jax.sharding.AbstractMesh(tuple(zip(names, sizes)))
+
+
 @pytest.fixture
 def mesh():
     # abstract mesh: no devices needed for spec logic
-    return jax.sharding.AbstractMesh((4, 2), ("data", "model"))
+    return _abstract_mesh((4, 2), ("data", "model"))
 
 
 def test_param_rules(mesh):
@@ -41,7 +48,7 @@ def test_fit_spec_drops_nondivisible(mesh):
     assert fit_spec(P("model", "data"), (50280, 768), mesh) == P("model", "data")
     assert fit_spec(P("data", None), (50281, 768), mesh) == P(None, None)
     # tuple axes partially dropped
-    m3 = jax.sharding.AbstractMesh((2, 4, 2), ("pod", "data", "model"))
+    m3 = _abstract_mesh((2, 4, 2), ("pod", "data", "model"))
     assert fit_spec(P(("pod", "data")), (2,), m3) == P("pod")
     assert fit_spec(P(("pod", "data")), (8,), m3) == P(("pod", "data"))
     assert fit_spec(P(("pod", "data")), (1,), m3) == P(None)
@@ -51,7 +58,7 @@ def test_mesh_axes_and_batch_spec(mesh):
     dp, fsdp, tp = mesh_axes(mesh)
     assert dp == ("data",) and fsdp == "data" and tp == "model"
     assert batch_spec(mesh) == P(("data",), None)
-    m3 = jax.sharding.AbstractMesh((2, 4, 2), ("pod", "data", "model"))
+    m3 = _abstract_mesh((2, 4, 2), ("pod", "data", "model"))
     assert batch_spec(m3) == P(("pod", "data"), None)
 
 

@@ -54,12 +54,6 @@ def test_skewed_workload_balances(system):
 def test_cooc_reduces_scan_entries(system):
     """§4.3's purpose: fewer table accesses per scanned vector."""
     rcfg, xs, qstream, eng = system
-    sizes = eng.index.cluster_sizes()
-    total_entries_plain = int(sizes.sum()) * rcfg.m
-    lengths = []
-    for d in range(eng.shards.ndev):
-        for (dd, c), slot in eng.shards.local_slot.items():
-            pass
     # effective width from the shards: count non-sentinel addresses
     s = eng.shards
     real = (np.asarray(s.codes) != s.sentinel).sum()
