@@ -9,6 +9,7 @@ nprobe=32 -- the host-bottleneck numbers the serving layer depends on.
 
 from __future__ import annotations
 
+import dataclasses
 import time
 
 import numpy as np
@@ -124,6 +125,29 @@ def run():
     assert speedup >= 5.0, (
         f"vectorized schedule+densify only {speedup:.1f}x faster than loop "
         f"reference (need >= 5x)"
+    )
+
+    # --- tile-list vs padded-window device scan (rows-scanned ratio) --------
+    # device wall-clock is P x max-cluster-window on the windows path but
+    # sum(actual probed rows) on the tiles path; the ratio is the headline
+    qs_s = stream.queries(32, seed=6)
+    eng_w = dataclasses.replace(eng, scan="windows")
+    qps_t = _qps(lambda: eng.search(qs_s, nprobe=16, k=10), len(qs_s))
+    qps_w = _qps(lambda: eng_w.search(qs_s, nprobe=16, k=10), len(qs_s))
+    plan_t = eng.plan_batch(qs_s, 16)
+    plan_w = eng_w.plan_batch(qs_s, 16)
+    rows_t = eng.scanned_rows(plan_t)
+    rows_w = eng_w.scanned_rows(plan_w)
+    emit(
+        "tiles_vs_windows_ivf64_nprobe16",
+        1e6 * len(qs_s) / qps_t,
+        f"tiles_qps={qps_t:.1f};windows_qps={qps_w:.1f};"
+        f"rows_tiles={rows_t};rows_windows={rows_w};"
+        f"rows_ratio={rows_t / rows_w:.3f}",
+    )
+    assert rows_t < rows_w, (
+        f"tiles path scanned {rows_t} rows >= windows {rows_w} on a "
+        f"skewed layout"
     )
 
 

@@ -39,6 +39,58 @@ def run():
             f"tiles_pruned={skipped}/{tiles}",
         )
 
+    # kernel-level tiles vs windows on a skewed synthetic layout: one giant
+    # cluster forces the windows path to pad every pair to its window
+    m2, bn = 8, 256
+    sizes = [4096] + [64] * 15
+    starts, cursor = [], 0
+    for s in sizes:
+        starts.append(cursor)
+        cursor += -(-s // bn) * bn
+    p = len(sizes)
+    codes_dev = jnp.asarray(
+        RNG.integers(0, 256, (cursor, m2)).astype(np.uint8)
+    )
+    tables = jnp.asarray(
+        RNG.normal(0, 1, (p, m2 * 256 + 1)).astype(np.float32)
+    )
+    n_valid = jnp.asarray(sizes, jnp.int32)
+    starts_a = jnp.asarray(starts, jnp.int32)
+    window = -(-max(sizes) // bn) * bn
+    from repro.core.scheduling import emit_tiles
+
+    total_tiles = sum(-(-s // bn) for s in sizes)
+    tp, tb, tr = emit_tiles(
+        np.arange(p, dtype=np.int32).reshape(1, p),
+        np.ones((1, p), bool),
+        np.asarray(starts, np.int32).reshape(1, p),
+        np.asarray(sizes, np.int32).reshape(1, p),
+        bn,
+        total_tiles,
+    )
+    t_win = time_fn(
+        lambda: ops.adc_topk_windows(
+            tables, codes_dev, starts_a, n_valid, 10,
+            window=window, block_n=bn, add_offsets=True,
+        ),
+        iters=3,
+    )
+    t_til = time_fn(
+        lambda: ops.adc_topk_tiles(
+            tables, codes_dev, jnp.asarray(tp[0]), jnp.asarray(tb[0]),
+            jnp.asarray(tr[0]), n_valid, 10, block_n=bn, add_offsets=True,
+        ),
+        iters=3,
+    )
+    rows_w = p * window
+    rows_t = total_tiles * bn
+    emit(
+        "tiles_vs_windows_kernel_skew",
+        t_til,
+        f"windows_us={t_win:.1f};rows_tiles={rows_t};rows_windows={rows_w};"
+        f"rows_ratio={rows_t / rows_w:.3f}",
+    )
+
     # end-to-end k sweep on the engine (paper Fig. 17 shape)
     xs, stream, eng = small_system(n=15000, c=48)
     qs = stream.queries(32, seed=2)

@@ -22,6 +22,7 @@ MODULES = [
     ("bench_read_size", "Fig 9/15 MRAM-read-size analogue"),
     ("bench_threads", "Fig 16 tasklet analogue"),
     ("bench_topk", "Fig 12/17 top-k size + pruning"),
+    ("bench_tiles", "tile-list vs padded-window device scan"),
 ]
 
 

@@ -30,13 +30,18 @@ xs, centers, _ = make_clustered_vectors(
     20_000, cfg.d_model, 64, pattern_pool=32
 )
 stream = SkewedVectorDataset(centers)
+# scan="tiles" (default) serves from the flat tile work queue; warmup below
+# also pre-warms every reachable tile-count bucket so steady-state retrieval
+# never recompiles (scan="windows" selects the padded-window scan instead)
 engine = MemANNSEngine.build(
     jax.random.PRNGKey(1), xs, n_clusters=64, m=8,
     history_queries=stream.queries(200, seed=1), use_cooc=True, block_n=256,
+    scan="tiles",
 )
 serving = ServingEngine(engine, nprobe=NPROBE, k=K, micro_batch=BATCH)
 buckets = serving.warmup()
-print(f"serving warmed: micro_batch={BATCH}, pair buckets={buckets}")
+print(f"serving warmed: micro_batch={BATCH}, scan={engine.scan}, "
+      f"pair buckets={buckets}")
 
 # --- serve a batch ----------------------------------------------------------
 tokens = jax.random.randint(jax.random.PRNGKey(2), (BATCH, PROMPT), 0, cfg.vocab_size)

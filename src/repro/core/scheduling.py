@@ -271,6 +271,97 @@ def densify_schedule(
     return q_idx, s_idx, valid
 
 
+def count_tiles(
+    pair_valid: np.ndarray,
+    n_valid: np.ndarray,
+    block_n: int,
+) -> np.ndarray:
+    """(ndev,) number of real code tiles implied by a densified schedule.
+
+    Args:
+      pair_valid: (ndev, P) bool from `densify_schedule`.
+      n_valid: (ndev, P) int valid rows of each pair's cluster slot.
+      block_n: kernel tile height (rows per grid step).
+    """
+    nv = np.where(pair_valid, n_valid, 0)
+    return ((nv + block_n - 1) // block_n).sum(axis=1)
+
+
+def emit_tiles(
+    pair_slot: np.ndarray,
+    pair_valid: np.ndarray,
+    slot_start: np.ndarray,
+    slot_size: np.ndarray,
+    block_n: int,
+    tiles_per_dev: int,
+) -> tuple[np.ndarray, np.ndarray, np.ndarray]:
+    """Vectorized tile emission: expand scheduled pairs to a flat work queue.
+
+    Each valid (query, cluster) pair expands to ceil(slot_size / block_n)
+    tiles; the per-device tile lists are padded to `tiles_per_dev` with
+    dummy tiles whose pair id is P (== pairs_per_dev) -- the tiles kernel
+    appends a zero table row and a zero n_valid entry at index P, so dummy
+    tiles always prune away.  Within a pair, tiles appear in ascending row
+    order, so the kernel's running merge visits exactly the same tile
+    sequence as the padded-window path (bit-identical results).
+
+    Args:
+      pair_slot: (ndev, P) int32 local cluster slot of each pair.
+      pair_valid: (ndev, P) bool, False on densify padding.
+      slot_start: (ndev, S) int32 block-aligned slot row starts.
+      slot_size: (ndev, S) int32 valid rows per slot.
+      block_n: kernel tile height (rows per grid step).
+      tiles_per_dev: fixed per-device tile capacity (padded tail dummy).
+
+    Returns:
+      (tile_pair (ndev, T), tile_block (ndev, T), tile_row0 (ndev, T))
+      int32 arrays: owning pair id, device code-block index, and the
+      window-relative row of the tile's first code row (block_n-aligned).
+    """
+    ndev, p_cap = pair_slot.shape
+    nv = np.where(
+        pair_valid, np.take_along_axis(slot_size, pair_slot, axis=1), 0
+    )
+    ntiles = (nv + block_n - 1) // block_n          # (ndev, P)
+    totals = ntiles.sum(axis=1)
+    over = int(totals.max(initial=0))
+    if over > tiles_per_dev:
+        d_bad = int(totals.argmax())
+        raise ValueError(
+            f"device {d_bad} emits {over} tiles > capacity {tiles_per_dev}"
+        )
+
+    tile_pair = np.full((ndev, tiles_per_dev), p_cap, np.int32)
+    tile_block = np.zeros((ndev, tiles_per_dev), np.int32)
+    tile_row0 = np.zeros((ndev, tiles_per_dev), np.int32)
+    counts = ntiles.ravel()
+    if counts.sum() == 0:
+        return tile_pair, tile_block, tile_row0
+
+    # one np.repeat expands every (device, pair) to its tile run; local tile
+    # index = position minus the run start, device slot = position minus the
+    # device's first run start
+    rep = np.repeat(np.arange(ndev * p_cap, dtype=np.int64), counts)
+    run_end = np.cumsum(counts)
+    run_start = np.repeat(run_end - counts, counts)
+    local_t = (np.arange(rep.shape[0], dtype=np.int64) - run_start).astype(
+        np.int32
+    )
+    rep_dev = (rep // p_cap).astype(np.int64)
+    rep_pair = (rep % p_cap).astype(np.int32)
+    dev_start = np.zeros(ndev, np.int64)
+    np.cumsum(totals[:-1], out=dev_start[1:])
+    pos = np.arange(rep.shape[0], dtype=np.int64) - dev_start[rep_dev]
+
+    start_rows = np.take_along_axis(slot_start, pair_slot, axis=1)
+    tile_pair[rep_dev, pos] = rep_pair
+    tile_block[rep_dev, pos] = (
+        start_rows[rep_dev, rep_pair] // block_n + local_t
+    )
+    tile_row0[rep_dev, pos] = local_t * block_n
+    return tile_pair, tile_block, tile_row0
+
+
 def schedule_to_arrays(
     schedule: Schedule,
     local_slot: np.ndarray,

@@ -160,6 +160,14 @@ def _adc_topk_tiles_kernel(
     one work item per REAL code block, so no padded-window DMA at all.  The
     running top-k lives in a (P+1, k) VMEM scratch (row P = dummy tiles).
 
+    Each grid step writes its pair's (1, k) output row from the scratch;
+    tiles of one pair are contiguous in the work list (emit_tiles orders
+    them pair-major), so the final visit of a row carries the pair's
+    complete top-k.  Rows of pairs with no tiles are never written -- the
+    caller masks pairs with n_valid == 0 to (inf, -1).  (Writing the whole
+    (P+1, k) output as one constant-index block instead trips an XLA
+    sharding-propagation crash under shard_map on CPU.)
+
     This is Algorithm 2 pushed down to tile granularity: the same idea the
     paper uses to balance DPUs, reused to keep every DMA useful."""
     t = pl.program_id(0)
@@ -197,12 +205,8 @@ def _adc_topk_tiles_kernel(
         sv[pair, :] = out_v
         si[pair, :] = out_i
 
-    nt = pl.num_programs(0)
-
-    @pl.when(t == nt - 1)
-    def _out():
-        vals_out[...] = sv[...]
-        idx_out[...] = si[...]
+    vals_out[...] = sv[pair, :].reshape(1, k)
+    idx_out[...] = si[pair, :].reshape(1, k)
 
 
 @functools.partial(
@@ -223,9 +227,16 @@ def adc_topk_tiles_kernel(
     add_offsets: bool = False,
     interpret: bool = False,
 ) -> tuple[jax.Array, jax.Array]:
-    """Flat work-queue fused scan+top-k: one grid step per REAL code tile."""
+    """Flat work-queue fused scan+top-k: one grid step per REAL code tile.
+
+    tile_pair must be pair-major ordered (all tiles of a pair contiguous,
+    ascending rows) as produced by `emit_tiles`.  Output rows of pairs that
+    emitted no tiles (n_valid == 0) are UNDEFINED -- callers must mask them
+    to (inf, -1) to match the windows kernel's contract.
+    """
     p, t_sz = tables.shape
     t_n = tile_pair.shape[0]
+    assert codes.shape[0] % block_n == 0
     w = codes.shape[1]
     # dummy tiles reference table row P (a zero row appended here) and
     # n_valid row P (zero) -> their merges always prune away
@@ -243,8 +254,8 @@ def adc_topk_tiles_kernel(
             pl.BlockSpec((block_n, w), lambda ti, tp, tb, tr, nv: (tb[ti], 0)),
         ],
         out_specs=[
-            pl.BlockSpec((p + 1, k), lambda ti, tp, tb, tr, nv: (0, 0)),
-            pl.BlockSpec((p + 1, k), lambda ti, tp, tb, tr, nv: (0, 0)),
+            pl.BlockSpec((1, k), lambda ti, tp, tb, tr, nv: (tp[ti], 0)),
+            pl.BlockSpec((1, k), lambda ti, tp, tb, tr, nv: (tp[ti], 0)),
         ],
         scratch_shapes=[
             pltpu.VMEM((p + 1, k), tables.dtype),
@@ -363,14 +374,25 @@ def adc_topk_windows_kernel(
     """
     p, t_sz = tables.shape
     assert window % block_n == 0
+    assert codes.shape[0] % block_n == 0
     w = codes.shape[1]
+    # clamp the streamed block index so a window that would overrun the last
+    # cluster's storage re-reads the final block instead (those rows are
+    # already masked by n_valid) -- lets the layout drop its overrun pad
+    nblocks = codes.shape[0] // block_n
     grid = (p, window // block_n)
     grid_spec = pltpu.PrefetchScalarGridSpec(
         num_scalar_prefetch=2,
         grid=grid,
         in_specs=[
             pl.BlockSpec((1, t_sz), lambda pi, ti, sb, nv: (pi, 0)),
-            pl.BlockSpec((block_n, w), lambda pi, ti, sb, nv: (sb[pi] + ti, 0)),
+            pl.BlockSpec(
+                (block_n, w),
+                lambda pi, ti, sb, nv: (
+                    jnp.minimum(sb[pi] + ti, nblocks - 1),
+                    0,
+                ),
+            ),
         ],
         out_specs=[
             pl.BlockSpec((1, k), lambda pi, ti, sb, nv: (pi, 0)),

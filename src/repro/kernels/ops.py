@@ -6,6 +6,9 @@ API (all return the same values as the matching ref.py oracle):
   adc_scan_flat(ext_lut, addrs)       direct-address ADC distances
   adc_topk(luts, codes, k)            fused scan + top-k (multi-query)
   adc_topk_flat(ext_luts, addrs, k)   ... over co-occ encoded codes
+  adc_topk_pairs(tables, addrs, ...)  per-pair materialized windows
+  adc_topk_windows(tables, codes, .)  per-pair padded windows, shared codes
+  adc_topk_tiles(tables, codes, ...)  flat tile work queue, shared codes
   build_luts(codebook, qmc)           stage-(b) LUT construction
   build_ext_luts(luts, cols, codes)   fused [LUT | combo sums | 0] tables
 """
@@ -235,6 +238,50 @@ def adc_topk_windows(
         n_valid.astype(jnp.int32),
         k=k,
         window=window,
+        block_n=block_n,
+        path=path,
+        add_offsets=add_offsets,
+        interpret=interpret,
+    )
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("k", "block_n", "path", "add_offsets", "interpret"),
+)
+def adc_topk_tiles(
+    tables: jax.Array,
+    codes: jax.Array,
+    tile_pair: jax.Array,
+    tile_block: jax.Array,
+    tile_row0: jax.Array,
+    n_valid: jax.Array,
+    k: int,
+    *,
+    block_n: int = 1024,
+    path: str = "gather",
+    add_offsets: bool = False,
+    interpret: bool | None = None,
+) -> tuple[jax.Array, jax.Array]:
+    """Flat work-queue scan over a shared device-resident code array.
+
+    tables (P, A); codes (cap, W) (raw uint8 when add_offsets); tile_pair /
+    tile_block / tile_row0 (T,) int32 work items from `emit_tiles` (pair id
+    P marks dummy padding tiles); n_valid (P,).  One grid step per REAL code
+    tile -- device wall-clock is sum(actual probed rows), not
+    P * max-cluster window.
+    """
+    if interpret is None:
+        interpret = _interpret_default()
+    tables_p = _pad_table(tables)
+    return _topk.adc_topk_tiles_kernel(
+        tables_p,
+        codes,
+        tile_pair.astype(jnp.int32),
+        tile_block.astype(jnp.int32),
+        tile_row0.astype(jnp.int32),
+        n_valid.astype(jnp.int32),
+        k=k,
         block_n=block_n,
         path=path,
         add_offsets=add_offsets,

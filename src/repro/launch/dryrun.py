@@ -337,7 +337,9 @@ def retrieval_shapes(rcfg: RetrievalConfig, ndev: int, use_cooc: bool = False,
     align = lambda x: (x + bn - 1) // bn * bn
     avg = rcfg.n_vectors // rcfg.n_clusters
     window = align(4 * avg)                      # skewed max cluster ~ 4x avg
-    cap = align(int(1.2 * rcfg.n_vectors / ndev)) + window
+    # no window overrun pad: layout.py stopped allocating it (the windows
+    # kernel clamps its streamed block index at the last block)
+    cap = align(int(1.2 * rcfg.n_vectors / ndev))
     slots = int(math.ceil(1.5 * rcfg.n_clusters / ndev)) + 2
     pairs = 1 << math.ceil(
         math.log2(max(8, 1.3 * rcfg.batch_queries * rcfg.nprobe / ndev))
@@ -363,8 +365,16 @@ def retrieval_shapes(rcfg: RetrievalConfig, ndev: int, use_cooc: bool = False,
 def lower_retrieval_cell(rcfg: RetrievalConfig, multi_pod: bool,
                          use_cooc: bool = False, path: str = "gather",
                          interpret: bool = True, compact_dtype: bool = True,
-                         width: int | None = None):
-    """lower + compile the sharded MemANNS search at paper scale."""
+                         width: int | None = None, scan: str = "tiles",
+                         tiles_per_dev: int | None = None):
+    """lower + compile the sharded MemANNS search at paper scale.
+
+    scan="tiles" (the engine's production default) lowers the flat
+    work-queue variant; tiles_per_dev defaults to the worst-case capacity
+    bucket (pairs * window/block_n, every pair scanning a full window) --
+    pass your workload's measured tile budget for a tighter roofline.
+    scan="windows" lowers the padded-window variant instead.
+    """
     from repro.retrieval.search import DPU_AXIS, sharded_search
 
     mesh = make_retrieval_mesh(512 if multi_pod else 256)
@@ -374,6 +384,10 @@ def lower_retrieval_cell(rcfg: RetrievalConfig, multi_pod: bool,
     dev = jax.sharding.NamedSharding(mesh, jax.sharding.PartitionSpec(DPU_AXIS))
     rep = jax.sharding.NamedSharding(mesh, jax.sharding.PartitionSpec())
 
+    tiles = 1  # fixed-width placeholder on the windows path
+    if scan == "tiles":
+        worst = s["pairs"] * max(s["window"] // s["block_n"], 1)
+        tiles = tiles_per_dev if tiles_per_dev is not None else worst
     args = (
         _sds((ndev, s["cap"], s["width"]), jnp.dtype(s["code_dtype"]), dev),  # codes
         _sds((ndev, s["cap"]), jnp.int32, dev),                   # vec_ids
@@ -385,12 +399,15 @@ def lower_retrieval_cell(rcfg: RetrievalConfig, multi_pod: bool,
         _sds((ndev, s["pairs"]), jnp.int32, dev),                 # pair_q
         _sds((ndev, s["pairs"]), jnp.int32, dev),                 # pair_slot
         _sds((ndev, s["pairs"]), bool, dev),                      # pair_valid
+        _sds((ndev, tiles), jnp.int32, dev),                      # tile_pair
+        _sds((ndev, tiles), jnp.int32, dev),                      # tile_block
+        _sds((ndev, tiles), jnp.int32, dev),                      # tile_row0
     )
     fn = functools.partial(
         sharded_search,
         mesh=mesh, n_queries=s["q"], k=s["k"], block_n=s["block_n"],
         window=s["window"], path=path, add_offsets=s["add_offsets"],
-        interpret=interpret,
+        scan=scan, interpret=interpret,
     )
     with mesh:
         lowered = jax.jit(fn).lower(*args)

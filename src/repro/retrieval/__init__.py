@@ -2,8 +2,9 @@
 
   layout.py -- pack an IVFPQIndex + Placement (+ optional co-occ encoding)
                into per-device, block-aligned storage arrays
-  search.py -- the shard_map online path: on-device LUT build, per-pair
-               fused ADC+top-k kernel, local per-query merge, one all-gather
+  search.py -- the shard_map online path: on-device LUT build, fused
+               ADC+top-k scan (padded per-pair windows or the flat tile
+               work queue), local per-query merge, one all-gather
   engine.py -- MemANNSEngine: end-to-end build + query API (the paper's
                whole system behind one object)
   serving.py -- ServingEngine: micro-batched steady-state serving with

@@ -25,7 +25,9 @@ from repro.core.placement import (
 )
 from repro.core.scheduling import (
     ArraySchedule,
+    count_tiles,
     densify_schedule,
+    emit_tiles,
     schedule_queries,
 )
 from repro.retrieval.layout import DeviceShards, build_shards
@@ -63,6 +65,16 @@ class SearchPlan:
     schedule: ArraySchedule | None  # None for synthetic warmup plans
     n_queries: int
     pairs_per_dev: int
+    # tile-list work queue (scan="tiles" only; None on the windows path)
+    tile_pair: np.ndarray | None = None   # (ndev, T) int32, P marks dummies
+    tile_block: np.ndarray | None = None  # (ndev, T) int32 code-block index
+    tile_row0: np.ndarray | None = None   # (ndev, T) int32 window-rel row
+    tiles_per_dev: int = 0
+
+    @property
+    def scan(self) -> str:
+        """Device scan variant this plan was built for."""
+        return "tiles" if self.tile_pair is not None else "windows"
 
 
 @dataclasses.dataclass
@@ -72,6 +84,7 @@ class MemANNSEngine:
     shards: DeviceShards
     mesh: jax.sharding.Mesh
     path: str = "gather"
+    scan: str = "tiles"  # device scan variant: "tiles" | "windows"
     interpret: bool | None = None
     _dev_arrays: tuple | None = None
 
@@ -92,6 +105,7 @@ class MemANNSEngine:
         kmeans_iters: int = 15,
         pq_iters: int = 10,
         path: str = "gather",
+        scan: str = "tiles",
         interpret: bool | None = None,
     ) -> "MemANNSEngine":
         mesh = mesh or make_dpu_mesh()
@@ -129,6 +143,7 @@ class MemANNSEngine:
             shards=shards,
             mesh=mesh,
             path=path,
+            scan=scan,
             interpret=interpret,
         )
 
@@ -176,11 +191,15 @@ class MemANNSEngine:
         nprobe: int,
         pairs_per_dev: int | None = None,
         capacity_floor: int = 8,
+        tiles_per_dev: int | None = None,
     ) -> SearchPlan:
         """Host-side online phase: filter + schedule + array densify.
 
         Everything after `filter_clusters` is pure numpy array ops — no
-        per-pair Python loops survive on this path.
+        per-pair Python loops survive on this path.  With `scan="tiles"`
+        the plan additionally carries the flat tile work queue; its
+        capacity is rounded to `pairs_per_dev * 2^i` buckets so serving
+        can pre-warm every reachable executable.
         """
         queries = np.asarray(queries, np.float32)
         q_n = queries.shape[0]
@@ -203,6 +222,24 @@ class MemANNSEngine:
         cols = np.argmax(probed[pq] == pc[:, None], axis=1)
         qmc_pairs = np.zeros((ndev, pairs_per_dev, queries.shape[1]), np.float32)
         qmc_pairs[d_sorted, pos] = qmc[pq, cols]
+
+        tile_pair = tile_block = tile_row0 = None
+        tiles_cap = 0
+        if self.scan == "tiles":
+            s = self.shards
+            if tiles_per_dev is None:
+                nv = np.take_along_axis(s.slot_size, pair_slot, axis=1)
+                max_tiles = int(
+                    count_tiles(pair_valid, nv, s.block_n).max(initial=0)
+                )
+                tiles_per_dev = round_capacity(
+                    max_tiles, floor=pairs_per_dev
+                )
+            tiles_cap = tiles_per_dev
+            tile_pair, tile_block, tile_row0 = emit_tiles(
+                pair_slot, pair_valid, s.slot_start, s.slot_size,
+                s.block_n, tiles_per_dev,
+            )
         return SearchPlan(
             qmc_pairs=qmc_pairs,
             pair_q=pair_q,
@@ -211,16 +248,33 @@ class MemANNSEngine:
             schedule=schedule,
             n_queries=q_n,
             pairs_per_dev=pairs_per_dev,
+            tile_pair=tile_pair,
+            tile_block=tile_block,
+            tile_row0=tile_row0,
+            tiles_per_dev=tiles_cap,
         )
 
     def execute_plan(
         self, plan: SearchPlan, k: int
     ) -> tuple[np.ndarray, np.ndarray]:
-        """Device-side online phase: one jitted shard_map step."""
+        """Device-side online phase: one jitted shard_map step.
+
+        The scan variant comes from the *plan* (a tiles plan carries its
+        tile queue), so plans stay executable even if `self.scan` changes.
+        """
         dev = self._device_put()
+        ndev = self.shards.ndev
         spec_dev = jax.sharding.NamedSharding(
             self.mesh, jax.sharding.PartitionSpec(DPU_AXIS)
         )
+        if plan.scan == "tiles":
+            tile_pair, tile_block, tile_row0 = (
+                plan.tile_pair, plan.tile_block, plan.tile_row0
+            )
+        else:  # fixed-width placeholders keep the jit cache key stable
+            tile_pair = np.zeros((ndev, 1), np.int32)
+            tile_block = np.zeros((ndev, 1), np.int32)
+            tile_row0 = np.zeros((ndev, 1), np.int32)
         out_d, out_i = sharded_search(
             *dev[:5],
             dev[5],
@@ -228,6 +282,9 @@ class MemANNSEngine:
             jax.device_put(plan.pair_q, spec_dev),
             jax.device_put(plan.pair_slot, spec_dev),
             jax.device_put(plan.pair_valid, spec_dev),
+            jax.device_put(tile_pair, spec_dev),
+            jax.device_put(tile_block, spec_dev),
+            jax.device_put(tile_row0, spec_dev),
             mesh=self.mesh,
             n_queries=plan.n_queries,
             k=k,
@@ -235,9 +292,23 @@ class MemANNSEngine:
             window=self.shards.window,
             path=self.path,
             add_offsets=self.shards.add_offsets,
+            scan=plan.scan,
             interpret=self.interpret,
         )
         return np.asarray(out_d), np.asarray(out_i)
+
+    def scanned_rows(self, plan: SearchPlan) -> int:
+        """Total code rows DMA'd by one execution of `plan` (all devices).
+
+        The windows path streams pairs_per_dev * window rows per device
+        regardless of cluster sizes; the tiles path streams one block per
+        emitted tile (dummy padding tiles included), i.e. ~sum(actual
+        probed rows) rounded up to the tile bucket.
+        """
+        ndev = self.shards.ndev
+        if plan.scan == "tiles":
+            return ndev * plan.tiles_per_dev * self.shards.block_n
+        return ndev * plan.pairs_per_dev * self.shards.window
 
     def search(
         self,

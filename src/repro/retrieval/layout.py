@@ -166,10 +166,12 @@ def build_shards(
     s_max = max(s_max, 1)
     window = _align(int(max(sizes.max(initial=1), 1)), block_n)
 
+    # no window overrun pad: the windows kernel clamps its streamed block
+    # index at the last block, and the tiles path carries explicit row counts
     caps = []
     for d in range(ndev):
         caps.append(sum(_align(int(sizes[c]), block_n) for c in placement.dev_clusters[d]))
-    cap = max(max(caps, default=block_n), block_n) + window  # window overrun pad
+    cap = max(max(caps, default=block_n), block_n)
 
     fill = 0 if add_offsets else sentinel  # padding rows are n_valid-masked
     codes = np.full((ndev, cap, width), fill, store_dtype)

@@ -4,8 +4,10 @@ Per device (== DPU):
   1. build LUTs for the (query, cluster) pairs Algorithm 2 assigned here
      (the host ships q - c residuals, the paper ships the same);
   2. extend each LUT with its cluster's combo partial sums (§4.3);
-  3. per-pair fused ADC scan + top-k Pallas kernel over the cluster's
-     block-aligned window (§4.2 + §4.4);
+  3. per-pair fused ADC scan + top-k Pallas kernel (§4.2 + §4.4): either
+     the padded-window variant (every pair scans a max-cluster-sized
+     window) or the tile-list variant (a flat queue of real code tiles,
+     so device work is sum(actual probed rows));
   4. per-query local merge of pair results (thread-heap merge analogue);
   5. one k-sized all-gather over the 'dpu' axis + final top-k
      (replaces the paper's DPU->CPU partial top-k transfer).
@@ -50,15 +52,18 @@ def search_static_key(
     window: int,
     path: str,
     add_offsets: bool,
+    scan: str = "windows",
+    tiles_per_dev: int = 0,
 ) -> tuple:
     """Compilation-cache key of one `sharded_search` instance.
 
     Two calls whose keys match hit the same jitted executable; the serving
     layer tracks warmed keys with this to guarantee steady-state batches
-    never recompile.
+    never recompile.  `tiles_per_dev` is the tile-list capacity (0 on the
+    windows path, where the dummy tile arrays have a fixed width of 1).
     """
     return (ndev, n_queries, pairs_per_dev, k, block_n, window, path,
-            add_offsets)
+            add_offsets, scan, tiles_per_dev)
 
 
 def _device_search(
@@ -72,6 +77,9 @@ def _device_search(
     pair_q,       # (P,) int32
     pair_slot,    # (P,) int32
     pair_valid,   # (P,) bool
+    tile_pair,    # (T,) int32            [device-local; (1,) dummy on windows]
+    tile_block,   # (T,) int32
+    tile_row0,    # (T,) int32
     *,
     n_queries: int,
     k: int,
@@ -79,6 +87,7 @@ def _device_search(
     window: int,
     path: str,
     add_offsets: bool,
+    scan: str,
     interpret: bool | None,
 ):
     p, d_dim = qmc.shape
@@ -106,16 +115,29 @@ def _device_search(
         zero = jnp.zeros((p, 1), luts.dtype)
         tables = jnp.concatenate([luts.reshape(p, -1), zero], axis=-1)
 
-    # --- stages (c)+(d): per-pair windowed fused scan + top-k ---------------
-    # windows are scalar-prefetch indexed inside the kernel (never
-    # materialized): the HBM->VMEM streaming loop of the DPU.
+    # --- stages (c)+(d): per-pair fused scan + top-k ------------------------
+    # both variants stream blocks of the shared code array via scalar
+    # prefetch (the HBM->VMEM loop of the DPU); "windows" pads every pair to
+    # the max-cluster window, "tiles" walks a flat queue of real tiles only.
     starts = slot_start[pair_slot]  # (P,) block-aligned by layout.py
     n_valid = jnp.where(pair_valid, slot_size[pair_slot], 0)
-    tv, ti = ops.adc_topk_windows(
-        tables, codes, starts, n_valid, k,
-        window=window, block_n=block_n, path=path,
-        add_offsets=add_offsets, interpret=interpret,
-    )  # (P, k) dists, (P, k) window-row idx
+    if scan == "tiles":
+        tv, ti = ops.adc_topk_tiles(
+            tables, codes, tile_pair, tile_block, tile_row0, n_valid, k,
+            block_n=block_n, path=path, add_offsets=add_offsets,
+            interpret=interpret,
+        )  # per-pair top-k sliced from the (P+1, k) scratch
+        # pairs that emitted no tiles have undefined output rows; mask to
+        # the windows kernel's init values so both paths stay bit-identical
+        empty = (n_valid <= 0)[:, None]
+        tv = jnp.where(empty, jnp.inf, tv)
+        ti = jnp.where(empty, -1, ti)
+    else:
+        tv, ti = ops.adc_topk_windows(
+            tables, codes, starts, n_valid, k,
+            window=window, block_n=block_n, path=path,
+            add_offsets=add_offsets, interpret=interpret,
+        )  # (P, k) dists, (P, k) window-row idx
 
     rows = starts[:, None] + ti                     # (P, k) device rows
     gids = jnp.where(ti >= 0, vec_ids[jnp.clip(rows, 0, None)], -1)
@@ -147,12 +169,13 @@ def _device_search(
     jax.jit,
     static_argnames=(
         "mesh", "n_queries", "k", "block_n", "window", "path",
-        "add_offsets", "interpret",
+        "add_offsets", "scan", "interpret",
     ),
 )
 def sharded_search(
     codes, vec_ids, slot_start, slot_size, combo_addrs,
     codebook, qmc, pair_q, pair_slot, pair_valid,
+    tile_pair, tile_block, tile_row0,
     *,
     mesh: jax.sharding.Mesh,
     n_queries: int,
@@ -161,24 +184,33 @@ def sharded_search(
     window: int,
     path: str = "gather",
     add_offsets: bool = False,
+    scan: str = "windows",
     interpret: bool | None = None,
 ):
-    """shard_map wrapper: leading dim of device arrays is the 'dpu' axis."""
+    """shard_map wrapper: leading dim of device arrays is the 'dpu' axis.
+
+    `scan` selects the device scan variant: "windows" (padded per-pair
+    windows) or "tiles" (flat work queue; `tile_*` are (ndev, T) arrays
+    from `emit_tiles`).  On the windows path `tile_*` are unused (pass any
+    (ndev, 1) int32 arrays; a fixed width keeps the jit cache stable).
+    """
     spec_dev = jax.sharding.PartitionSpec(DPU_AXIS)
     spec_rep = jax.sharding.PartitionSpec()
     fn = functools.partial(
         _device_search,
         n_queries=n_queries, k=k, block_n=block_n,
         window=window, path=path, add_offsets=add_offsets,
-        interpret=interpret,
+        scan=scan, interpret=interpret,
     )
 
     def per_device(codes, vec_ids, slot_start, slot_size, combo_addrs,
-                   codebook, qmc, pair_q, pair_slot, pair_valid):
+                   codebook, qmc, pair_q, pair_slot, pair_valid,
+                   tile_pair, tile_block, tile_row0):
         # strip the leading (size-1) shard dim
         return fn(
             codes[0], vec_ids[0], slot_start[0], slot_size[0], combo_addrs[0],
             codebook, qmc[0], pair_q[0], pair_slot[0], pair_valid[0],
+            tile_pair[0], tile_block[0], tile_row0[0],
         )
 
     return _shard_map(
@@ -187,9 +219,11 @@ def sharded_search(
         in_specs=(
             spec_dev, spec_dev, spec_dev, spec_dev, spec_dev,
             spec_rep, spec_dev, spec_dev, spec_dev, spec_dev,
+            spec_dev, spec_dev, spec_dev,
         ),
         out_specs=(spec_rep, spec_rep),
     )(
         codes, vec_ids, slot_start, slot_size, combo_addrs,
         codebook, qmc, pair_q, pair_slot, pair_valid,
+        tile_pair, tile_block, tile_row0,
     )

@@ -79,7 +79,7 @@ class ServingEngine:
 
     # ------------------------------------------------------------------ #
 
-    def _key(self, pairs_per_dev: int) -> tuple:
+    def _key(self, pairs_per_dev: int, tiles_per_dev: int = 0) -> tuple:
         s = self.engine.shards
         return search_static_key(
             ndev=s.ndev,
@@ -90,6 +90,8 @@ class ServingEngine:
             window=s.window,
             path=self.engine.path,
             add_offsets=s.add_offsets,
+            scan=self.engine.scan,
+            tiles_per_dev=tiles_per_dev,
         )
 
     def default_buckets(self) -> list[int]:
@@ -108,10 +110,35 @@ class ServingEngine:
         hi = round_capacity(total, floor=self.capacity_floor)
         return [lo << i for i in range(int(math.log2(hi // lo)) + 1)]
 
-    def _dummy_plan(self, pairs_per_dev: int) -> SearchPlan:
+    def tile_buckets(self, pairs_per_dev: int) -> list[int]:
+        """Reachable tile capacities for one pair bucket: b, 2b, .., b*wb.
+
+        A pair emits at most window/block_n tiles, so the auto-chosen tile
+        capacity (`round_capacity(max_tiles, floor=pairs_per_dev)`) always
+        lands on pairs_per_dev * 2^i with 2^i <= pow2(window/block_n);
+        warming exactly that ladder covers every schedule this config can
+        produce.
+        """
+        s = self.engine.shards
+        wb = max(s.window // s.block_n, 1)
+        wb2 = 1 << math.ceil(math.log2(wb))
+        return [
+            pairs_per_dev << i for i in range(int(math.log2(wb2)) + 1)
+        ]
+
+    def _dummy_plan(
+        self, pairs_per_dev: int, tiles_per_dev: int = 0
+    ) -> SearchPlan:
         """Shape-exact all-invalid plan: compiles without scheduling anything."""
         ndev = self.engine.shards.ndev
         dim = self.engine.index.centroids.shape[1]
+        tile_pair = tile_block = tile_row0 = None
+        if tiles_per_dev:  # all-dummy tile list (pair id P prunes away)
+            tile_pair = np.full(
+                (ndev, tiles_per_dev), pairs_per_dev, np.int32
+            )
+            tile_block = np.zeros((ndev, tiles_per_dev), np.int32)
+            tile_row0 = np.zeros((ndev, tiles_per_dev), np.int32)
         return SearchPlan(
             qmc_pairs=np.zeros((ndev, pairs_per_dev, dim), np.float32),
             pair_q=np.zeros((ndev, pairs_per_dev), np.int32),
@@ -120,6 +147,10 @@ class ServingEngine:
             schedule=None,
             n_queries=self.micro_batch,
             pairs_per_dev=pairs_per_dev,
+            tile_pair=tile_pair,
+            tile_block=tile_block,
+            tile_row0=tile_row0,
+            tiles_per_dev=tiles_per_dev,
         )
 
     def warmup(self, buckets: list[int] | None = None) -> list[int]:
@@ -128,12 +159,20 @@ class ServingEngine:
         jit caching is keyed by input shapes + static args, so one
         execution per bucket shape is the warm (the dummy plan marks every
         pair invalid, so nothing is scanned); afterwards any batch whose
-        capacity falls in `buckets` runs without compiling.
+        capacity falls in `buckets` runs without compiling.  On the tiles
+        scan path each pair bucket is warmed at every reachable tile
+        capacity (`tile_buckets`), so steady state never recompiles on
+        tile-count drift either.
         """
         buckets = sorted(buckets or self.default_buckets())
         for b in buckets:
-            self.engine.execute_plan(self._dummy_plan(b), self.k)
-            self._warm.add(self._key(b))
+            if self.engine.scan == "tiles":
+                for t in self.tile_buckets(b):
+                    self.engine.execute_plan(self._dummy_plan(b, t), self.k)
+                    self._warm.add(self._key(b, t))
+            else:
+                self.engine.execute_plan(self._dummy_plan(b), self.k)
+                self._warm.add(self._key(b))
         # warm the host path too (filter_clusters jit for this batch shape);
         # auto capacity, so a degenerate dummy schedule can never overflow
         dim = self.engine.index.centroids.shape[1]
@@ -160,7 +199,7 @@ class ServingEngine:
             queries, self.nprobe, capacity_floor=self.capacity_floor
         )
         t1 = time.perf_counter()
-        key = self._key(plan.pairs_per_dev)
+        key = self._key(plan.pairs_per_dev, plan.tiles_per_dev)
         if key not in self._warm:
             self.stats.compiles += 1
             self._warm.add(key)

@@ -1,0 +1,112 @@
+"""Hypothesis property tests for the vectorized tile emission.
+
+Requires the `[test]` extra (`pip install -e .[test]`); skipped cleanly when
+hypothesis is missing so the tier-1 suite still collects.
+
+Invariants of `emit_tiles` (the host half of the tile-list device scan):
+every valid row of every scheduled pair is covered exactly once, tile row
+origins are block-aligned, and every padding tile is a dummy pointing at
+pair id P (the kernel's appended zero table row).
+"""
+
+import numpy as np
+import pytest
+
+pytest.importorskip("hypothesis")
+
+from hypothesis import given, settings, strategies as st  # noqa: E402
+
+from repro.core.scheduling import count_tiles, emit_tiles  # noqa: E402
+
+SETTINGS = dict(max_examples=40, deadline=None)
+
+
+def _align(x, b):
+    return -(-x // b) * b
+
+
+def _random_layout(rng, ndev, n_slots, block_n, max_size):
+    """Block-aligned per-device slot layout with zero-size slots allowed."""
+    slot_size = rng.integers(0, max_size + 1, (ndev, n_slots)).astype(np.int32)
+    slot_start = np.zeros((ndev, n_slots), np.int32)
+    for d in range(ndev):
+        cursor = 0
+        for s in range(n_slots):
+            slot_start[d, s] = cursor
+            cursor += _align(max(int(slot_size[d, s]), 1), block_n)
+    return slot_start, slot_size
+
+
+@given(
+    ndev=st.integers(1, 4),
+    n_slots=st.integers(1, 6),
+    p_cap=st.integers(1, 12),
+    block_n=st.sampled_from([4, 8, 16]),
+    seed=st.integers(0, 10_000),
+)
+@settings(**SETTINGS)
+def test_tile_emission_properties(ndev, n_slots, p_cap, block_n, seed):
+    rng = np.random.default_rng(seed)
+    slot_start, slot_size = _random_layout(
+        rng, ndev, n_slots, block_n, max_size=5 * block_n
+    )
+    pair_slot = rng.integers(0, n_slots, (ndev, p_cap)).astype(np.int32)
+    pair_valid = rng.random((ndev, p_cap)) < 0.7
+
+    nv = np.where(
+        pair_valid, np.take_along_axis(slot_size, pair_slot, axis=1), 0
+    )
+    totals = count_tiles(pair_valid, nv, block_n)
+    t_cap = int(totals.max(initial=0)) + int(rng.integers(0, 4))
+    t_cap = max(t_cap, 1)
+    tile_pair, tile_block, tile_row0 = emit_tiles(
+        pair_slot, pair_valid, slot_start, slot_size, block_n, t_cap
+    )
+
+    assert tile_pair.shape == tile_block.shape == tile_row0.shape == (
+        ndev, t_cap,
+    )
+    # all tile origins are block-aligned
+    assert (tile_row0 % block_n == 0).all()
+
+    for d in range(ndev):
+        real = tile_pair[d] != p_cap
+        # dummy tiles all point at pair id P and the count matches exactly
+        assert int(real.sum()) == int(totals[d])
+        assert (tile_pair[d][~real] == p_cap).all()
+        assert (tile_block[d][~real] == 0).all()
+        assert (tile_row0[d][~real] == 0).all()
+
+        # every valid row of every scheduled pair is covered exactly once:
+        # per pair, the emitted (block, row0) set is exactly the ceil-div
+        # ladder over its slot, with matching device block coordinates
+        for p in range(p_cap):
+            mine = real & (tile_pair[d] == p)
+            want = -(-int(nv[d, p]) // block_n)
+            assert int(mine.sum()) == want
+            if want == 0:
+                continue
+            rows = np.sort(tile_row0[d][mine])
+            np.testing.assert_array_equal(
+                rows, np.arange(want) * block_n
+            )
+            blocks = np.sort(tile_block[d][mine])
+            base = slot_start[d, pair_slot[d, p]] // block_n
+            np.testing.assert_array_equal(
+                blocks, base + np.arange(want)
+            )
+
+    # pair-major contiguity: the kernel's output revisiting contract
+    for d in range(ndev):
+        seq = tile_pair[d][tile_pair[d] != p_cap]
+        changes = int((np.diff(seq) != 0).sum()) + 1 if seq.size else 0
+        assert changes == len(np.unique(seq)) or seq.size == 0
+
+
+def test_tile_emission_overflow_raises():
+    slot_start = np.zeros((1, 1), np.int32)
+    slot_size = np.full((1, 1), 64, np.int32)
+    pair_slot = np.zeros((1, 4), np.int32)
+    pair_valid = np.ones((1, 4), bool)
+    with pytest.raises(ValueError, match="tiles > capacity"):
+        emit_tiles(pair_slot, pair_valid, slot_start, slot_size, 16, 3)

@@ -1,5 +1,8 @@
 """ServingEngine: micro-batched serving must equal direct engine search,
-never recompile in steady state after warmup, and keep honest stats."""
+never recompile in steady state after warmup (on either scan path), and
+keep honest stats."""
+
+import dataclasses
 
 import numpy as np
 import jax
@@ -64,6 +67,51 @@ def test_no_recompile_after_warmup(engine, clustered_data):
     assert set(srv.stats.bucket_hits) <= set(buckets)
     assert srv.stats.host_s > 0 and srv.stats.device_s > 0
     assert 0.0 < srv.stats.host_fraction() < 1.0
+
+
+@pytest.mark.parametrize("scan", ["tiles", "windows"])
+def test_stream_200_queries_no_recompile(engine, clustered_data, scan):
+    """A 200-query stream with ragged tails never recompiles after warmup,
+    on either scan path (tile-count buckets are pre-warmed too)."""
+    xs, _, qs, _ = clustered_data
+    eng = dataclasses.replace(engine, scan=scan)
+    srv = ServingEngine(eng, nprobe=8, k=10, micro_batch=16)
+    srv.warmup()
+    rng = np.random.default_rng(7)
+    stream = xs[rng.integers(0, xs.shape[0], 200)] + rng.normal(
+        0, 0.1, (200, xs.shape[1])
+    ).astype(np.float32)
+    sd, si = srv.search(stream)  # 12 full micro-batches + ragged tail of 8
+    assert si.shape == (200, 10)
+    assert srv.stats.compiles == 0, srv.stats
+    assert srv.stats.queries == 200
+    # ragged tail must still match the plain engine on the same queries
+    ed, ei = eng.search(stream[192:], nprobe=8, k=10)
+    np.testing.assert_array_equal(si[192:], ei)
+
+
+@pytest.mark.parametrize("scan", ["tiles", "windows"])
+def test_submit_flush_order_across_micro_batches(engine, clustered_data, scan):
+    """submit()/flush() preserves input order when the pending set spans
+    multiple micro-batches with a ragged tail."""
+    xs, _, qs, _ = clustered_data
+    eng = dataclasses.replace(engine, scan=scan)
+    srv = ServingEngine(eng, nprobe=8, k=5, micro_batch=8)
+    srv.warmup()
+    rng = np.random.default_rng(11)
+    chunks = [
+        xs[rng.integers(0, xs.shape[0], n)].astype(np.float32)
+        for n in (3, 8, 1, 6, 4)  # 22 queries -> 2 full batches + tail
+    ]
+    for ch in chunks:
+        srv.submit(ch)
+    assert srv.pending() == 22
+    fd, fi = srv.flush()
+    allq = np.concatenate(chunks)
+    ed, ei = eng.search(allq, nprobe=8, k=5)
+    np.testing.assert_array_equal(fi, ei)
+    np.testing.assert_allclose(fd, ed, rtol=1e-5, atol=1e-5)
+    assert srv.stats.compiles == 0, srv.stats
 
 
 def test_submit_flush(engine, clustered_data):
