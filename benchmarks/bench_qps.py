@@ -2,13 +2,16 @@
 nprobe x IVF settings (normalized as in the paper), + co-occ on/off.
 
 Also reports the host-vs-device time split of the online path (schedule +
-densify vs the shard_map step) and the throughput of the vectorized
+densify vs the shard_map step), the throughput of the vectorized
 Algorithm 2 against the retained per-pair loop reference at Q=256,
-nprobe=32 -- the host-bottleneck numbers the serving layer depends on.
+nprobe=32 -- the host-bottleneck numbers the serving layer depends on --
+and the pipelined-vs-serial ServingEngine rows (``--pipeline {0,1}`` runs
+just that axis; pipelined results are asserted bit-identical to serial).
 """
 
 from __future__ import annotations
 
+import argparse
 import dataclasses
 import time
 
@@ -58,6 +61,51 @@ def _host_device_split(eng, qs, nprobe, k=10, iters=3):
     )
     dev = _median_time(lambda: eng.execute_plan(plan, k), iters=iters)
     return host, dev
+
+
+def run_pipeline(depths=(0, 1)):
+    """Pipelined vs serial ServingEngine: QPS, overlap, latency percentiles.
+
+    Every benched depth is asserted bit-identical (ids) to a serial
+    depth-0 reference over the same stream; depth >= 1 must additionally
+    report a measured overlap fraction > 0 (host planning hidden behind
+    in-flight device work) and zero steady-state compiles.
+    """
+    from repro.retrieval import ServingEngine
+
+    xs, stream, eng = small_system(n=15000, c=64)
+    qs = stream.queries(128, seed=8)
+    ref = ServingEngine(
+        eng, nprobe=8, k=10, micro_batch=32, pipeline_depth=0
+    )
+    ref.warmup()
+    _, ref_ids = ref.search(qs)
+    for depth in depths:
+        srv = ServingEngine(
+            eng, nprobe=8, k=10, micro_batch=32, pipeline_depth=depth
+        )
+        srv.warmup()
+        # first post-warmup search: same zero-carry start as the reference,
+        # so schedules are depth-invariant and ids must match bit-exactly
+        _, ids = srv.search(qs)
+        np.testing.assert_array_equal(
+            ids, ref_ids,
+            err_msg=f"pipeline depth {depth} ids diverge from serial",
+        )
+        qps = _qps(lambda: srv.search(qs), len(qs))
+        assert srv.stats.compiles == 0, srv.stats
+        st = srv.stats
+        if depth >= 1:
+            assert st.overlap_fraction() > 0.0, (
+                f"depth {depth} measured no host/device overlap: {st}"
+            )
+        emit(
+            f"serving_pipeline_d{depth}_ivf64_nprobe8",
+            1e6 * len(qs) / qps,
+            f"qps={qps:.1f};host_frac={st.host_fraction():.3f};"
+            f"overlap_frac={st.overlap_fraction():.3f};"
+            f"p50_ms={1e3 * st.p50_s():.2f};p99_ms={1e3 * st.p99_s():.2f}",
+        )
 
 
 def run():
@@ -150,6 +198,19 @@ def run():
         f"skewed layout"
     )
 
+    # --- pipelined vs serial serving (host planning hidden behind device) ---
+    run_pipeline()
+
 
 if __name__ == "__main__":
-    run()
+    ap = argparse.ArgumentParser()
+    ap.add_argument(
+        "--pipeline", type=int, choices=(0, 1), default=None,
+        help="run only the serving-pipeline axis at this depth "
+             "(results always checked against a serial reference)",
+    )
+    args = ap.parse_args()
+    if args.pipeline is not None:
+        run_pipeline((args.pipeline,))
+    else:
+        run()

@@ -17,7 +17,7 @@ MODULES = [
     ("bench_breakdown", "Fig 1/18 stage breakdown"),
     ("bench_placement", "Fig 4/7 skew + placement balance"),
     ("bench_cooc", "Fig 10 + Table 1 co-occurrence"),
-    ("bench_qps", "Fig 13 QPS vs baseline"),
+    ("bench_qps", "Fig 13 QPS vs baseline + pipelined serving"),
     ("bench_scaling", "Fig 14 scaling with #devices"),
     ("bench_read_size", "Fig 9/15 MRAM-read-size analogue"),
     ("bench_threads", "Fig 16 tasklet analogue"),
@@ -29,6 +29,11 @@ MODULES = [
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default=None, help="substring filter")
+    ap.add_argument(
+        "--keep-going", action="store_true",
+        help="run every sub-bench even after a failure (still exits "
+             "non-zero); the default aborts on the first raise",
+    )
     args = ap.parse_args()
     print("name,us_per_call,derived")
     failures = []
@@ -40,8 +45,12 @@ def main() -> None:
             mod = __import__(f"benchmarks.{mod_name}", fromlist=["run"])
             mod.run()
         except Exception:  # noqa: BLE001
-            failures.append(mod_name)
             traceback.print_exc()
+            if not args.keep_going:
+                print(f"# FAILED: {mod_name} (fail-fast; use --keep-going "
+                      f"to run the rest)")
+                sys.exit(1)
+            failures.append(mod_name)
     if failures:
         print(f"# FAILED: {failures}")
         sys.exit(1)

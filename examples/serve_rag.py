@@ -38,10 +38,18 @@ engine = MemANNSEngine.build(
     history_queries=stream.queries(200, seed=1), use_cooc=True, block_n=256,
     scan="tiles",
 )
-serving = ServingEngine(engine, nprobe=NPROBE, k=K, micro_batch=BATCH)
+# pipeline_depth=1 (default): the host plans micro-batch i+1 while the
+# device executes micro-batch i, and each batch's per-device rows-scanned
+# report biases Algorithm 2 away from hot devices (load_feedback=True).
+# micro_batch is half the request batch so one search() call spans two
+# micro-batches and the pipeline actually engages (overlap > 0)
+serving = ServingEngine(
+    engine, nprobe=NPROBE, k=K, micro_batch=max(1, BATCH // 2),
+    pipeline_depth=1,
+)
 buckets = serving.warmup()
-print(f"serving warmed: micro_batch={BATCH}, scan={engine.scan}, "
-      f"pair buckets={buckets}")
+print(f"serving warmed: micro_batch={serving.micro_batch}, "
+      f"scan={engine.scan}, pair buckets={buckets}")
 
 # --- serve a batch ----------------------------------------------------------
 tokens = jax.random.randint(jax.random.PRNGKey(2), (BATCH, PROMPT), 0, cfg.vocab_size)
@@ -72,5 +80,7 @@ print(f"generated {gen.shape} tokens in {wall:.2f}s "
       f"({BATCH * STEPS / wall:.1f} tok/s incl. retrieval)")
 print(f"retrieval: {st.batches} batches, {st.queries} queries, "
       f"recompiles={st.compiles}, host={1e3 * st.host_s:.1f}ms "
-      f"({100 * st.host_fraction():.0f}%), device={1e3 * st.device_s:.1f}ms")
+      f"({100 * st.host_fraction():.0f}%), device={1e3 * st.device_s:.1f}ms, "
+      f"overlap={100 * st.overlap_fraction():.0f}%, "
+      f"p50={1e3 * st.p50_s():.1f}ms, p99={1e3 * st.p99_s():.1f}ms")
 print("sample:", gen[0, :10].tolist())

@@ -138,6 +138,12 @@ def place_clusters(
 
     placed = np.zeros(c, bool)
 
+    def _take(ci: int, d: int, w_i: float) -> None:
+        replicas[ci].append(d)
+        dev_clusters[d].append(ci)
+        dev_load[d] += w_i
+        dev_vec[d] += int(sizes[ci])
+
     def _place_copies(ci: int) -> None:
         """Lines 1-9 of Algorithm 1 for cluster ci."""
         ncpy = max(1, int(np.ceil(work[ci] / max(w_bar, 1e-12))))
@@ -155,15 +161,29 @@ def place_clusters(
                 and d not in replicas[ci]  # one copy per device
             )
             if ok:
-                replicas[ci].append(d)
-                dev_clusters[d].append(ci)
-                dev_load[d] += w_i
-                dev_vec[d] += int(sizes[ci])
+                _take(ci, d, w_i)
                 remaining -= 1
                 sweeps_left = ndev
             cursor = (cursor + 1) % ndev
             sweeps_left -= 1
             if sweeps_left <= 0:  # full sweep found no host: relax threshold
+                if w_bar * thld >= float(dev_load.max()) + w_i:
+                    # load can no longer be the binding constraint anywhere,
+                    # so the sweep failed on vector capacity / duplicates —
+                    # which relaxing thld can never fix (this used to spin
+                    # forever when one huge cluster filled every device).
+                    if replicas[ci]:
+                        # shed the surplus copies; the placed replicas serve
+                        # the whole cluster, so book the orphaned share too
+                        dev_load[replicas[ci]] += (
+                            w_i * remaining / len(replicas[ci])
+                        )
+                        break
+                    # every cluster must land somewhere: best-effort place
+                    # the mandatory copy (carrying the full cluster load)
+                    # on the emptiest device
+                    _take(ci, int(np.argmin(dev_vec)), w_i * remaining)
+                    break
                 thld += thld_rate
                 sweeps_left = ndev
         placed[ci] = True

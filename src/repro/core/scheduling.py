@@ -8,6 +8,12 @@ that per-device scan load is balanced:
   2. remaining clusters are processed in descending size order, each pair
      going to its least-loaded replica device.
 
+Both implementations accept an optional per-device `load_carry` vector (the
+serving layer feeds back an EWMA of rows scanned per device), turning the
+one-shot static balancer into the paper's dynamic resource manager: devices
+that ran hot in recent batches start the greedy with a head start and shed
+multi-replica work to colder replicas, within a batch and across batches.
+
 Runs on the host CPU at online time.  The primary implementation
 (`schedule_queries`) is numpy-vectorized: single-replica pairs are bound by
 one scatter-add, and multi-replica clusters are resolved segment-by-segment
@@ -137,13 +143,22 @@ def schedule_queries(
     probed: np.ndarray,
     sizes: np.ndarray,
     placement: Placement,
+    load_carry: np.ndarray | None = None,
 ) -> ArraySchedule:
-    """Vectorized Algorithm 2.
+    """Vectorized Algorithm 2, optionally biased by carried device load.
 
     Args:
       probed: (Q, nprobe) int cluster ids selected by cluster filtering.
       sizes: (C,) cluster sizes s_i.
       placement: Algorithm 1 output (replica map).
+      load_carry: optional (ndev,) non-negative load each device already
+        carries (e.g. an EWMA of rows scanned by in-flight batches).  Greedy
+        loads start from the carry instead of zero, so a hot device sheds
+        multi-replica pairs to colder replicas; single-replica pairs stay
+        forced but stack on top of the carry, biasing every later greedy
+        choice.  `None` or all-zeros reproduces the unbiased schedule
+        exactly.  The returned `dev_load` excludes the carry (it is this
+        batch's scan load only).
 
     Returns:
       ArraySchedule covering every (query, cluster) pair exactly once.
@@ -155,7 +170,15 @@ def schedule_queries(
 
     pair_q = np.repeat(np.arange(q_n, dtype=np.int32), nprobe)
     pair_c = np.ascontiguousarray(probed, np.int32).reshape(-1)
-    load = np.zeros(ndev, np.float64)
+    if load_carry is None:
+        load = np.zeros(ndev, np.float64)
+    else:
+        load = np.array(load_carry, np.float64, copy=True)
+        if load.shape != (ndev,):
+            raise ValueError(
+                f"load_carry shape {load.shape} != ({ndev},)"
+            )
+    carry = load.copy()
 
     # Lines 4-7: single-replica pairs -> forced device, one scatter-add
     single = n_rep[pair_c] == 1
@@ -191,7 +214,7 @@ def schedule_queries(
         pair_q=pair_q[perm],
         pair_c=pair_c[perm],
         pair_dev=dev[perm],
-        dev_load=load,
+        dev_load=load - carry,
     )
 
 
@@ -199,17 +222,28 @@ def schedule_queries_loop(
     probed: np.ndarray,
     sizes: np.ndarray,
     placement: Placement,
+    load_carry: np.ndarray | None = None,
 ) -> Schedule:
     """Reference per-pair loop implementation of Algorithm 2 (test oracle).
 
     Complexity O(|Q| * nprobe * max_replicas); retained only to validate the
-    vectorized path and to quantify its speedup in benchmarks.
+    vectorized path and to quantify its speedup in benchmarks.  `load_carry`
+    has the same meaning as in `schedule_queries` and the two stay in
+    lockstep: same carry, same schedule.
     """
     ndev = placement.dev_load.shape[0]
     q_n, nprobe = probed.shape
     sizes = np.asarray(sizes, np.float64)
     assigned: list[list[tuple[int, int]]] = [[] for _ in range(ndev)]
-    load = np.zeros(ndev, np.float64)
+    if load_carry is None:
+        load = np.zeros(ndev, np.float64)
+    else:
+        load = np.array(load_carry, np.float64, copy=True)
+        if load.shape != (ndev,):  # same contract as the vectorized path
+            raise ValueError(
+                f"load_carry shape {load.shape} != ({ndev},)"
+            )
+    carry = load.copy()
 
     multi: list[tuple[int, int]] = []  # (query, cluster) with >1 replica
     for qi in range(q_n):
@@ -233,7 +267,7 @@ def schedule_queries_loop(
         assigned[d].append((qi, c))
         load[d] += sizes[c]
 
-    return Schedule(assigned=assigned, dev_load=load)
+    return Schedule(assigned=assigned, dev_load=load - carry)
 
 
 def densify_schedule(

@@ -24,6 +24,10 @@ def main():
     ap.add_argument("--steps", type=int, default=32, help="decode steps")
     ap.add_argument("--retrieval", action="store_true")
     ap.add_argument("--retrieval-vectors", type=int, default=20000)
+    ap.add_argument(
+        "--pipeline-depth", type=int, default=1,
+        help="retrieval serving pipeline depth (0 = strictly serial)",
+    )
     args = ap.parse_args()
 
     import jax
@@ -82,7 +86,7 @@ def main():
     if args.retrieval:
         from repro.configs.memanns import SIFT1B, reduced_retrieval
         from repro.data import make_clustered_vectors
-        from repro.retrieval import MemANNSEngine
+        from repro.retrieval import MemANNSEngine, ServingEngine
 
         rcfg = reduced_retrieval(
             SIFT1B, n_vectors=args.retrieval_vectors, dim=cfg.d_model
@@ -94,16 +98,37 @@ def main():
             jax.random.PRNGKey(1), xs, rcfg.n_clusters, rcfg.m,
             use_cooc=True, n_combos=rcfg.n_combos, block_n=rcfg.block_n,
         )
+        # serve through the pipelined engine: host planning of batch i+1
+        # overlaps device execution of batch i, and each batch's per-device
+        # rows-scanned report feeds the scheduler's load carry.  The micro
+        # batch is half the request batch so a single search() spans >= 2
+        # micro-batches — otherwise the in-flight queue never fills and the
+        # pipeline (and its overlap stat) cannot engage
+        srv = ServingEngine(
+            eng, nprobe=rcfg.nprobe, k=rcfg.k,
+            micro_batch=max(1, b // 2),
+            pipeline_depth=args.pipeline_depth,
+        )
+        srv.warmup()
         # query with the (pooled) last hidden state proxy: last logits proj
         qvecs = np.asarray(
             jax.random.normal(jax.random.PRNGKey(2), (b, cfg.d_model))
         ) + centers[np.random.default_rng(0).integers(0, len(centers), b)]
         t0 = time.time()
-        dists, ids = eng.search(
-            qvecs.astype(np.float32), nprobe=rcfg.nprobe, k=rcfg.k
-        )
+        dists, ids = srv.search(qvecs.astype(np.float32))
+        st = srv.stats
         report["retrieval_s"] = round(time.time() - t0, 3)
         report["retrieved_ids"] = ids[:, :4].tolist()
+        report["retrieval_stats"] = {
+            "pipeline_depth": args.pipeline_depth,
+            "compiles": st.compiles,
+            "host_fraction": round(st.host_fraction(), 3),
+            "overlap_fraction": round(st.overlap_fraction(), 3),
+            "p50_ms": round(1e3 * st.p50_s(), 2),
+            "p99_ms": round(1e3 * st.p99_s(), 2),
+            "rows_scanned": st.rows_scanned,
+            "load_carry": [round(x, 1) for x in srv.load_carry().tolist()],
+        }
 
     print(json.dumps(report, indent=1))
 

@@ -6,18 +6,23 @@
                ADC+top-k scan (padded per-pair windows or the flat tile
                work queue), local per-query merge, one all-gather
   engine.py -- MemANNSEngine: end-to-end build + query API (the paper's
-               whole system behind one object)
+               whole system behind one object); execute_plan is split into
+               an async dispatch_plan (InFlightSearch handle) + collect
   serving.py -- ServingEngine: micro-batched steady-state serving with
-               shape-bucketed, pre-warmed sharded_search instances
+               shape-bucketed, pre-warmed sharded_search instances, a
+               depth-configurable host/device pipeline, and rows-scanned
+               load feedback into Algorithm 2
 """
 
 from repro.retrieval.engine import MemANNSEngine, SearchPlan, round_capacity
 from repro.retrieval.layout import DeviceShards, build_shards
+from repro.retrieval.search import InFlightSearch
 from repro.retrieval.serving import ServingEngine, ServingStats
 
 __all__ = [
     "MemANNSEngine",
     "SearchPlan",
+    "InFlightSearch",
     "round_capacity",
     "DeviceShards",
     "build_shards",

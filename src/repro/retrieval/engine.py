@@ -31,7 +31,7 @@ from repro.core.scheduling import (
     schedule_queries,
 )
 from repro.retrieval.layout import DeviceShards, build_shards
-from repro.retrieval.search import DPU_AXIS, sharded_search
+from repro.retrieval.search import DPU_AXIS, InFlightSearch, sharded_search
 
 
 def make_dpu_mesh(devices=None) -> jax.sharding.Mesh:
@@ -149,31 +149,47 @@ class MemANNSEngine:
 
     # ------------------------------------------------------------------ #
 
-    def _device_put(self):
-        """Shard the packed arrays over the mesh once, cache on device."""
-        if self._dev_arrays is not None:
-            return self._dev_arrays
+    def _sharding_specs(self):
         spec_dev = jax.sharding.NamedSharding(
             self.mesh, jax.sharding.PartitionSpec(DPU_AXIS)
         )
         spec_rep = jax.sharding.NamedSharding(
             self.mesh, jax.sharding.PartitionSpec()
         )
+        return spec_dev, spec_rep
+
+    def _device_put(self):
+        """Shard the packed arrays over the mesh once, cache on device."""
+        if self._dev_arrays is not None:
+            return self._dev_arrays
+        spec_dev, spec_rep = self._sharding_specs()
         s = self.shards
-        self._dev_arrays = (
-            jax.device_put(s.codes, spec_dev),
-            jax.device_put(s.vec_ids, spec_dev),
-            jax.device_put(s.slot_start, spec_dev),
-            jax.device_put(s.slot_size, spec_dev),
-            jax.device_put(s.combo_addrs, spec_dev),
-            jax.device_put(self.index.codebook.astype(np.float32), spec_rep),
+        # one batched transfer for the whole pytree (5 sharded + 1 replicated)
+        self._dev_arrays = jax.device_put(
+            (
+                s.codes,
+                s.vec_ids,
+                s.slot_start,
+                s.slot_size,
+                s.combo_addrs,
+                self.index.codebook.astype(np.float32),
+            ),
+            (spec_dev,) * 5 + (spec_rep,),
         )
         return self._dev_arrays
 
     def schedule_batch(
-        self, queries: np.ndarray, nprobe: int
+        self,
+        queries: np.ndarray,
+        nprobe: int,
+        load_carry: np.ndarray | None = None,
     ) -> tuple[ArraySchedule, np.ndarray, np.ndarray]:
-        """Host side: cluster filtering (stage a) + vectorized Algorithm 2."""
+        """Host side: cluster filtering (stage a) + vectorized Algorithm 2.
+
+        `load_carry` is the optional (ndev,) carried-load bias (see
+        `schedule_queries`); the serving layer threads its EWMA of
+        per-device scanned rows through here.
+        """
         probed, qmc = filter_clusters(
             jnp.asarray(self.index.centroids),
             jnp.asarray(queries, jnp.float32),
@@ -181,7 +197,8 @@ class MemANNSEngine:
         )
         probed = np.asarray(probed)
         schedule = schedule_queries(
-            probed, self.index.cluster_sizes(), self.placement
+            probed, self.index.cluster_sizes(), self.placement,
+            load_carry=load_carry,
         )
         return schedule, probed, np.asarray(qmc)
 
@@ -192,6 +209,7 @@ class MemANNSEngine:
         pairs_per_dev: int | None = None,
         capacity_floor: int = 8,
         tiles_per_dev: int | None = None,
+        load_carry: np.ndarray | None = None,
     ) -> SearchPlan:
         """Host-side online phase: filter + schedule + array densify.
 
@@ -199,12 +217,15 @@ class MemANNSEngine:
         per-pair Python loops survive on this path.  With `scan="tiles"`
         the plan additionally carries the flat tile work queue; its
         capacity is rounded to `pairs_per_dev * 2^i` buckets so serving
-        can pre-warm every reachable executable.
+        can pre-warm every reachable executable.  `load_carry` biases the
+        schedule toward cold devices (see `schedule_queries`).
         """
         queries = np.asarray(queries, np.float32)
         q_n = queries.shape[0]
         ndev = self.shards.ndev
-        schedule, probed, qmc = self.schedule_batch(queries, nprobe)
+        schedule, probed, qmc = self.schedule_batch(
+            queries, nprobe, load_carry=load_carry
+        )
 
         max_pairs = int(schedule.counts_per_dev().max(initial=0))
         if pairs_per_dev is None:
@@ -254,19 +275,40 @@ class MemANNSEngine:
             tiles_per_dev=tiles_cap,
         )
 
-    def execute_plan(
-        self, plan: SearchPlan, k: int
-    ) -> tuple[np.ndarray, np.ndarray]:
-        """Device-side online phase: one jitted shard_map step.
+    def plan_dev_rows(self, plan: SearchPlan) -> np.ndarray:
+        """(ndev,) code rows the device scan visits per device for `plan`.
+
+        This is the per-batch load report the serving layer folds into its
+        EWMA `load_carry`: on the tiles path it is the real (non-dummy)
+        tile count times the tile height; on the windows path it is the
+        valid rows of each scheduled pair (the window padding is constant
+        per pair and carries no balance signal).
+        """
+        if plan.scan == "tiles":
+            real = (plan.tile_pair != plan.pairs_per_dev).sum(axis=1)
+            return real.astype(np.int64) * self.shards.block_n
+        nv = np.where(
+            plan.pair_valid,
+            np.take_along_axis(self.shards.slot_size, plan.pair_slot, axis=1),
+            0,
+        )
+        return nv.sum(axis=1).astype(np.int64)
+
+    def dispatch_plan(self, plan: SearchPlan, k: int) -> InFlightSearch:
+        """Enqueue one shard_map step without blocking on its results.
+
+        The per-batch inputs are shipped as ONE batched `device_put` on a
+        pytree with a single sharding spec (one transfer instead of seven),
+        and the jitted step is dispatched asynchronously — the returned
+        handle holds in-flight `jax.Array`s plus the plan's load report.
+        `collect` (or `np.asarray` on the outputs) blocks until done.
 
         The scan variant comes from the *plan* (a tiles plan carries its
         tile queue), so plans stay executable even if `self.scan` changes.
         """
         dev = self._device_put()
         ndev = self.shards.ndev
-        spec_dev = jax.sharding.NamedSharding(
-            self.mesh, jax.sharding.PartitionSpec(DPU_AXIS)
-        )
+        spec_dev, _ = self._sharding_specs()
         if plan.scan == "tiles":
             tile_pair, tile_block, tile_row0 = (
                 plan.tile_pair, plan.tile_block, plan.tile_row0
@@ -275,16 +317,16 @@ class MemANNSEngine:
             tile_pair = np.zeros((ndev, 1), np.int32)
             tile_block = np.zeros((ndev, 1), np.int32)
             tile_row0 = np.zeros((ndev, 1), np.int32)
+        batch = jax.device_put(
+            (
+                plan.qmc_pairs, plan.pair_q, plan.pair_slot, plan.pair_valid,
+                tile_pair, tile_block, tile_row0,
+            ),
+            spec_dev,
+        )
         out_d, out_i = sharded_search(
-            *dev[:5],
-            dev[5],
-            jax.device_put(plan.qmc_pairs, spec_dev),
-            jax.device_put(plan.pair_q, spec_dev),
-            jax.device_put(plan.pair_slot, spec_dev),
-            jax.device_put(plan.pair_valid, spec_dev),
-            jax.device_put(tile_pair, spec_dev),
-            jax.device_put(tile_block, spec_dev),
-            jax.device_put(tile_row0, spec_dev),
+            *dev,
+            *batch,
             mesh=self.mesh,
             n_queries=plan.n_queries,
             k=k,
@@ -295,7 +337,24 @@ class MemANNSEngine:
             scan=plan.scan,
             interpret=self.interpret,
         )
-        return np.asarray(out_d), np.asarray(out_i)
+        return InFlightSearch(
+            out_d=out_d, out_i=out_i, plan=plan,
+            dev_rows=self.plan_dev_rows(plan),
+        )
+
+    def collect(
+        self, handle: InFlightSearch
+    ) -> tuple[np.ndarray, np.ndarray]:
+        """Block until a dispatched step finishes; materialize its results."""
+        return np.asarray(handle.out_d), np.asarray(handle.out_i)
+
+    def execute_plan(
+        self, plan: SearchPlan, k: int
+    ) -> tuple[np.ndarray, np.ndarray]:
+        """Device-side online phase: dispatch one jitted shard_map step and
+        block on its results (the synchronous composition of `dispatch_plan`
+        + `collect`)."""
+        return self.collect(self.dispatch_plan(plan, k))
 
     def scanned_rows(self, plan: SearchPlan) -> int:
         """Total code rows DMA'd by one execution of `plan` (all devices).

@@ -17,14 +17,43 @@ Everything is shape-static: P pairs/device, window rows/pair, Q queries.
 
 from __future__ import annotations
 
+import dataclasses
 import functools
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.kernels import ops
 
 DPU_AXIS = "dpu"
+
+
+@dataclasses.dataclass
+class InFlightSearch:
+    """Handle for one dispatched (asynchronous) `sharded_search` step.
+
+    `sharded_search` is dispatched asynchronously by the jax runtime, so the
+    output `jax.Array`s held here are futures: creating the handle returns
+    as soon as the step is enqueued, and materializing (`collect`) blocks
+    until the device finishes.  The handle also carries the host-side plan
+    and the per-device load report so the serving layer can overlap planning
+    of the next micro-batch with this one's execution and feed observed load
+    back into Algorithm 2.
+
+    Attributes:
+      out_d: (Q, k) f32 device array of merged distances (in flight).
+      out_i: (Q, k) int32 device array of merged global ids (in flight).
+      plan: the `SearchPlan` this step executes (untyped to avoid a
+        circular import with engine.py).
+      dev_rows: (ndev,) int64 rows the device scan visits for this plan —
+        the load report consumed by the scheduler's `load_carry`.
+    """
+
+    out_d: jax.Array
+    out_i: jax.Array
+    plan: object
+    dev_rows: np.ndarray
 
 
 def _shard_map(fn, mesh, in_specs, out_specs):

@@ -1,4 +1,5 @@
-"""Batched serving on top of MemANNSEngine: micro-batching + shape buckets.
+"""Batched serving on top of MemANNSEngine: micro-batching + shape buckets
++ a double-buffered host/device pipeline with load feedback.
 
 `sharded_search` is jitted with static (n_queries, pairs_per_dev, k, ...),
 so naive per-request calls recompile whenever the batch shape drifts.  The
@@ -10,17 +11,30 @@ serving layer removes that hazard:
   * per-device pair capacities are rounded up to power-of-two *buckets*
     (`round_capacity`), and `warmup()` executes one dummy search per bucket
     so every steady-state batch hits an already-compiled executable;
-  * `ServingStats` tracks cold compiles, bucket hits, and the host
-    (schedule + densify) vs device (shard_map step) time split — the same
-    split `benchmarks/bench_qps.py` reports.
+  * micro-batches flow through a depth-`pipeline_depth` in-flight queue:
+    batch i is *dispatched* (async shard_map step) and batch i+1 is planned
+    on the host while the device still executes batch i, so host planning
+    drops out of the serving critical path (depth 0 restores the strictly
+    serial plan -> execute -> block loop);
+  * each dispatched plan's per-device rows-scanned report is folded into an
+    EWMA `load_carry` that biases Algorithm 2 for subsequent batches — the
+    paper's dynamic resource management: a device running hot sheds
+    multi-replica work to colder replicas, within and across batches;
+  * `ServingStats` tracks cold compiles, bucket hits, the host vs device
+    time split, the overlap fraction (host planning hidden behind in-flight
+    device work), and per-batch latency samples (p50/p99) — the same
+    numbers `benchmarks/bench_qps.py` reports.
 
-This is the host-side half of the paper's "negligible vs the billion-scale
-scan" assumption made real: scheduling is vectorized numpy, and the device
-step never waits on a recompile.
+The load EWMA is updated at *dispatch* time from the plan's host-computed
+row counts (rows scanned are a deterministic function of the plan), not at
+collect time: that way the carry seen when planning batch i+1 covers
+batches 0..i at every pipeline depth, and depth 0 vs depth 1 produce
+bit-identical schedules, hence bit-identical results.
 """
 
 from __future__ import annotations
 
+import collections
 import dataclasses
 import math
 import time
@@ -28,7 +42,13 @@ import time
 import numpy as np
 
 from repro.retrieval.engine import MemANNSEngine, SearchPlan, round_capacity
-from repro.retrieval.search import search_static_key
+from repro.retrieval.search import InFlightSearch, search_static_key
+
+
+# per-batch latency samples retained for the percentile estimators; a
+# bounded window keeps long-running servers O(1)-memory while p50/p99
+# still reflect recent traffic
+LATENCY_WINDOW = 4096
 
 
 @dataclasses.dataclass
@@ -39,12 +59,34 @@ class ServingStats:
     queries: int = 0
     compiles: int = 0      # searches that hit a non-warmed (cold) shape
     host_s: float = 0.0    # cluster filter + Algorithm 2 + densify
-    device_s: float = 0.0  # sharded_search execution (incl. transfers)
+    device_s: float = 0.0  # dispatch + blocked collect (incl. transfers)
+    overlap_s: float = 0.0  # host planning done while a batch was in flight
+    rows_scanned: int = 0   # total code rows visited by collected batches
+    latencies_s: collections.deque = dataclasses.field(
+        default_factory=lambda: collections.deque(maxlen=LATENCY_WINDOW)
+    )
     bucket_hits: dict[int, int] = dataclasses.field(default_factory=dict)
 
     def host_fraction(self) -> float:
         total = self.host_s + self.device_s
         return self.host_s / total if total > 0 else 0.0
+
+    def overlap_fraction(self) -> float:
+        """Fraction of host planning time hidden behind in-flight batches."""
+        return self.overlap_s / self.host_s if self.host_s > 0 else 0.0
+
+    def latency_percentile(self, q: float) -> float:
+        """Per-micro-batch latency percentile in seconds (plan -> collect),
+        over the last `LATENCY_WINDOW` batches."""
+        if not self.latencies_s:
+            return 0.0
+        return float(np.percentile(np.asarray(self.latencies_s), q))
+
+    def p50_s(self) -> float:
+        return self.latency_percentile(50.0)
+
+    def p99_s(self) -> float:
+        return self.latency_percentile(99.0)
 
 
 class ServingEngine:
@@ -57,6 +99,14 @@ class ServingEngine:
       micro_batch: queries per shard_map step; requests are padded/split to
         this size so `n_queries` stays static.
       capacity_floor: smallest pairs-per-device bucket.
+      pipeline_depth: max in-flight micro-batches; 1 (default) overlaps
+        host planning of batch i+1 with device execution of batch i, 0 is
+        the strictly serial loop.  Results are bit-identical across depths.
+      load_feedback: feed the per-device rows-scanned EWMA back into
+        Algorithm 2 as `load_carry` (the paper's dynamic resource manager);
+        off reproduces the static, load-blind scheduler.
+      load_alpha: EWMA smoothing factor for the load carry (1.0 = last
+        batch only).
     """
 
     def __init__(
@@ -67,32 +117,50 @@ class ServingEngine:
         k: int,
         micro_batch: int = 32,
         capacity_floor: int = 8,
+        pipeline_depth: int = 1,
+        load_feedback: bool = True,
+        load_alpha: float = 0.5,
     ):
         self.engine = engine
         self.nprobe = int(nprobe)
         self.k = int(k)
         self.micro_batch = int(micro_batch)
         self.capacity_floor = int(capacity_floor)
+        self.pipeline_depth = int(pipeline_depth)
+        self.load_feedback = bool(load_feedback)
+        self.load_alpha = float(load_alpha)
         self.stats = ServingStats()
         self._warm: set[tuple] = set()
         self._pending: list[np.ndarray] = []
+        self._load_ewma = np.zeros(engine.shards.ndev, np.float64)
 
     # ------------------------------------------------------------------ #
 
-    def _key(self, pairs_per_dev: int, tiles_per_dev: int = 0) -> tuple:
+    def _key(self, plan: SearchPlan) -> tuple:
+        """jit-cache key of the executable `plan` dispatches to.
+
+        Keyed on the *plan's* scan variant (`execute_plan`/`dispatch_plan`
+        honor `plan.scan`, not `engine.scan`), so flipping `engine.scan`
+        after warmup can neither miscount compiles nor mark the wrong
+        executable warm.
+        """
         s = self.engine.shards
         return search_static_key(
             ndev=s.ndev,
-            n_queries=self.micro_batch,
-            pairs_per_dev=pairs_per_dev,
+            n_queries=plan.n_queries,
+            pairs_per_dev=plan.pairs_per_dev,
             k=self.k,
             block_n=s.block_n,
             window=s.window,
             path=self.engine.path,
             add_offsets=s.add_offsets,
-            scan=self.engine.scan,
-            tiles_per_dev=tiles_per_dev,
+            scan=plan.scan,
+            tiles_per_dev=plan.tiles_per_dev,
         )
+
+    def load_carry(self) -> np.ndarray:
+        """Current (ndev,) EWMA of per-device rows scanned (a copy)."""
+        return self._load_ewma.copy()
 
     def default_buckets(self) -> list[int]:
         """Power-of-two capacities from the balanced share to the worst case.
@@ -100,7 +168,8 @@ class ServingEngine:
         A perfectly balanced schedule puts Q*nprobe/ndev pairs on each
         device; the worst case (every probed cluster single-replica on one
         device) is Q*nprobe.  Warming every power of two in between covers
-        any schedule this config can produce.
+        any schedule this config can produce — including load-biased ones,
+        whose per-device counts stay within the same worst case.
         """
         total = self.micro_batch * self.nprobe
         ndev = self.engine.shards.ndev
@@ -166,13 +235,13 @@ class ServingEngine:
         """
         buckets = sorted(buckets or self.default_buckets())
         for b in buckets:
-            if self.engine.scan == "tiles":
-                for t in self.tile_buckets(b):
-                    self.engine.execute_plan(self._dummy_plan(b, t), self.k)
-                    self._warm.add(self._key(b, t))
-            else:
-                self.engine.execute_plan(self._dummy_plan(b), self.k)
-                self._warm.add(self._key(b))
+            tile_caps = (
+                self.tile_buckets(b) if self.engine.scan == "tiles" else [0]
+            )
+            for t in tile_caps:
+                plan = self._dummy_plan(b, t)
+                self.engine.execute_plan(plan, self.k)
+                self._warm.add(self._key(plan))
         # warm the host path too (filter_clusters jit for this batch shape);
         # auto capacity, so a degenerate dummy schedule can never overflow
         dim = self.engine.index.centroids.shape[1]
@@ -183,42 +252,63 @@ class ServingEngine:
 
     # ------------------------------------------------------------------ #
 
-    def _search_micro_batch(
-        self, queries: np.ndarray
-    ) -> tuple[np.ndarray, np.ndarray]:
-        """One padded micro-batch through plan -> bucket -> execute."""
+    def _plan_micro_batch(self, queries: np.ndarray) -> SearchPlan:
+        """Pad one chunk to the micro-batch size and plan it (host side)."""
         q_n = queries.shape[0]
-        if q_n < self.micro_batch:  # pad; padded rows sliced off below
+        if q_n < self.micro_batch:  # pad; padded rows sliced off at collect
             pad = np.broadcast_to(
                 queries[:1], (self.micro_batch - q_n, queries.shape[1])
             )
             queries = np.concatenate([queries, pad], axis=0)
-
-        t0 = time.perf_counter()
-        plan = self.engine.plan_batch(
-            queries, self.nprobe, capacity_floor=self.capacity_floor
+        return self.engine.plan_batch(
+            queries,
+            self.nprobe,
+            capacity_floor=self.capacity_floor,
+            load_carry=self._load_ewma if self.load_feedback else None,
         )
-        t1 = time.perf_counter()
-        key = self._key(plan.pairs_per_dev, plan.tiles_per_dev)
+
+    def _dispatch_micro_batch(self, plan: SearchPlan) -> InFlightSearch:
+        """Dispatch a planned micro-batch; update warm/compile + load state.
+
+        The load EWMA folds in this plan's host-computed row counts *now*
+        (not at collect) so the carry is identical at every pipeline depth.
+        """
+        key = self._key(plan)
         if key not in self._warm:
             self.stats.compiles += 1
             self._warm.add(key)
-        d, i = self.engine.execute_plan(plan, self.k)
-        t2 = time.perf_counter()
-
-        self.stats.batches += 1
-        self.stats.queries += q_n
-        self.stats.host_s += t1 - t0
-        self.stats.device_s += t2 - t1
+        handle = self.engine.dispatch_plan(plan, self.k)
+        if self.load_feedback:
+            self._load_ewma = (
+                self.load_alpha * handle.dev_rows.astype(np.float64)
+                + (1.0 - self.load_alpha) * self._load_ewma
+            )
         self.stats.bucket_hits[plan.pairs_per_dev] = (
             self.stats.bucket_hits.get(plan.pairs_per_dev, 0) + 1
         )
+        return handle
+
+    def _collect_micro_batch(
+        self, handle: InFlightSearch, q_n: int, t_start: float
+    ) -> tuple[np.ndarray, np.ndarray]:
+        """Block on one in-flight micro-batch; slice padding, record stats."""
+        t0 = time.perf_counter()
+        d, i = self.engine.collect(handle)
+        t1 = time.perf_counter()
+        self.stats.device_s += t1 - t0
+        self.stats.latencies_s.append(t1 - t_start)
+        self.stats.batches += 1
+        self.stats.queries += q_n
+        self.stats.rows_scanned += int(handle.dev_rows.sum())
         return d[:q_n], i[:q_n]
 
     def search(self, queries: np.ndarray) -> tuple[np.ndarray, np.ndarray]:
-        """Serve a query array of any length via fixed micro-batches.
+        """Serve a query array of any length via pipelined micro-batches.
 
-        Returns (dists (Q, k), ids (Q, k)) in the input order.
+        With `pipeline_depth >= 1`, while the device executes micro-batch i
+        the host plans micro-batch i+1; the in-flight queue is drained in
+        FIFO order, so results come back in the input order regardless of
+        depth.  Returns (dists (Q, k), ids (Q, k)).
         """
         queries = np.asarray(queries, np.float32)
         if queries.ndim == 1:
@@ -228,13 +318,31 @@ class ServingEngine:
                 np.zeros((0, self.k), np.float32),
                 np.zeros((0, self.k), np.int32),
             )
+        depth = max(0, self.pipeline_depth)
+        inflight: collections.deque = collections.deque()
         outs_d, outs_i = [], []
-        for s in range(0, queries.shape[0], self.micro_batch):
-            d, i = self._search_micro_batch(
-                queries[s : s + self.micro_batch]
-            )
+
+        def collect_one():
+            d, i = self._collect_micro_batch(*inflight.popleft())
             outs_d.append(d)
             outs_i.append(i)
+
+        for s in range(0, queries.shape[0], self.micro_batch):
+            chunk = queries[s : s + self.micro_batch]
+            t0 = time.perf_counter()
+            plan = self._plan_micro_batch(chunk)
+            t1 = time.perf_counter()
+            self.stats.host_s += t1 - t0
+            if inflight:  # host planning hidden behind in-flight device work
+                self.stats.overlap_s += t1 - t0
+            handle = self._dispatch_micro_batch(plan)
+            t2 = time.perf_counter()
+            self.stats.device_s += t2 - t1
+            inflight.append((handle, chunk.shape[0], t0))
+            while len(inflight) > depth:
+                collect_one()
+        while inflight:
+            collect_one()
         return np.concatenate(outs_d), np.concatenate(outs_i)
 
     # ------------------------------------------------------------------ #

@@ -82,6 +82,32 @@ def test_schedule_beats_naive(rng):
     assert sch.max_imbalance() <= naive_imb + 1e-9
 
 
+def test_capacity_blocked_cluster_terminates_and_places():
+    """Regression: one huge replicated cluster used to fill every device to
+    the point where no later cluster passed the capacity check, and the
+    threshold relaxation (which only loosens the *load* constraint) spun
+    forever.  Placement must terminate and still put every cluster on at
+    least one device."""
+    rng = np.random.default_rng(2014)
+    c = 16
+    sizes = (rng.zipf(1.4, c) * 20).clip(1, 20000).astype(np.int64)
+    freqs = rng.zipf(1.3, c).astype(np.float64)
+    pl = place_clusters(
+        sizes, freqs, ndev=8, centroids=rng.normal(0, 1, (c, 8))
+    )
+    assert all(len(r) >= 1 for r in pl.replicas)
+    # replicas stay unique per cluster
+    for r in pl.replicas:
+        assert len(set(r)) == len(r)
+
+
+def test_zero_work_all_clusters_placed():
+    """All-zero frequencies (zero workload) must not loop either."""
+    sizes = np.array([10, 20, 30], np.int64)
+    pl = place_clusters(sizes, np.zeros(3), ndev=2)
+    assert all(len(r) >= 1 for r in pl.replicas)
+
+
 def test_estimate_frequencies():
     hist = np.array([[0, 1], [0, 2], [0, 1]])
     f = estimate_frequencies(hist, 4, smoothing=0.0)

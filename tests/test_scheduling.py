@@ -111,6 +111,81 @@ def test_densify_matches_reference(seed):
     np.testing.assert_array_equal(v_v, v_r)
 
 
+def test_load_carry_zero_reproduces_unbiased_schedule():
+    """None / all-zeros / omitted carry give bit-identical schedules."""
+    probed, sizes, pl = _random_case(3)
+    base = schedule_queries(probed, sizes, pl)
+    for carry in (None, np.zeros(base.ndev)):
+        sch = schedule_queries(probed, sizes, pl, load_carry=carry)
+        np.testing.assert_array_equal(sch.pair_q, base.pair_q)
+        np.testing.assert_array_equal(sch.pair_c, base.pair_c)
+        np.testing.assert_array_equal(sch.pair_dev, base.pair_dev)
+        np.testing.assert_array_equal(sch.dev_load, base.dev_load)
+
+
+@pytest.mark.parametrize("seed", range(5))
+def test_load_carry_matches_loop_oracle(seed):
+    """Vectorized and loop schedulers stay in lockstep under integer carry
+    (integer loads keep every float accumulation and tie-break exact)."""
+    probed, sizes, pl = _random_case(seed)
+    rng = np.random.default_rng(seed + 100)
+    carry = rng.integers(0, 5000, pl.dev_load.shape[0]).astype(np.float64)
+    vec = schedule_queries(probed, sizes, pl, load_carry=carry)
+    ref = schedule_queries_loop(probed, sizes, pl, load_carry=carry)
+    np.testing.assert_array_equal(vec.dev_load, ref.dev_load)
+    assert vec.assigned == ref.assigned
+
+
+def test_load_carry_sheds_hot_device():
+    """A deliberately skewed carry makes the hot device's assigned rows
+    drop versus the load-blind schedule (multi-replica pairs shed)."""
+    rng = np.random.default_rng(0)
+    c, ndev = 32, 8
+    sizes = np.full(c, 500, np.int64)
+    freqs = np.ones(c)
+    freqs[3] = 400.0  # hot cluster -> multiple replicas -> greedy has choice
+    pl = place_clusters(sizes, freqs, ndev)
+    reps = pl.replicas[3]
+    assert len(reps) > 1
+    probed = np.stack(
+        [np.r_[3, rng.choice(c, 7, replace=False)] for _ in range(64)]
+    )
+    blind = schedule_queries(probed, sizes, pl)
+    hot = int(reps[0])
+    carry = np.zeros(ndev)
+    carry[hot] = 1e6  # device `hot` is running way behind
+    biased = schedule_queries(probed, sizes, pl, load_carry=carry)
+    # this batch's scan load on the hot device drops strictly
+    assert biased.dev_load[hot] < blind.dev_load[hot]
+    # and the carry never breaks the exactly-once coverage contract
+    got = sorted(zip(biased.pair_q.tolist(), biased.pair_c.tolist()))
+    want = sorted(zip(blind.pair_q.tolist(), blind.pair_c.tolist()))
+    assert got == want
+    for c_id, d in zip(biased.pair_c, biased.pair_dev):
+        assert int(d) in pl.replicas[int(c_id)]
+
+
+def test_load_carry_not_counted_in_dev_load():
+    """Returned dev_load is the batch's own scan load, carry excluded."""
+    probed, sizes, pl = _random_case(1)
+    carry = np.full(pl.dev_load.shape[0], 123456.0)
+    # uniform carry shifts every greedy start equally -> same schedule
+    base = schedule_queries(probed, sizes, pl)
+    sch = schedule_queries(probed, sizes, pl, load_carry=carry)
+    np.testing.assert_array_equal(sch.pair_dev, base.pair_dev)
+    np.testing.assert_array_equal(sch.dev_load, base.dev_load)
+    assert sch.dev_load.sum() == base.dev_load.sum()
+
+
+def test_load_carry_bad_shape_raises():
+    probed, sizes, pl = _random_case(0)
+    with pytest.raises(ValueError, match="load_carry"):
+        schedule_queries(
+            probed, sizes, pl,
+            load_carry=np.zeros(pl.dev_load.shape[0] + 1),
+        )
+
+
 def test_densify_overflow_raises():
     probed, sizes, pl = _random_case(0)
     vec = schedule_queries(probed, sizes, pl)

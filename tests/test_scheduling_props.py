@@ -1,4 +1,5 @@
-"""Hypothesis property tests for the vectorized tile emission.
+"""Hypothesis property tests for the vectorized tile emission and the
+load-biased scheduler.
 
 Requires the `[test]` extra (`pip install -e .[test]`); skipped cleanly when
 hypothesis is missing so the tier-1 suite still collects.
@@ -7,6 +8,10 @@ Invariants of `emit_tiles` (the host half of the tile-list device scan):
 every valid row of every scheduled pair is covered exactly once, tile row
 origins are block-aligned, and every padding tile is a dummy pointing at
 pair id P (the kernel's appended zero table row).
+
+Invariants of `schedule_queries(load_carry=...)`: whatever the carry, every
+(query, cluster) pair is covered exactly once on a replica device, and the
+batch's total scan load is carry-independent.
 """
 
 import numpy as np
@@ -16,7 +21,12 @@ pytest.importorskip("hypothesis")
 
 from hypothesis import given, settings, strategies as st  # noqa: E402
 
-from repro.core.scheduling import count_tiles, emit_tiles  # noqa: E402
+from repro.core.placement import place_clusters  # noqa: E402
+from repro.core.scheduling import (  # noqa: E402
+    count_tiles,
+    emit_tiles,
+    schedule_queries,
+)
 
 SETTINGS = dict(max_examples=40, deadline=None)
 
@@ -101,6 +111,46 @@ def test_tile_emission_properties(ndev, n_slots, p_cap, block_n, seed):
         seq = tile_pair[d][tile_pair[d] != p_cap]
         changes = int((np.diff(seq) != 0).sum()) + 1 if seq.size else 0
         assert changes == len(np.unique(seq)) or seq.size == 0
+
+
+@given(
+    seed=st.integers(0, 10_000),
+    q=st.integers(1, 24),
+    nprobe=st.integers(1, 8),
+    ndev=st.integers(1, 8),
+    carry_scale=st.sampled_from([0.0, 1.0, 1e3, 1e7]),
+)
+@settings(**SETTINGS)
+def test_load_biased_schedule_covers_every_pair_once(
+    seed, q, nprobe, ndev, carry_scale
+):
+    """Any non-negative load carry preserves the scheduling contract:
+    exactly-once coverage, replica devices only, carry-free total load."""
+    rng = np.random.default_rng(seed)
+    c = max(nprobe, 16)
+    sizes = (rng.zipf(1.4, c) * 20).clip(1, 20000).astype(np.int64)
+    freqs = rng.zipf(1.3, c).astype(np.float64)
+    pl = place_clusters(
+        sizes, freqs, ndev, centroids=rng.normal(0, 1, (c, 8))
+    )
+    probed = np.stack(
+        [rng.choice(c, nprobe, replace=False) for _ in range(q)]
+    )
+    carry = rng.random(ndev) * carry_scale
+    sch = schedule_queries(probed, sizes, pl, load_carry=carry)
+
+    got = sorted(zip(sch.pair_q.tolist(), sch.pair_c.tolist()))
+    want = sorted(
+        (qi, int(ci)) for qi in range(q) for ci in probed[qi]
+    )
+    assert got == want
+    for ci, d in zip(sch.pair_c, sch.pair_dev):
+        assert int(d) in pl.replicas[int(ci)]
+    # the carry redistributes load but never changes the total batch work
+    blind = schedule_queries(probed, sizes, pl)
+    np.testing.assert_allclose(
+        sch.dev_load.sum(), blind.dev_load.sum(), rtol=1e-12
+    )
 
 
 def test_tile_emission_overflow_raises():
