@@ -23,6 +23,7 @@ MODULES = [
     ("bench_threads", "Fig 16 tasklet analogue"),
     ("bench_topk", "Fig 12/17 top-k size + pruning"),
     ("bench_tiles", "tile-list vs padded-window device scan"),
+    ("bench_mutation", "insert/delete churn QPS + compaction latency"),
 ]
 
 

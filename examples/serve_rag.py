@@ -3,7 +3,9 @@ while every request's pooled hidden state queries the sharded MemANNS index
 through the ServingEngine (the paper's "serving large models" application).
 
 The ServingEngine pre-warms one compiled sharded_search per pair-capacity
-bucket, so steady-state retrieval batches never pay a jit recompile.
+bucket, so steady-state retrieval batches never pay a jit recompile.  The
+index is served *mutable*: at the end a fresh document embedding is inserted
+live and retrieved by the very next query -- no rebuild, no recompile.
 
     PYTHONPATH=src python examples/serve_rag.py
 """
@@ -32,11 +34,13 @@ xs, centers, _ = make_clustered_vectors(
 stream = SkewedVectorDataset(centers)
 # scan="tiles" (default) serves from the flat tile work queue; warmup below
 # also pre-warms every reachable tile-count bucket so steady-state retrieval
-# never recompiles (scan="windows" selects the padded-window scan instead)
+# never recompiles (scan="windows" selects the padded-window scan instead).
+# mutable=True allocates the delta buffer + shard growth slack for live
+# document inserts/deletes (requires plain, non-co-occ shards)
 engine = MemANNSEngine.build(
     jax.random.PRNGKey(1), xs, n_clusters=64, m=8,
-    history_queries=stream.queries(200, seed=1), use_cooc=True, block_n=256,
-    scan="tiles",
+    history_queries=stream.queries(200, seed=1), use_cooc=False, block_n=256,
+    scan="tiles", mutable=True,
 )
 # pipeline_depth=1 (default): the host plans micro-batch i+1 while the
 # device executes micro-batch i, and each batch's per-device rows-scanned
@@ -45,7 +49,7 @@ engine = MemANNSEngine.build(
 # micro-batches and the pipeline actually engages (overlap > 0)
 serving = ServingEngine(
     engine, nprobe=NPROBE, k=K, micro_batch=max(1, BATCH // 2),
-    pipeline_depth=1,
+    pipeline_depth=1, mutable=True,
 )
 buckets = serving.warmup()
 print(f"serving warmed: micro_batch={serving.micro_batch}, "
@@ -84,3 +88,26 @@ print(f"retrieval: {st.batches} batches, {st.queries} queries, "
       f"overlap={100 * st.overlap_fraction():.0f}%, "
       f"p50={1e3 * st.p50_s():.1f}ms, p99={1e3 * st.p99_s():.1f}ms")
 print("sample:", gen[0, :10].tolist())
+
+# --- live corpus mutation: insert a document, retrieve it immediately -------
+# a "new document" lands in the corpus mid-serving; its embedding goes into
+# the delta buffer (PQ-encoded, assigned to its nearest centroid) and the
+# very next query can retrieve it -- no index rebuild, no recompile
+new_doc_id = xs.shape[0]
+new_doc = (qvec[0] + np.random.default_rng(3).normal(0, 0.05, qvec.shape[1])
+           ).astype(np.float32)
+serving.insert(np.asarray([new_doc_id]), new_doc)
+_, ids_after = serving.search(qvec[:1])
+assert new_doc_id in ids_after[0], ids_after
+print(f"live insert: doc {new_doc_id} retrievable immediately "
+      f"(rank {ids_after[0].tolist().index(new_doc_id)}), "
+      f"recompiles still {serving.stats.compiles}, "
+      f"delta occupancy {serving.stats.delta_occupancy:.4f}")
+# retiring it tombstones the id; the next search filters it out
+serving.delete(np.asarray([new_doc_id]))
+_, ids_gone = serving.search(qvec[:1])
+assert new_doc_id not in ids_gone[0]
+print(f"live delete: doc {new_doc_id} gone from results, "
+      f"tombstones={serving.stats.tombstones}; compaction folds the delta "
+      f"back into the main index in the background "
+      f"(compactions so far: {serving.stats.compactions})")

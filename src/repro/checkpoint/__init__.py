@@ -1,1 +1,9 @@
-from repro.checkpoint.store import latest_step, restore, save
+from repro.checkpoint.store import (
+    latest_step,
+    load_index,
+    restore,
+    save,
+    save_index,
+)
+
+__all__ = ["latest_step", "load_index", "restore", "save", "save_index"]

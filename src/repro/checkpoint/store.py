@@ -7,6 +7,12 @@ never corrupts the latest checkpoint -- restart-safe).
 Restore: leaves are loaded host-side and device_put against the *current*
 mesh's shardings -- restoring onto a different device count / mesh shape is
 the elastic-rescale path (e.g. a 512-chip job resuming on 256 chips).
+
+`save_index`/`load_index` extend the same atomic-rename scheme to the
+retrieval side: an IVFPQIndex plus (optionally) its live DeltaIndex --
+buffered inserts, tombstones and all -- and arbitrary layout metadata
+round-trip through one directory, so a mutable serving process can restart
+mid-churn without losing uncompacted mutations.
 """
 
 from __future__ import annotations
@@ -116,3 +122,94 @@ def restore(
     with open(os.path.join(base, "meta.json")) as f:
         meta = json.load(f)
     return params, opt, meta
+
+
+# ---------------------------------------------------------------------- #
+# retrieval index checkpointing (IVFPQIndex + DeltaIndex + layout metadata)
+# ---------------------------------------------------------------------- #
+
+_INDEX_FIELDS = ("centroids", "codebook", "codes", "vec_ids", "offsets")
+_DELTA_FIELDS = ("codes", "assign", "vec_ids", "dead")
+
+
+def save_index(path: str, index, delta=None, extra: dict | None = None) -> str:
+    """Atomically checkpoint an IVFPQIndex (+ optional DeltaIndex + meta).
+
+    Args:
+      path: target directory (written as path.tmp, then renamed).
+      index: `repro.core.index.IVFPQIndex`.
+      delta: optional `repro.core.delta.DeltaIndex`; its buffered inserts,
+        dead-row mask and tombstone set are all persisted, so a restart
+        resumes mid-churn with nothing lost.
+      extra: JSON-serializable layout metadata (e.g. block_n, scan variant,
+        shard slack) surfaced again by `load_index`.
+    """
+    path = path.rstrip("/")
+    tmp = path + ".tmp"
+    if os.path.exists(tmp):
+        shutil.rmtree(tmp)
+    os.makedirs(os.path.join(tmp, "index"))
+    for f in _INDEX_FIELDS:
+        np.save(os.path.join(tmp, "index", f + ".npy"), getattr(index, f))
+    meta = {"has_delta": delta is not None, "extra": extra or {}}
+    if delta is not None:
+        os.makedirs(os.path.join(tmp, "delta"))
+        for f in _DELTA_FIELDS:
+            np.save(os.path.join(tmp, "delta", f + ".npy"), getattr(delta, f))
+        np.save(
+            os.path.join(tmp, "delta", "tombstones.npy"),
+            delta.tombstone_array(),
+        )
+        meta["delta_n"] = int(delta.n)
+    with open(os.path.join(tmp, "meta.json"), "w") as f:
+        json.dump(meta, f)
+    # overwrite without a loss window: the previous checkpoint is renamed
+    # aside (not deleted) until the new one is in place, so a crash at any
+    # point leaves a complete checkpoint at `path` or `path.old` -- and
+    # `load_index` falls back to `.old` automatically
+    old = path + ".old"
+    if os.path.exists(old):
+        shutil.rmtree(old)
+    if os.path.exists(path):
+        os.rename(path, old)
+    os.rename(tmp, path)
+    if os.path.exists(old):
+        shutil.rmtree(old)
+    return path
+
+
+def load_index(path: str):
+    """Restore a `save_index` checkpoint.
+
+    Returns (IVFPQIndex, DeltaIndex | None, extra dict).  The index is
+    `validate()`d on load, so a corrupted/truncated checkpoint fails loudly
+    instead of serving wrong rows.  If `path` is missing but `path.old`
+    exists (a crash landed between `save_index`'s two renames), the
+    previous complete checkpoint is restored instead.
+    """
+    from repro.core.delta import DeltaIndex
+    from repro.core.index import IVFPQIndex
+
+    path = path.rstrip("/")
+    if not os.path.exists(path) and os.path.exists(path + ".old"):
+        path = path + ".old"
+    with open(os.path.join(path, "meta.json")) as f:
+        meta = json.load(f)
+    arrays = {
+        f: np.load(os.path.join(path, "index", f + ".npy"))
+        for f in _INDEX_FIELDS
+    }
+    index = IVFPQIndex(**arrays).validate()
+    delta = None
+    if meta.get("has_delta"):
+        dargs = {
+            f: np.load(os.path.join(path, "delta", f + ".npy"))
+            for f in _DELTA_FIELDS
+        }
+        tomb = np.load(os.path.join(path, "delta", "tombstones.npy"))
+        delta = DeltaIndex(
+            n=int(meta["delta_n"]),
+            tombstones=set(int(t) for t in tomb.tolist()),
+            **dargs,
+        )
+    return index, delta, meta.get("extra", {})

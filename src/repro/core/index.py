@@ -25,11 +25,22 @@ from repro.core.search import adc_scan, masked_topk_smallest
 class IVFPQIndex:
     """Cluster-sorted IVFPQ index.
 
+    Storage invariant (CSR): `codes`/`vec_ids` hold the rows of cluster c
+    contiguously at `[offsets[c], offsets[c + 1])`, clusters in ascending id
+    order, and within a cluster rows keep their original insertion order.
+    `cluster_codes`/`cluster_ids` slice directly on this invariant, and the
+    shard packer copies those slices verbatim — a delta merge that violated
+    it would silently hand every downstream layer the wrong rows, so
+    `validate()` asserts it and mutation paths call it after every
+    compaction.
+
     Attributes:
       centroids: (C, D) coarse centroids.
       codebook: (M, 256, d_sub) PQ codebooks (of residuals).
       codes: (N, M) uint8, rows sorted by cluster id.
-      vec_ids: (N,) int32 original vector ids, same order as codes.
+      vec_ids: (N,) int32 global vector ids, same order as codes (for a
+        freshly built index these are positions into the build input; the
+        mutation layer appends new ids past that range).
       offsets: (C + 1,) int64 CSR offsets into codes/vec_ids.
     """
 
@@ -60,6 +71,121 @@ class IVFPQIndex:
     def cluster_ids(self, c: int) -> np.ndarray:
         return self.vec_ids[self.offsets[c] : self.offsets[c + 1]]
 
+    def validate(self) -> "IVFPQIndex":
+        """Assert the contiguous CSR storage invariant; returns self.
+
+        Checks: offsets are monotone and span exactly the stored rows,
+        codes/vec_ids agree on the row count, and no vector id appears
+        twice (a corrupted delta merge would typically duplicate or drop
+        rows, which this catches in O(N log N)).
+        """
+        if self.offsets.shape != (self.n_clusters + 1,):
+            raise ValueError(
+                f"offsets shape {self.offsets.shape} != (C+1,)="
+                f"({self.n_clusters + 1},)"
+            )
+        if self.offsets[0] != 0 or (np.diff(self.offsets) < 0).any():
+            raise ValueError("offsets must start at 0 and be non-decreasing")
+        if int(self.offsets[-1]) != self.codes.shape[0]:
+            raise ValueError(
+                f"offsets[-1]={int(self.offsets[-1])} != "
+                f"codes rows {self.codes.shape[0]}"
+            )
+        if self.vec_ids.shape[0] != self.codes.shape[0]:
+            raise ValueError(
+                f"vec_ids rows {self.vec_ids.shape[0]} != "
+                f"codes rows {self.codes.shape[0]}"
+            )
+        if np.unique(self.vec_ids).size != self.vec_ids.size:
+            raise ValueError("duplicate vector ids in index")
+        return self
+
+
+_assign_fn = jax.jit(
+    lambda x, c: jnp.argmin(_pairwise_sq_l2(x, c), axis=1).astype(jnp.int32)
+)
+_encode_fn = jax.jit(pq_encode)
+
+
+def assign_clusters(centroids: np.ndarray, xs: np.ndarray) -> np.ndarray:
+    """(N,) int32 nearest coarse centroid per vector, chunked (billion-scale
+    friendly).  The single shared jitted argmin keeps insert-time assignment
+    bit-identical to build-time assignment."""
+    xs = np.asarray(xs, np.float32)
+    n = xs.shape[0]
+    assign = np.empty(n, np.int32)
+    chunk = max(1, min(n, 1 << 18))
+    cent = jnp.asarray(centroids)
+    for s in range(0, n, chunk):
+        assign[s : s + chunk] = np.asarray(
+            _assign_fn(jnp.asarray(xs[s : s + chunk]), cent)
+        )
+    return assign
+
+
+def encode_vectors(
+    codebook: np.ndarray,
+    centroids: np.ndarray,
+    xs: np.ndarray,
+    assign: np.ndarray,
+) -> np.ndarray:
+    """(N, M) uint8 PQ codes of the residuals xs - centroids[assign]."""
+    xs = np.asarray(xs, np.float32)
+    n = xs.shape[0]
+    m = codebook.shape[0]
+    residuals = xs - centroids[assign]
+    codes = np.empty((n, m), np.uint8)
+    chunk = max(1, min(n, 1 << 18))
+    cb = jnp.asarray(codebook)
+    for s in range(0, n, chunk):
+        codes[s : s + chunk] = np.asarray(
+            _encode_fn(cb, jnp.asarray(residuals[s : s + chunk]))
+        )
+    return codes
+
+
+def encode_index(
+    centroids: np.ndarray,
+    codebook: np.ndarray,
+    xs: np.ndarray,
+    vec_ids: np.ndarray | None = None,
+    assign: np.ndarray | None = None,
+) -> IVFPQIndex:
+    """Assemble an IVFPQIndex from *already trained* centroids + codebooks.
+
+    This is the deterministic second half of `build_index` (assignment,
+    residual encoding, CSR packing) without re-running k-means / PQ
+    training.  The mutation layer's compaction is defined against it: a
+    compacted index must be bit-identical to `encode_index` over the
+    surviving vectors in (original, then inserted) order.
+
+    Args:
+      vec_ids: optional (N,) global ids of xs rows; defaults to 0..N-1.
+      assign: optional precomputed (N,) cluster assignment (must equal
+        `assign_clusters(centroids, xs)`; `build_index` passes the one it
+        already computed so the full dataset is assigned exactly once).
+    """
+    centroids = np.asarray(centroids, np.float32)
+    codebook = np.asarray(codebook, np.float32)
+    n = np.asarray(xs).shape[0]
+    n_clusters = centroids.shape[0]
+    if assign is None:
+        assign = assign_clusters(centroids, xs)
+    codes = encode_vectors(codebook, centroids, xs, assign)
+    if vec_ids is None:
+        vec_ids = np.arange(n, dtype=np.int32)
+    order = np.argsort(assign, kind="stable")
+    sizes = np.bincount(assign, minlength=n_clusters)
+    offsets = np.zeros(n_clusters + 1, np.int64)
+    np.cumsum(sizes, out=offsets[1:])
+    return IVFPQIndex(
+        centroids=centroids,
+        codebook=codebook,
+        codes=codes[order],
+        vec_ids=np.asarray(vec_ids, np.int32)[order],
+        offsets=offsets,
+    ).validate()
+
 
 def build_index(
     key: jax.Array,
@@ -83,41 +209,15 @@ def build_index(
     centroids, _ = kmeans(k_ivf, jnp.asarray(train), n_clusters, iters=kmeans_iters)
     centroids = np.asarray(centroids)
 
-    # assign the *full* dataset in chunks (billion-scale friendly)
-    assign = np.empty(n, np.int32)
-    chunk = max(1, min(n, 1 << 18))
-    assign_fn = jax.jit(
-        lambda x, c: jnp.argmin(_pairwise_sq_l2(x, c), axis=1).astype(jnp.int32)
-    )
-    for s in range(0, n, chunk):
-        assign[s : s + chunk] = np.asarray(
-            assign_fn(jnp.asarray(xs[s : s + chunk]), jnp.asarray(centroids))
-        )
-
-    residuals = xs - centroids[assign]
-    res_train = residuals
+    # assign the full dataset once; PQ trains on the (subsampled) residuals
+    assign = assign_clusters(centroids, xs)
     if train_subsample is not None and train_subsample < n:
-        res_train = residuals[sel]
+        res_train = train - centroids[assign[sel]]
+    else:
+        res_train = xs - centroids[assign]
     codebook = np.asarray(train_pq(k_pq, jnp.asarray(res_train), m, iters=pq_iters))
 
-    codes = np.empty((n, m), np.uint8)
-    enc_fn = jax.jit(pq_encode)
-    for s in range(0, n, chunk):
-        codes[s : s + chunk] = np.asarray(
-            enc_fn(jnp.asarray(codebook), jnp.asarray(residuals[s : s + chunk]))
-        )
-
-    order = np.argsort(assign, kind="stable")
-    sizes = np.bincount(assign, minlength=n_clusters)
-    offsets = np.zeros(n_clusters + 1, np.int64)
-    np.cumsum(sizes, out=offsets[1:])
-    return IVFPQIndex(
-        centroids=centroids,
-        codebook=codebook,
-        codes=codes[order],
-        vec_ids=order.astype(np.int32),
-        offsets=offsets,
-    )
+    return encode_index(centroids, codebook, xs, assign=assign)
 
 
 @functools.partial(jax.jit, static_argnames=("nprobe",))

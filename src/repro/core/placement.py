@@ -83,46 +83,29 @@ def estimate_frequencies(
     return (counts + smoothing) / q
 
 
-def place_clusters(
+def _placement_pass(
     sizes: np.ndarray,
-    freqs: np.ndarray,
+    work: np.ndarray,
+    w_bar: float,
     ndev: int,
-    max_dev_vectors: int | None = None,
-    centroids: np.ndarray | None = None,
-    thld_rate: float = 0.02,
-    max_replicas: int | None = None,
-) -> Placement:
-    """Algorithm 1 over all clusters (ordered by workload, high to low).
+    max_dev_vectors: int,
+    max_replicas: int,
+    thld_rate: float,
+    centroids: np.ndarray | None,
+    replicas: list[list[int]],
+    dev_load: np.ndarray,
+    dev_vec: np.ndarray,
+    dev_clusters: list[list[int]],
+    placed: np.ndarray,
+) -> None:
+    """The Algorithm-1 placement sweep over every unplaced cluster.
 
-    Args:
-      sizes: (C,) vectors per cluster (s_i).
-      freqs: (C,) access frequency per cluster (f_i).
-      ndev: number of devices (the paper's ndpu).
-      max_dev_vectors: per-device capacity (the paper's MAX_DPU_SIZE);
-        defaults to 2x the balanced share.
-      centroids: optional (C, D) coarse centroids enabling the co-location
-        refinement (nearby clusters placed on the same device).
-      thld_rate: relaxation step for the balance threshold (paper: 0.02).
-      max_replicas: optional cap on ncpy (defaults to ndev).
-
-    Returns:
-      Placement with every cluster on >= 1 device.
+    Mutates the passed-in state in place.  `place_clusters` calls it with
+    empty state (the paper's offline placement); the mutation layer's
+    `update_placement` calls it with the previous placement minus the
+    changed clusters, so only those clusters move (incremental
+    re-placement).
     """
-    sizes = np.asarray(sizes, np.float64)
-    freqs = np.asarray(freqs, np.float64)
-    c = sizes.shape[0]
-    work = sizes * freqs
-    w_bar = float(work.sum()) / ndev
-    if max_dev_vectors is None:
-        max_dev_vectors = int(np.ceil(2.0 * sizes.sum() / ndev)) + int(sizes.max())
-    if max_replicas is None:
-        max_replicas = ndev
-
-    replicas: list[list[int]] = [[] for _ in range(c)]
-    dev_load = np.zeros(ndev, np.float64)
-    dev_vec = np.zeros(ndev, np.int64)
-    dev_clusters: list[list[int]] = [[] for _ in range(ndev)]
-
     # nearest-neighbour cluster order for co-location
     if centroids is not None:
         cent = np.asarray(centroids, np.float64)
@@ -135,8 +118,6 @@ def place_clusters(
         near_order = np.argsort(d2, axis=1)  # (C, C)
     else:
         near_order = None
-
-    placed = np.zeros(c, bool)
 
     def _take(ci: int, d: int, w_i: float) -> None:
         replicas[ci].append(d)
@@ -216,6 +197,132 @@ def place_clusters(
                 else:
                     break
 
+
+def place_clusters(
+    sizes: np.ndarray,
+    freqs: np.ndarray,
+    ndev: int,
+    max_dev_vectors: int | None = None,
+    centroids: np.ndarray | None = None,
+    thld_rate: float = 0.02,
+    max_replicas: int | None = None,
+) -> Placement:
+    """Algorithm 1 over all clusters (ordered by workload, high to low).
+
+    Args:
+      sizes: (C,) vectors per cluster (s_i).
+      freqs: (C,) access frequency per cluster (f_i).
+      ndev: number of devices (the paper's ndpu).
+      max_dev_vectors: per-device capacity (the paper's MAX_DPU_SIZE);
+        defaults to 2x the balanced share.
+      centroids: optional (C, D) coarse centroids enabling the co-location
+        refinement (nearby clusters placed on the same device).
+      thld_rate: relaxation step for the balance threshold (paper: 0.02).
+      max_replicas: optional cap on ncpy (defaults to ndev).
+
+    Returns:
+      Placement with every cluster on >= 1 device.
+    """
+    sizes = np.asarray(sizes, np.float64)
+    freqs = np.asarray(freqs, np.float64)
+    c = sizes.shape[0]
+    work = sizes * freqs
+    w_bar = float(work.sum()) / ndev
+    if max_dev_vectors is None:
+        max_dev_vectors = int(np.ceil(2.0 * sizes.sum() / ndev)) + int(sizes.max())
+    if max_replicas is None:
+        max_replicas = ndev
+
+    replicas: list[list[int]] = [[] for _ in range(c)]
+    dev_load = np.zeros(ndev, np.float64)
+    dev_vec = np.zeros(ndev, np.int64)
+    dev_clusters: list[list[int]] = [[] for _ in range(ndev)]
+    placed = np.zeros(c, bool)
+
+    _placement_pass(
+        sizes, work, w_bar, ndev, max_dev_vectors, max_replicas, thld_rate,
+        centroids, replicas, dev_load, dev_vec, dev_clusters, placed,
+    )
+    return Placement(
+        replicas=replicas,
+        dev_load=dev_load,
+        dev_vectors=dev_vec,
+        dev_clusters=dev_clusters,
+        w_bar=w_bar,
+    )
+
+
+def update_placement(
+    base: Placement,
+    sizes: np.ndarray,
+    freqs: np.ndarray,
+    changed: np.ndarray,
+    max_dev_vectors: int | None = None,
+    centroids: np.ndarray | None = None,
+    thld_rate: float = 0.02,
+    max_replicas: int | None = None,
+) -> Placement:
+    """Incremental re-placement after a compaction changed cluster sizes.
+
+    Clusters NOT in `changed` keep their replica devices (and their order
+    within each device's cluster list, so the shard packer can leave those
+    device regions untouched); changed clusters are pulled out and re-placed
+    by the same Algorithm-1 sweep (`_placement_pass`), greedily filling the
+    devices around the retained load.  Device loads/vector counts are
+    recomputed from the NEW sizes, so unchanged clusters' load contributions
+    track their current replica counts exactly (each replica carries
+    work/ncpy, the same accounting `place_clusters` uses).
+
+    Args:
+      base: the placement being updated.
+      sizes: (C,) NEW cluster sizes.
+      freqs: (C,) access frequencies (typically unchanged).
+      changed: (C,) bool mask (or int id array) of clusters to re-place.
+
+    Returns:
+      A fresh Placement (base is not mutated).
+    """
+    sizes = np.asarray(sizes, np.float64)
+    freqs = np.asarray(freqs, np.float64)
+    c = sizes.shape[0]
+    ndev = base.dev_load.shape[0]
+    changed = np.asarray(changed)
+    if changed.dtype != bool:
+        mask = np.zeros(c, bool)
+        mask[changed] = True
+        changed = mask
+    work = sizes * freqs
+    w_bar = float(work.sum()) / ndev
+    if max_dev_vectors is None:
+        max_dev_vectors = int(np.ceil(2.0 * sizes.sum() / ndev)) + int(
+            sizes.max(initial=1)
+        )
+    if max_replicas is None:
+        max_replicas = ndev
+
+    replicas: list[list[int]] = [
+        [] if changed[ci] else list(base.replicas[ci]) for ci in range(c)
+    ]
+    dev_clusters: list[list[int]] = [
+        [ci for ci in base.dev_clusters[d] if not changed[ci]]
+        for d in range(ndev)
+    ]
+    dev_load = np.zeros(ndev, np.float64)
+    dev_vec = np.zeros(ndev, np.int64)
+    for ci in range(c):
+        reps = replicas[ci]
+        if not reps:
+            continue
+        share = work[ci] / len(reps)
+        for d in reps:
+            dev_load[d] += share
+            dev_vec[d] += int(sizes[ci])
+    placed = ~changed
+
+    _placement_pass(
+        sizes, work, w_bar, ndev, max_dev_vectors, max_replicas, thld_rate,
+        centroids, replicas, dev_load, dev_vec, dev_clusters, placed,
+    )
     return Placement(
         replicas=replicas,
         dev_load=dev_load,

@@ -28,6 +28,18 @@ def main():
         "--pipeline-depth", type=int, default=1,
         help="retrieval serving pipeline depth (0 = strictly serial)",
     )
+    ap.add_argument(
+        "--churn-insert-rate", type=int, default=0,
+        help="corpus inserts per request batch (0 = immutable serving)",
+    )
+    ap.add_argument(
+        "--churn-delete-rate", type=int, default=0,
+        help="corpus deletes per request batch",
+    )
+    ap.add_argument(
+        "--compact-occupancy", type=float, default=0.75,
+        help="delta-buffer fill fraction that triggers auto-compaction",
+    )
     args = ap.parse_args()
 
     import jax
@@ -94,9 +106,12 @@ def main():
         xs, centers, _ = make_clustered_vectors(
             rcfg.n_vectors, cfg.d_model, rcfg.n_clusters, pattern_pool=64
         )
+        churn = args.churn_insert_rate > 0 or args.churn_delete_rate > 0
         eng = MemANNSEngine.build(
             jax.random.PRNGKey(1), xs, rcfg.n_clusters, rcfg.m,
-            use_cooc=True, n_combos=rcfg.n_combos, block_n=rcfg.block_n,
+            # the mutable path requires plain (non-co-occ) shards
+            use_cooc=not churn, n_combos=rcfg.n_combos, block_n=rcfg.block_n,
+            mutable=churn,
         )
         # serve through the pipelined engine: host planning of batch i+1
         # overlaps device execution of batch i, and each batch's per-device
@@ -108,12 +123,36 @@ def main():
             eng, nprobe=rcfg.nprobe, k=rcfg.k,
             micro_batch=max(1, b // 2),
             pipeline_depth=args.pipeline_depth,
+            mutable=churn,
+            compact_occupancy=args.compact_occupancy,
         )
         srv.warmup()
         # query with the (pooled) last hidden state proxy: last logits proj
         qvecs = np.asarray(
             jax.random.normal(jax.random.PRNGKey(2), (b, cfg.d_model))
         ) + centers[np.random.default_rng(0).integers(0, len(centers), b)]
+        if churn:
+            # mutate the corpus between request batches: fresh documents
+            # stream in, stale ones are tombstoned, searches interleave
+            rng = np.random.default_rng(5)
+            next_id = rcfg.n_vectors
+            for _ in range(4):  # a few churn rounds around the search
+                if args.churn_insert_rate:
+                    ids = np.arange(
+                        next_id, next_id + args.churn_insert_rate, dtype=np.int32
+                    )
+                    next_id += args.churn_insert_rate
+                    vecs = (
+                        centers[rng.integers(0, len(centers), ids.size)]
+                        + rng.normal(0, 1, (ids.size, cfg.d_model))
+                    ).astype(np.float32)
+                    srv.insert(ids, vecs)
+                if args.churn_delete_rate:
+                    srv.delete(
+                        rng.choice(rcfg.n_vectors, args.churn_delete_rate,
+                                   replace=False)
+                    )
+                srv.search(qvecs.astype(np.float32))
         t0 = time.time()
         dists, ids = srv.search(qvecs.astype(np.float32))
         st = srv.stats
@@ -129,6 +168,15 @@ def main():
             "rows_scanned": st.rows_scanned,
             "load_carry": [round(x, 1) for x in srv.load_carry().tolist()],
         }
+        if churn:
+            report["retrieval_stats"]["mutation"] = {
+                "inserts": st.inserts,
+                "deletes": st.deletes,
+                "compactions": st.compactions,
+                "delta_occupancy": round(st.delta_occupancy, 3),
+                "tombstones": st.tombstones,
+                "compaction_mean_ms": round(1e3 * st.compaction_mean_s(), 2),
+            }
 
     print(json.dumps(report, indent=1))
 

@@ -12,10 +12,16 @@
                shape-bucketed, pre-warmed sharded_search instances, a
                depth-configurable host/device pipeline, and rows-scanned
                load feedback into Algorithm 2
+  mutation.py -- online inserts/deletes: DeltaIndex buffering, tombstone
+               filtering composed with the top-k merge, and incremental
+               compaction (CSR merge + Algorithm-1 re-placement of changed
+               clusters + delta-rebuild of affected device regions)
 """
 
+from repro.core.delta import DeltaIndex
 from repro.retrieval.engine import MemANNSEngine, SearchPlan, round_capacity
-from repro.retrieval.layout import DeviceShards, build_shards
+from repro.retrieval.layout import DeviceShards, build_shards, update_shards
+from repro.retrieval.mutation import CompactionReport
 from repro.retrieval.search import InFlightSearch
 from repro.retrieval.serving import ServingEngine, ServingStats
 
@@ -26,6 +32,9 @@ __all__ = [
     "round_capacity",
     "DeviceShards",
     "build_shards",
+    "update_shards",
+    "DeltaIndex",
+    "CompactionReport",
     "ServingEngine",
     "ServingStats",
 ]

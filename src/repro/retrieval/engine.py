@@ -86,6 +86,8 @@ class MemANNSEngine:
     path: str = "gather"
     scan: str = "tiles"  # device scan variant: "tiles" | "windows"
     interpret: bool | None = None
+    freqs: np.ndarray | None = None   # f_i estimate (kept for re-placement)
+    delta: "object | None" = None     # DeltaIndex once mutation is enabled
     _dev_arrays: tuple | None = None
 
     @classmethod
@@ -107,7 +109,18 @@ class MemANNSEngine:
         path: str = "gather",
         scan: str = "tiles",
         interpret: bool | None = None,
+        mutable: bool = False,
+        delta_capacity: int = 4096,
+        cap_slack: float | None = None,
+        slot_slack: int | None = None,
+        window_slack: int | None = None,
     ) -> "MemANNSEngine":
+        """Offline build.  `mutable=True` enables online inserts/deletes:
+        a DeltaIndex buffer (`delta_capacity` rows, pow2-bucketed) is
+        allocated up front and the shard packing reserves growth slack
+        (`cap_slack`/`slot_slack`/`window_slack`, defaulting to 50% rows /
+        4 slots / 2 window blocks) so incremental compactions keep every
+        compiled shape stable under moderate churn."""
         mesh = mesh or make_dpu_mesh()
         ndev = math.prod(mesh.devices.shape)
         index = build_index(
@@ -129,6 +142,11 @@ class MemANNSEngine:
             ndev,
             centroids=index.centroids,
         )
+        if mutable and use_cooc:
+            raise NotImplementedError(
+                "mutable=True requires use_cooc=False (co-occ shards are "
+                "immutable; see retrieval.layout.update_shards)"
+            )
         shards = build_shards(
             index,
             placement,
@@ -136,8 +154,13 @@ class MemANNSEngine:
             n_combos=n_combos,
             block_n=block_n,
             min_length_reduction=min_length_reduction,
+            cap_slack=(0.5 if cap_slack is None else cap_slack) if mutable else 0.0,
+            slot_slack=(4 if slot_slack is None else slot_slack) if mutable else 0,
+            window_slack=(
+                (2 if window_slack is None else window_slack) if mutable else 0
+            ),
         )
-        return cls(
+        eng = cls(
             index=index,
             placement=placement,
             shards=shards,
@@ -145,7 +168,40 @@ class MemANNSEngine:
             path=path,
             scan=scan,
             interpret=interpret,
+            freqs=freqs,
         )
+        if mutable:
+            from repro.retrieval.mutation import ensure_delta
+
+            ensure_delta(eng, delta_capacity)
+        return eng
+
+    # ------------------------- online mutation ------------------------- #
+
+    def insert(self, ids: np.ndarray, vectors: np.ndarray) -> int:
+        """Buffer new PQ-encoded vectors; visible to the next search."""
+        from repro.retrieval.mutation import insert_into
+
+        return insert_into(self, ids, vectors)
+
+    def delete(self, ids: np.ndarray) -> int:
+        """Tombstone ids; filtered from the next search onward."""
+        from repro.retrieval.mutation import delete_from
+
+        return delete_from(self, ids)
+
+    def compact(self, replace_threshold: float = 0.25):
+        """Merge delta + drop tombstones; incremental re-place + repack.
+
+        Returns a `repro.retrieval.mutation.CompactionReport`."""
+        from repro.retrieval.mutation import compact_engine
+
+        return compact_engine(self, replace_threshold=replace_threshold)
+
+    @property
+    def mutation_active(self) -> bool:
+        """True when searches must consult the delta layer."""
+        return self.delta is not None and self.delta.active
 
     # ------------------------------------------------------------------ #
 
@@ -376,6 +432,17 @@ class MemANNSEngine:
         k: int,
         pairs_per_dev: int | None = None,
     ) -> tuple[np.ndarray, np.ndarray]:
-        """Full online path.  Returns (dists (Q, k), ids (Q, k))."""
+        """Full online path.  Returns (dists (Q, k), ids (Q, k)).
+
+        With an active mutation layer (buffered inserts or tombstones) the
+        main-path results are overfetched/filtered and merged with the
+        delta-buffer top-k; otherwise this is the plain immutable path.
+        """
+        if self.mutation_active:
+            from repro.retrieval.mutation import mutable_search
+
+            return mutable_search(
+                self, queries, nprobe, k, pairs_per_dev=pairs_per_dev
+            )
         plan = self.plan_batch(queries, nprobe, pairs_per_dev=pairs_per_dev)
         return self.execute_plan(plan, k)

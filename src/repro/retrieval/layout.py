@@ -83,6 +83,9 @@ def build_shards(
     min_length_reduction: float = 0.0,
     mine_rows: int = 50_000,
     compact_dtype: bool = True,
+    cap_slack: float = 0.0,
+    slot_slack: int = 0,
+    window_slack: int = 0,
 ) -> DeviceShards:
     """Offline packing: re-encode (optionally), align, replicate, pad.
 
@@ -90,6 +93,12 @@ def build_shards(
       min_length_reduction: apply co-occ re-encoding to a cluster only when
         its average length reduction exceeds this (paper uses 0.5; default 0
         = always apply, benchmarks sweep it).
+      cap_slack / slot_slack / window_slack: growth headroom for the mutable
+        path -- per-device row capacity is padded by `cap_slack` (fraction),
+        `slot_slack` spare cluster slots and `window_slack` spare blocks on
+        the per-pair window are reserved, so `update_shards` after a
+        compaction can usually keep every array shape (and therefore every
+        compiled `sharded_search` executable) stable under churn.
     """
     ndev = len(placement.dev_clusters)
     m = index.m
@@ -163,8 +172,9 @@ def build_shards(
     # ---- per-device packing, block-aligned slots --------------------------
     sizes = index.cluster_sizes()
     s_max = max((len(cl) for cl in placement.dev_clusters), default=1)
-    s_max = max(s_max, 1)
+    s_max = max(s_max, 1) + max(int(slot_slack), 0)
     window = _align(int(max(sizes.max(initial=1), 1)), block_n)
+    window += max(int(window_slack), 0) * block_n
 
     # no window overrun pad: the windows kernel clamps its streamed block
     # index at the last block, and the tiles path carries explicit row counts
@@ -172,6 +182,8 @@ def build_shards(
     for d in range(ndev):
         caps.append(sum(_align(int(sizes[c]), block_n) for c in placement.dev_clusters[d]))
     cap = max(max(caps, default=block_n), block_n)
+    if cap_slack > 0.0:
+        cap = _align(int(np.ceil(cap * (1.0 + cap_slack))), block_n)
 
     fill = 0 if add_offsets else sentinel  # padding rows are n_valid-masked
     codes = np.full((ndev, cap, width), fill, store_dtype)
@@ -213,3 +225,137 @@ def build_shards(
         block_n=block_n,
         window=window,
     )
+
+
+def update_shards(
+    index: IVFPQIndex,
+    placement: Placement,
+    old: DeviceShards,
+    changed: np.ndarray,
+) -> tuple[DeviceShards, np.ndarray]:
+    """Delta-rebuild of the device shards after a compaction.
+
+    Only *affected* devices are repacked: a device is affected when its
+    cluster list changed (incremental re-placement moved something on or
+    off it) or when any cluster it holds had rows added/removed.  Every
+    other device's packed region -- codes, vec_ids, slot tables, local_slot
+    row -- is copied through verbatim, so the delta-rebuild cost scales with
+    the churn, not the corpus.
+
+    Array shapes (row capacity, slot count, scan window) are kept whenever
+    the new packing fits, so the jitted `sharded_search` executables stay
+    valid across compactions; they grow (block-aligned / slack-free) only
+    on overflow, which the serving layer then counts as a cold shape.
+
+    Co-occurrence-encoded shards are not yet mutable (`n_combos > 0`
+    raises): re-encoding would require re-mining combos per changed
+    cluster.
+
+    Args:
+      index: the compacted IVFPQIndex.
+      placement: the updated Placement (unchanged clusters keep their
+        position in each device's cluster list -- `update_placement`
+        guarantees this, and the verbatim-copy fast path relies on it).
+      old: the shards being updated.
+      changed: (C,) bool mask of clusters whose rows changed.
+
+    Returns:
+      (new DeviceShards, (A,) int array of repacked device ids).
+    """
+    if old.n_combos > 0:
+        raise NotImplementedError(
+            "update_shards: co-occ encoded shards are immutable (re-mining "
+            "combos per changed cluster is not implemented); build with "
+            "use_cooc=False for the mutable path"
+        )
+    ndev = old.ndev
+    m = index.m
+    c_n = index.n_clusters
+    block_n = old.block_n
+    sizes = index.cluster_sizes()
+    changed = np.asarray(changed, bool)
+
+    old_lists = [
+        [int(c) for c in old.slot_cluster[d] if c >= 0] for d in range(ndev)
+    ]
+    affected = np.array(
+        [
+            placement.dev_clusters[d] != old_lists[d]
+            or any(changed[c] for c in placement.dev_clusters[d])
+            for d in range(ndev)
+        ],
+        bool,
+    )
+
+    # shape requirements of the new packing (affected devices only can
+    # force growth; unaffected devices fit by construction)
+    need_slots = max((len(cl) for cl in placement.dev_clusters), default=1)
+    s_max = max(old.slot_start.shape[1], max(need_slots, 1))
+    window = max(
+        old.window, _align(int(max(sizes.max(initial=1), 1)), block_n)
+    )
+    need_cap = max(
+        (
+            sum(_align(int(sizes[c]), block_n) for c in placement.dev_clusters[d])
+            for d in np.flatnonzero(affected)
+        ),
+        default=block_n,
+    )
+    cap = max(old.codes.shape[1], need_cap)
+
+    fill = 0 if old.add_offsets else old.sentinel
+    codes = np.full((ndev, cap, m), fill, old.codes.dtype)
+    vec_ids = np.full((ndev, cap), -1, np.int32)
+    slot_start = np.zeros((ndev, s_max), np.int32)
+    slot_size = np.zeros((ndev, s_max), np.int32)
+    slot_cluster = np.full((ndev, s_max), -1, np.int32)
+    combo_addrs = np.zeros((ndev, s_max, 0, old.combo_addrs.shape[3]), np.int32)
+    local_slot = np.full((ndev, c_n), -1, np.int32)
+
+    old_cap = old.codes.shape[1]
+    old_smax = old.slot_start.shape[1]
+    for d in range(ndev):
+        if not affected[d]:
+            codes[d, :old_cap] = old.codes[d]
+            vec_ids[d, :old_cap] = old.vec_ids[d]
+            slot_start[d, :old_smax] = old.slot_start[d]
+            slot_size[d, :old_smax] = old.slot_size[d]
+            slot_cluster[d, :old_smax] = old.slot_cluster[d]
+            local_slot[d] = old.local_slot[d]
+            continue
+        cursor = 0
+        for s, c in enumerate(placement.dev_clusters[d]):
+            rows = index.cluster_codes(c)
+            n_rows = rows.shape[0]
+            if old.add_offsets:
+                codes[d, cursor : cursor + n_rows] = rows
+            else:
+                codes[d, cursor : cursor + n_rows] = (
+                    np.arange(m, dtype=np.int32)[None, :] * NCODES
+                    + rows.astype(np.int32)
+                )
+            vec_ids[d, cursor : cursor + n_rows] = index.cluster_ids(c)
+            slot_start[d, s] = cursor
+            slot_size[d, s] = n_rows
+            slot_cluster[d, s] = c
+            local_slot[d, c] = s
+            cursor += _align(n_rows, block_n)
+
+    return (
+        DeviceShards(
+            codes=codes,
+            add_offsets=old.add_offsets,
+            vec_ids=vec_ids,
+            slot_start=slot_start,
+            slot_size=slot_size,
+            slot_cluster=slot_cluster,
+            combo_addrs=combo_addrs,
+            local_slot=local_slot,
+            m_subspaces=m,
+            n_combos=0,
+            block_n=block_n,
+            window=window,
+        ),
+        np.flatnonzero(affected),
+    )
+

@@ -1,0 +1,191 @@
+"""Online mutation glue: delta inserts/deletes + incremental compaction
+threaded through the engine/serving layers.
+
+`repro.core.delta` owns the index-level pieces (the DeltaIndex buffer, the
+jitted delta search, `compact_index`); this module wires them into the
+system of paper Fig. 5:
+
+  insert/delete  ->  DeltaIndex (host buffer, pow2-bucketed jit shapes)
+  search         ->  main `sharded_search` results (overfetched when
+                     tombstones exist) merged with the delta top-k; the
+                     tombstone filter composes with the early-pruning merge
+  compact        ->  `compact_index` (CSR merge, bit-identical to a
+                     from-scratch re-encode) + `update_placement`
+                     (Algorithm 1 re-run for out-of-threshold clusters
+                     only) + `update_shards` (only affected device regions
+                     repacked) + a single re-`device_put`
+
+Compaction keeps array shapes whenever the slack reserved at build time
+absorbs the growth, so a serving loop's warmed executables stay hot across
+compactions -- zero steady-state recompiles under churn is the contract
+`tests/test_mutation.py` pins.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import time
+import typing
+
+import numpy as np
+
+from repro.core.delta import (
+    DeltaIndex,
+    compact_index,
+    delta_topk,
+    merge_results,
+)
+from repro.core.placement import update_placement
+from repro.retrieval.layout import update_shards
+
+if typing.TYPE_CHECKING:  # circular at runtime (engine imports this module)
+    from repro.retrieval.engine import MemANNSEngine
+
+
+@dataclasses.dataclass
+class CompactionReport:
+    """What one compaction did (and what it cost)."""
+
+    merged: int                 # live delta rows merged into the main index
+    dropped: int                # tombstoned rows removed (main + delta)
+    clusters_changed: int       # clusters whose rows changed
+    clusters_replaced: int      # clusters Algorithm 1 re-placed
+    devices_rewritten: int      # device regions repacked by update_shards
+    shapes_changed: bool        # any shard array shape grew (forces recompile)
+    latency_s: float
+
+    def summary(self) -> str:
+        return (
+            f"compaction: +{self.merged}/-{self.dropped} rows, "
+            f"{self.clusters_changed} clusters changed "
+            f"({self.clusters_replaced} re-placed), "
+            f"{self.devices_rewritten} devices rewritten, "
+            f"shapes_changed={self.shapes_changed}, "
+            f"{1e3 * self.latency_s:.1f}ms"
+        )
+
+
+def ensure_delta(engine: "MemANNSEngine", capacity: int = 4096) -> DeltaIndex:
+    """Allocate the engine's delta buffer on first use (idempotent)."""
+    if engine.delta is None:
+        engine.delta = DeltaIndex.create(engine.index.m, capacity)
+    return engine.delta
+
+
+def insert_into(
+    engine: "MemANNSEngine", ids: np.ndarray, vectors: np.ndarray
+) -> int:
+    """PQ-encode + buffer new vectors; visible to the very next search."""
+    delta = ensure_delta(engine)
+    return delta.insert(engine.index.centroids, engine.index.codebook, ids, vectors)
+
+
+def delete_from(engine: "MemANNSEngine", ids: np.ndarray) -> int:
+    """Tombstone ids (main-index or delta); filtered from the next search."""
+    delta = ensure_delta(engine)
+    return delta.delete(ids)
+
+
+def engine_delta_topk(
+    engine: "MemANNSEngine", queries: np.ndarray, nprobe: int, k: int
+) -> tuple[np.ndarray, np.ndarray]:
+    """Delta-buffer top-k under the engine's probe semantics."""
+    return delta_topk(
+        engine.delta,
+        engine.index.centroids,
+        engine.index.codebook,
+        np.asarray(queries, np.float32),
+        nprobe,
+        k,
+    )
+
+
+def mutable_search(
+    engine: "MemANNSEngine",
+    queries: np.ndarray,
+    nprobe: int,
+    k: int,
+    pairs_per_dev: int | None = None,
+    overfetch: int | None = None,
+) -> tuple[np.ndarray, np.ndarray]:
+    """Full online path over (main index - tombstones) + delta buffer.
+
+    Fetches `k + overfetch` (default overfetch = k) from the main path when
+    tombstones exist, so the filter can absorb up to `overfetch` dead rows
+    per query; merges the delta top-k; returns (dists (Q, k), ids (Q, k)).
+    A query whose entire fetch window is tombstoned comes back with
+    (+inf, -1) padding -- compacting (which the serving layer does
+    automatically on starvation) restores exact results.  With an inactive
+    delta this is exactly `engine.search` (same executable, same results).
+    """
+    delta = engine.delta
+    tomb = delta.tombstone_array() if delta is not None else np.zeros(0, np.int64)
+    k_fetch = k + (overfetch if overfetch is not None else k) if tomb.size else k
+    plan = engine.plan_batch(queries, nprobe, pairs_per_dev=pairs_per_dev)
+    main_d, main_i = engine.execute_plan(plan, k_fetch)
+    delta_d = delta_i = None
+    if delta is not None and delta.live_count > 0:
+        delta_d, delta_i = engine_delta_topk(engine, queries, nprobe, k)
+    return merge_results(main_d, main_i, delta_d, delta_i, tomb, k)
+
+
+def compact_engine(
+    engine: "MemANNSEngine", replace_threshold: float = 0.25
+) -> CompactionReport:
+    """Merge the delta into the main index and refresh placement + shards.
+
+    Re-placement is incremental: a cluster goes back through Algorithm 1
+    only when its size moved more than `replace_threshold` (relative to its
+    old size); everything else keeps its devices, so `update_shards` can
+    leave those regions untouched.  The device-side array cache is
+    invalidated (one batched re-`device_put` on the next dispatch).
+    """
+    t0 = time.perf_counter()
+    delta = engine.delta
+    if delta is None or not delta.active:
+        return CompactionReport(0, 0, 0, 0, 0, False, 0.0)
+
+    new_index, info = compact_index(engine.index, delta)
+    grew = np.abs(info.new_sizes - info.old_sizes)
+    replace = info.content_changed & (
+        grew > replace_threshold * np.maximum(info.old_sizes, 1)
+    )
+    freqs = (
+        engine.freqs
+        if engine.freqs is not None
+        else np.ones(new_index.n_clusters) / new_index.n_clusters
+    )
+    new_placement = update_placement(
+        engine.placement,
+        new_index.cluster_sizes().astype(np.float64),
+        freqs,
+        replace,
+        centroids=new_index.centroids,
+    )
+    old_shapes = (
+        engine.shards.codes.shape,
+        engine.shards.slot_start.shape,
+        engine.shards.window,
+    )
+    new_shards, rewritten = update_shards(
+        new_index, new_placement, engine.shards, info.content_changed
+    )
+    shapes_changed = old_shapes != (
+        new_shards.codes.shape,
+        new_shards.slot_start.shape,
+        new_shards.window,
+    )
+    engine.index = new_index
+    engine.placement = new_placement
+    engine.shards = new_shards
+    engine._dev_arrays = None  # next dispatch re-ships the packed arrays
+    delta.reset()
+    return CompactionReport(
+        merged=info.merged,
+        dropped=info.dropped,
+        clusters_changed=int(info.content_changed.sum()),
+        clusters_replaced=int(replace.sum()),
+        devices_rewritten=int(rewritten.size),
+        shapes_changed=shapes_changed,
+        latency_s=time.perf_counter() - t0,
+    )

@@ -30,6 +30,15 @@ row counts (rows scanned are a deterministic function of the plan), not at
 collect time: that way the carry seen when planning batch i+1 covers
 batches 0..i at every pipeline depth, and depth 0 vs depth 1 produce
 bit-identical schedules, hence bit-identical results.
+
+With `mutable=True` the engine also serves online corpus mutations
+(insert/delete/compact): delta-buffer searches run at plan time with the
+batch's tombstone snapshot (so pipeline depths stay result-identical), the
+main path is overfetched while tombstones exist, the tombstone filter +
+delta merge compose with the top-k at collect time, and compactions
+auto-trigger on delta occupancy / tombstone thresholds.  `warmup()` warms
+the overfetched executables and the jitted delta search too, so steady
+state never recompiles during churn.
 """
 
 from __future__ import annotations
@@ -41,7 +50,15 @@ import time
 
 import numpy as np
 
+from repro.core.delta import merge_results
 from repro.retrieval.engine import MemANNSEngine, SearchPlan, round_capacity
+from repro.retrieval.mutation import (
+    compact_engine,
+    delete_from,
+    engine_delta_topk,
+    ensure_delta,
+    insert_into,
+)
 from repro.retrieval.search import InFlightSearch, search_static_key
 
 
@@ -62,6 +79,14 @@ class ServingStats:
     device_s: float = 0.0  # dispatch + blocked collect (incl. transfers)
     overlap_s: float = 0.0  # host planning done while a batch was in flight
     rows_scanned: int = 0   # total code rows visited by collected batches
+    # --- mutation counters (mutable serving only) ---
+    inserts: int = 0        # vectors appended to the delta buffer
+    deletes: int = 0        # ids tombstoned
+    compactions: int = 0    # delta -> main merges triggered
+    starved_batches: int = 0  # batches where tombstones ate a full overfetch
+    delta_occupancy: float = 0.0  # buffer fill fraction (gauge)
+    tombstones: int = 0     # live tombstone count (gauge)
+    compaction_s: list[float] = dataclasses.field(default_factory=list)
     latencies_s: collections.deque = dataclasses.field(
         default_factory=lambda: collections.deque(maxlen=LATENCY_WINDOW)
     )
@@ -88,6 +113,11 @@ class ServingStats:
     def p99_s(self) -> float:
         return self.latency_percentile(99.0)
 
+    def compaction_mean_s(self) -> float:
+        if not self.compaction_s:
+            return 0.0
+        return float(np.mean(self.compaction_s))
+
 
 class ServingEngine:
     """Steady-state serving wrapper around one `MemANNSEngine`.
@@ -107,6 +137,24 @@ class ServingEngine:
         off reproduces the static, load-blind scheduler.
       load_alpha: EWMA smoothing factor for the load carry (1.0 = last
         batch only).
+      mutable: enable the online mutation path (insert/delete/compact):
+        the engine's delta buffer is allocated, `warmup()` additionally
+        warms the overfetched main-path executables and the jitted delta
+        search, and mutations auto-compact at the thresholds below.
+      compact_occupancy: auto-compact when the delta buffer fill fraction
+        reaches this.
+      tombstone_limit: auto-compact when this many ids are tombstoned
+        (default delta_capacity // 4).
+      overfetch: extra main-path results fetched while tombstones exist
+        (default k, i.e. fetch 2k), absorbing up to `overfetch` filtered
+        rows per query.  A query whose whole fetch window is tombstoned
+        returns truncated ((+inf, -1)-padded) rows once; that batch is
+        counted in `stats.starved_batches` and triggers an immediate
+        compaction, so the next search is exact again.
+      replace_threshold: relative cluster-size change beyond which a
+        compaction re-places the cluster via Algorithm 1.
+      delta_capacity: initial delta-buffer rows (pow2-bucketed; growth
+        beyond a warmed bucket is an honest cold compile).
     """
 
     def __init__(
@@ -120,6 +168,12 @@ class ServingEngine:
         pipeline_depth: int = 1,
         load_feedback: bool = True,
         load_alpha: float = 0.5,
+        mutable: bool = False,
+        compact_occupancy: float = 0.75,
+        tombstone_limit: int | None = None,
+        overfetch: int | None = None,
+        replace_threshold: float = 0.25,
+        delta_capacity: int = 4096,
     ):
         self.engine = engine
         self.nprobe = int(nprobe)
@@ -129,34 +183,62 @@ class ServingEngine:
         self.pipeline_depth = int(pipeline_depth)
         self.load_feedback = bool(load_feedback)
         self.load_alpha = float(load_alpha)
+        self.mutable = bool(mutable) or engine.delta is not None
+        self.compact_occupancy = float(compact_occupancy)
+        self.overfetch = int(overfetch) if overfetch is not None else int(k)
+        self.replace_threshold = float(replace_threshold)
         self.stats = ServingStats()
         self._warm: set[tuple] = set()
         self._pending: list[np.ndarray] = []
+        self._starved = False
         self._load_ewma = np.zeros(engine.shards.ndev, np.float64)
+        if self.mutable:
+            ensure_delta(engine, delta_capacity)
+        self.tombstone_limit = (
+            int(tombstone_limit)
+            if tombstone_limit is not None
+            else max(64, (engine.delta.capacity if engine.delta else delta_capacity) // 4)
+        )
 
     # ------------------------------------------------------------------ #
 
-    def _key(self, plan: SearchPlan) -> tuple:
+    def _key(self, plan: SearchPlan, k: int | None = None) -> tuple:
         """jit-cache key of the executable `plan` dispatches to.
 
         Keyed on the *plan's* scan variant (`execute_plan`/`dispatch_plan`
         honor `plan.scan`, not `engine.scan`), so flipping `engine.scan`
         after warmup can neither miscount compiles nor mark the wrong
-        executable warm.
+        executable warm.  The shard array shapes are appended: a compaction
+        that grew the packed storage changes the executable even though
+        every static arg stayed equal, and the compile counter must see it.
         """
         s = self.engine.shards
         return search_static_key(
             ndev=s.ndev,
             n_queries=plan.n_queries,
             pairs_per_dev=plan.pairs_per_dev,
-            k=self.k,
+            k=self.k if k is None else k,
             block_n=s.block_n,
             window=s.window,
             path=self.engine.path,
             add_offsets=s.add_offsets,
             scan=plan.scan,
             tiles_per_dev=plan.tiles_per_dev,
-        )
+        ) + (s.codes.shape, s.slot_start.shape[1])
+
+    def _delta_key(self) -> tuple:
+        """Compile-cache key of the jitted delta search for this config."""
+        d = self.engine.delta
+        return ("delta", self.micro_batch, d.capacity, self.nprobe, self.k)
+
+    def _k_fetch(self) -> int:
+        """Main-path fetch size: overfetched while tombstones exist so the
+        collect-time filter can absorb up to `overfetch` dead rows per
+        query (starvation beyond that triggers a compaction; see search)."""
+        d = self.engine.delta
+        if d is not None and d.tombstone_count > 0:
+            return self.k + self.overfetch
+        return self.k
 
     def load_carry(self) -> np.ndarray:
         """Current (ndev,) EWMA of per-device rows scanned (a copy)."""
@@ -234,32 +316,53 @@ class ServingEngine:
         tile-count drift either.
         """
         buckets = sorted(buckets or self.default_buckets())
+        # the mutable path additionally needs the overfetched executables
+        # (tombstone filtering fetches k + overfetch) and the delta search
+        ks = [self.k] + ([self.k + self.overfetch] if self.mutable else [])
         for b in buckets:
             tile_caps = (
                 self.tile_buckets(b) if self.engine.scan == "tiles" else [0]
             )
             for t in tile_caps:
                 plan = self._dummy_plan(b, t)
-                self.engine.execute_plan(plan, self.k)
-                self._warm.add(self._key(plan))
+                for kf in ks:
+                    self.engine.execute_plan(plan, kf)
+                    self._warm.add(self._key(plan, kf))
         # warm the host path too (filter_clusters jit for this batch shape);
         # auto capacity, so a degenerate dummy schedule can never overflow
         dim = self.engine.index.centroids.shape[1]
         self.engine.plan_batch(
             np.zeros((self.micro_batch, dim), np.float32), self.nprobe
         )
+        if self.mutable:
+            self._warm_delta()
         return buckets
+
+    def _warm_delta(self) -> None:
+        """Compile the delta search for the current capacity bucket."""
+        dim = self.engine.index.centroids.shape[1]
+        engine_delta_topk(
+            self.engine,
+            np.zeros((self.micro_batch, dim), np.float32),
+            self.nprobe,
+            self.k,
+        )
+        self._warm.add(self._delta_key())
 
     # ------------------------------------------------------------------ #
 
-    def _plan_micro_batch(self, queries: np.ndarray) -> SearchPlan:
-        """Pad one chunk to the micro-batch size and plan it (host side)."""
+    def _pad_chunk(self, queries: np.ndarray) -> np.ndarray:
+        """Pad one chunk to the micro-batch size (rows sliced off later)."""
         q_n = queries.shape[0]
         if q_n < self.micro_batch:  # pad; padded rows sliced off at collect
             pad = np.broadcast_to(
                 queries[:1], (self.micro_batch - q_n, queries.shape[1])
             )
             queries = np.concatenate([queries, pad], axis=0)
+        return queries
+
+    def _plan_micro_batch(self, queries: np.ndarray) -> SearchPlan:
+        """Plan one padded micro-batch (host side)."""
         return self.engine.plan_batch(
             queries,
             self.nprobe,
@@ -267,17 +370,45 @@ class ServingEngine:
             load_carry=self._load_ewma if self.load_feedback else None,
         )
 
-    def _dispatch_micro_batch(self, plan: SearchPlan) -> InFlightSearch:
+    def _delta_micro_batch(
+        self, padded: np.ndarray
+    ) -> tuple[np.ndarray | None, np.ndarray | None, np.ndarray]:
+        """Delta top-k + tombstone snapshot for one padded micro-batch.
+
+        Runs at plan time so mutations landing later in the stream never
+        retroactively change an already-planned batch (pipeline-depth
+        invariance); returns (delta_d, delta_i, tombstone_array).
+        """
+        delta = self.engine.delta
+        if delta is None or not delta.active:
+            return None, None, np.zeros(0, np.int64)
+        tomb = delta.tombstone_array()
+        if delta.live_count == 0:
+            return None, None, tomb
+        key = self._delta_key()
+        if key not in self._warm:  # capacity grew past the warmed bucket
+            self.stats.compiles += 1
+            self._warm.add(key)
+        dd, di = engine_delta_topk(self.engine, padded, self.nprobe, self.k)
+        return dd, di, tomb
+
+    def _dispatch_micro_batch(
+        self, plan: SearchPlan, k_fetch: int | None = None
+    ) -> InFlightSearch:
         """Dispatch a planned micro-batch; update warm/compile + load state.
 
         The load EWMA folds in this plan's host-computed row counts *now*
         (not at collect) so the carry is identical at every pipeline depth.
+        `k_fetch` defaults to the serving k; the mutable path overfetches
+        while tombstones exist.
         """
-        key = self._key(plan)
+        if k_fetch is None:
+            k_fetch = self.k
+        key = self._key(plan, k_fetch)
         if key not in self._warm:
             self.stats.compiles += 1
             self._warm.add(key)
-        handle = self.engine.dispatch_plan(plan, self.k)
+        handle = self.engine.dispatch_plan(plan, k_fetch)
         if self.load_feedback:
             self._load_ewma = (
                 self.load_alpha * handle.dev_rows.astype(np.float64)
@@ -289,9 +420,18 @@ class ServingEngine:
         return handle
 
     def _collect_micro_batch(
-        self, handle: InFlightSearch, q_n: int, t_start: float
+        self,
+        handle: InFlightSearch,
+        q_n: int,
+        t_start: float,
+        mut: tuple | None = None,
     ) -> tuple[np.ndarray, np.ndarray]:
-        """Block on one in-flight micro-batch; slice padding, record stats."""
+        """Block on one in-flight micro-batch; slice padding, record stats.
+
+        `mut` carries the batch's plan-time mutation snapshot
+        (delta results + tombstones); the tombstone filter composes with
+        the early-pruning top-k merge here, after the device merge.
+        """
         t0 = time.perf_counter()
         d, i = self.engine.collect(handle)
         t1 = time.perf_counter()
@@ -300,6 +440,15 @@ class ServingEngine:
         self.stats.batches += 1
         self.stats.queries += q_n
         self.stats.rows_scanned += int(handle.dev_rows.sum())
+        if mut is not None:
+            dd, di, tomb = mut
+            d, i = merge_results(d, i, dd, di, tomb, self.k)
+            if tomb.size and (i[:q_n] < 0).any():
+                # tombstones swallowed a query's whole overfetch window:
+                # results are truncated, so compact as soon as the batch
+                # drain finishes (tombstone-free serving is exact again)
+                self._starved = True
+                self.stats.starved_batches += 1
         return d[:q_n], i[:q_n]
 
     def search(self, queries: np.ndarray) -> tuple[np.ndarray, np.ndarray]:
@@ -327,22 +476,33 @@ class ServingEngine:
             outs_d.append(d)
             outs_i.append(i)
 
+        mutating = self.engine.mutation_active
+        k_fetch = self._k_fetch() if mutating else self.k
         for s in range(0, queries.shape[0], self.micro_batch):
             chunk = queries[s : s + self.micro_batch]
             t0 = time.perf_counter()
-            plan = self._plan_micro_batch(chunk)
+            padded = self._pad_chunk(chunk)
+            plan = self._plan_micro_batch(padded)
+            mut = None
+            if mutating:
+                # delta search + tombstone snapshot at plan time: host work,
+                # overlappable with in-flight device batches like planning
+                mut = self._delta_micro_batch(padded)
             t1 = time.perf_counter()
             self.stats.host_s += t1 - t0
             if inflight:  # host planning hidden behind in-flight device work
                 self.stats.overlap_s += t1 - t0
-            handle = self._dispatch_micro_batch(plan)
+            handle = self._dispatch_micro_batch(plan, k_fetch)
             t2 = time.perf_counter()
             self.stats.device_s += t2 - t1
-            inflight.append((handle, chunk.shape[0], t0))
+            inflight.append((handle, chunk.shape[0], t0, mut))
             while len(inflight) > depth:
                 collect_one()
         while inflight:
             collect_one()
+        if self._starved:  # after the drain: no batches in flight
+            self._starved = False
+            self.compact()
         return np.concatenate(outs_d), np.concatenate(outs_i)
 
     # ------------------------------------------------------------------ #
@@ -368,3 +528,61 @@ class ServingEngine:
         queries = np.concatenate(self._pending)
         self._pending = []
         return self.search(queries)
+
+    # ----------------------- online mutation -------------------------- #
+
+    def _require_mutable(self) -> None:
+        if not self.mutable:
+            raise RuntimeError(
+                "this ServingEngine was built with mutable=False; "
+                "construct with mutable=True to serve inserts/deletes"
+            )
+
+    def _mutation_gauges(self) -> None:
+        d = self.engine.delta
+        self.stats.delta_occupancy = d.occupancy if d is not None else 0.0
+        self.stats.tombstones = d.tombstone_count if d is not None else 0
+
+    def insert(self, ids: np.ndarray, vectors: np.ndarray) -> int:
+        """Insert vectors into the live index; next search sees them.
+
+        Auto-compacts when the delta buffer crosses `compact_occupancy`.
+        """
+        self._require_mutable()
+        n = insert_into(self.engine, ids, vectors)
+        self.stats.inserts += n
+        self._maybe_compact()
+        self._mutation_gauges()
+        return n
+
+    def delete(self, ids: np.ndarray) -> int:
+        """Tombstone ids; auto-compacts at `tombstone_limit`."""
+        self._require_mutable()
+        n = delete_from(self.engine, ids)
+        self.stats.deletes += n
+        self._maybe_compact()
+        self._mutation_gauges()
+        return n
+
+    def _maybe_compact(self) -> None:
+        d = self.engine.delta
+        if d is None:
+            return
+        if (
+            d.occupancy >= self.compact_occupancy
+            or d.tombstone_count >= self.tombstone_limit
+        ):
+            self.compact()
+
+    def compact(self):
+        """Merge the delta into the main index (incremental re-placement +
+        shard delta-rebuild); returns the CompactionReport."""
+        self._require_mutable()
+        report = compact_engine(
+            self.engine, replace_threshold=self.replace_threshold
+        )
+        if report.latency_s > 0.0:
+            self.stats.compactions += 1
+            self.stats.compaction_s.append(report.latency_s)
+        self._mutation_gauges()
+        return report

@@ -1,0 +1,155 @@
+"""Hypothesis property tests for the mutation layer (core level).
+
+Requires the `[test]` extra; skipped cleanly when hypothesis is missing.
+
+Invariants, for arbitrary interleaved insert/delete sequences on a small
+prebuilt index:
+
+  * delta exactly-once coverage: every live inserted id occupies exactly
+    one buffer row, and `live_mask` excludes exactly the tombstoned ones;
+  * tombstoned ids never appear in a compacted index, and never in the
+    merged search results while still buffered;
+  * compaction == from-scratch re-encode: the compacted CSR storage is
+    bit-identical to `encode_index` over the surviving vectors with the
+    same trained centroids/codebooks (codes, ids, offsets).
+"""
+
+import functools
+
+import numpy as np
+import pytest
+
+pytest.importorskip("hypothesis")
+
+from hypothesis import given, settings, strategies as st  # noqa: E402
+
+SETTINGS = dict(max_examples=12, deadline=None)
+
+N0, DIM, C, M = 600, 16, 8, 4
+
+
+@functools.lru_cache(maxsize=1)
+def _base():
+    """Tiny trained index + corpus, built once for every example."""
+    import jax
+
+    from repro.core.index import build_index
+
+    rng = np.random.default_rng(0)
+    centers = rng.normal(0, 5, (C, DIM)).astype(np.float32)
+    xs = (
+        centers[rng.integers(0, C, N0)]
+        + rng.normal(0, 1, (N0, DIM)).astype(np.float32)
+    )
+    index = build_index(
+        jax.random.PRNGKey(0), xs, C, M, kmeans_iters=4, pq_iters=3
+    )
+    return index, xs, centers
+
+
+@given(
+    seed=st.integers(0, 10_000),
+    n_ins=st.integers(0, 60),
+    n_del=st.integers(0, 40),
+)
+@settings(**SETTINGS)
+def test_compaction_is_scratch_reencode(seed, n_ins, n_del):
+    from repro.core.delta import DeltaIndex, compact_index
+    from repro.core.index import encode_index
+
+    index, xs, centers = _base()
+    rng = np.random.default_rng(seed)
+    delta = DeltaIndex.create(M, 64)
+
+    new_ids = np.arange(N0, N0 + n_ins, dtype=np.int32)
+    new_xs = (
+        centers[rng.integers(0, C, n_ins)]
+        + rng.normal(0, 1, (n_ins, DIM)).astype(np.float32)
+    )
+    if n_ins:
+        delta.insert(index.centroids, index.codebook, new_ids, new_xs)
+
+    # delta exactly-once coverage
+    ids_in_delta = delta.vec_ids[: delta.n]
+    assert np.unique(ids_in_delta).size == delta.n
+    assert set(ids_in_delta.tolist()) == set(new_ids.tolist())
+
+    pool = np.arange(N0 + n_ins)
+    victims = rng.choice(pool, min(n_del, pool.size), replace=False)
+    if victims.size:
+        delta.delete(victims)
+    # live_mask excludes exactly the tombstoned buffered rows
+    live = delta.live_mask()
+    buffered_dead = np.isin(ids_in_delta, victims)
+    np.testing.assert_array_equal(live[: delta.n], ~buffered_dead)
+    assert delta.live_count == int((~buffered_dead).sum())
+
+    new_index, info = compact_index(index, delta)
+    # tombstoned ids are gone; everything else appears exactly once
+    assert not np.isin(new_index.vec_ids, victims).any()
+    assert np.unique(new_index.vec_ids).size == new_index.n_vectors
+    keep0 = ~np.isin(np.arange(N0), victims)
+    keep1 = ~np.isin(new_ids, victims)
+    want_ids = set(np.arange(N0)[keep0].tolist()) | set(
+        new_ids[keep1].tolist()
+    )
+    assert set(new_index.vec_ids.tolist()) == want_ids
+    assert info.merged == int(keep1.sum())
+    assert info.dropped == int((~keep0).sum() + (~keep1).sum())
+
+    # bit-identical to a from-scratch re-encode of the survivors
+    xs_surv = np.concatenate([xs[keep0], new_xs[keep1]])
+    ids_surv = np.concatenate([np.arange(N0)[keep0], new_ids[keep1]])
+    ref = encode_index(index.centroids, index.codebook, xs_surv, ids_surv)
+    np.testing.assert_array_equal(new_index.codes, ref.codes)
+    np.testing.assert_array_equal(new_index.vec_ids, ref.vec_ids)
+    np.testing.assert_array_equal(new_index.offsets, ref.offsets)
+
+
+@given(
+    seed=st.integers(0, 10_000),
+    n_ins=st.integers(1, 40),
+    n_del=st.integers(1, 30),
+    k=st.integers(1, 8),
+)
+@settings(**SETTINGS)
+def test_tombstoned_ids_never_returned(seed, n_ins, n_del, k):
+    """Merged (filtered main + delta) results never contain a tombstone,
+    and every returned id is actually live."""
+    from repro.core.delta import DeltaIndex, delta_topk, merge_results
+
+    index, xs, centers = _base()
+    rng = np.random.default_rng(seed)
+    delta = DeltaIndex.create(M, 64)
+    new_ids = np.arange(N0, N0 + n_ins, dtype=np.int32)
+    new_xs = (
+        centers[rng.integers(0, C, n_ins)]
+        + rng.normal(0, 1, (n_ins, DIM)).astype(np.float32)
+    )
+    delta.insert(index.centroids, index.codebook, new_ids, new_xs)
+    victims = rng.choice(np.arange(N0 + n_ins), n_del, replace=False)
+    delta.delete(victims)
+
+    qs = (
+        centers[rng.integers(0, C, 4)]
+        + rng.normal(0, 1, (4, DIM)).astype(np.float32)
+    )
+    from repro.core.index import search as flat_search
+
+    main_d, main_i = flat_search(index, qs, nprobe=4, k=2 * k)
+    dd, di = delta_topk(
+        delta, index.centroids, index.codebook, qs, nprobe=4, k=k
+    )
+    # delta search itself never surfaces a dead row
+    live_ids = set(new_ids[~np.isin(new_ids, victims)].tolist())
+    for row in di:
+        for i in row.tolist():
+            assert i == -1 or i in live_ids
+    d, i = merge_results(
+        main_d, main_i.astype(np.int64), dd, di,
+        delta.tombstone_array(), k,
+    )
+    assert d.shape == (4, k) and i.shape == (4, k)
+    assert not np.isin(i, victims).any()
+    # distances come back sorted (merge preserves the ADC order)
+    assert (np.diff(d, axis=1) >= 0).all()

@@ -6,7 +6,11 @@ module collects even when hypothesis is not installed.
 
 import numpy as np
 
-from repro.core.placement import estimate_frequencies, place_clusters
+from repro.core.placement import (
+    estimate_frequencies,
+    place_clusters,
+    update_placement,
+)
 from repro.core.scheduling import schedule_queries
 
 
@@ -112,3 +116,45 @@ def test_estimate_frequencies():
     hist = np.array([[0, 1], [0, 2], [0, 1]])
     f = estimate_frequencies(hist, 4, smoothing=0.0)
     np.testing.assert_allclose(f, [1.0, 2 / 3, 1 / 3, 0.0])
+
+
+def test_update_placement_moves_only_changed(rng):
+    """Incremental re-placement: unchanged clusters keep their devices (and
+    their order within each device's cluster list -- the shard packer's
+    verbatim-copy fast path depends on it); changed clusters land on >= 1
+    device; bookkeeping stays consistent."""
+    c, ndev = 96, 8
+    sizes = _zipf_sizes(rng, c)
+    freqs = rng.random(c)
+    base = place_clusters(sizes, freqs, ndev)
+    new_sizes = sizes.copy()
+    changed = np.zeros(c, bool)
+    changed[rng.choice(c, 12, replace=False)] = True
+    new_sizes[changed] = (new_sizes[changed] * 1.7 + 50).astype(np.int64)
+    pl = update_placement(base, new_sizes, freqs, changed)
+
+    for ci in range(c):
+        assert len(pl.replicas[ci]) >= 1
+        assert len(set(pl.replicas[ci])) == len(pl.replicas[ci])
+        if not changed[ci]:
+            assert pl.replicas[ci] == base.replicas[ci]
+    for d in range(ndev):
+        kept = [ci for ci in base.dev_clusters[d] if not changed[ci]]
+        assert pl.dev_clusters[d][: len(kept)] == kept
+        assert sorted(
+            ci for ci in range(c) if d in pl.replicas[ci]
+        ) == sorted(pl.dev_clusters[d])
+    # device vector counts reflect the NEW sizes
+    for d in range(ndev):
+        want = sum(int(new_sizes[ci]) for ci in pl.dev_clusters[d])
+        assert int(pl.dev_vectors[d]) == want
+
+
+def test_update_placement_no_changes_is_identity(rng):
+    sizes = _zipf_sizes(rng, 48)
+    freqs = rng.random(48)
+    base = place_clusters(sizes, freqs, ndev=4)
+    pl = update_placement(base, sizes, freqs, np.zeros(48, bool))
+    assert pl.replicas == base.replicas
+    assert pl.dev_clusters == base.dev_clusters
+    np.testing.assert_array_equal(pl.dev_vectors, base.dev_vectors)
