@@ -1,15 +1,23 @@
 """Benchmark harness: one module per paper table/figure.
 
-``PYTHONPATH=src python -m benchmarks.run [--only fig13]``
+``PYTHONPATH=src python -m benchmarks.run [--only fig13] [--json BENCH_5.json]``
 
 Prints ``name,us_per_call,derived`` CSV rows (plus a header).  CPU wall-times
 are relative signals; absolute TPU-v5e performance derives from the compiled
 dry-run (EXPERIMENTS.md §Roofline).
+
+``--json PATH`` additionally records every emitted row in a machine-readable
+file (per-sub-bench QPS / latency / rows-scanned / tiles-skipped and any
+other ``key=value`` pairs from the derived column), MERGING into an existing
+file so CI steps that run different ``--only`` slices accumulate one
+``BENCH_<pr>.json`` artifact tracking the perf trajectory across PRs.
 """
 
 from __future__ import annotations
 
 import argparse
+import json
+import os
 import sys
 import traceback
 
@@ -23,19 +31,63 @@ MODULES = [
     ("bench_threads", "Fig 16 tasklet analogue"),
     ("bench_topk", "Fig 12/17 top-k size + pruning"),
     ("bench_tiles", "tile-list vs padded-window device scan"),
+    ("bench_prune", "early-pruning v2: bound-driven tile skips"),
     ("bench_mutation", "insert/delete churn QPS + compaction latency"),
 ]
+
+
+def _parse_derived(derived: str) -> dict:
+    """'a=1;b=x' -> {'a': 1.0, 'b': 'x'} (floats where they parse)."""
+    out: dict = {}
+    for part in derived.split(";"):
+        if "=" not in part:
+            continue
+        key, val = part.split("=", 1)
+        try:
+            out[key] = float(val)
+        except ValueError:
+            out[key] = val
+    return out
+
+
+def write_json(path: str, rows) -> None:
+    """Merge benchmark rows into `path` (rows keyed by bench name)."""
+    doc = {"schema": 1, "rows": {}}
+    if os.path.exists(path):
+        try:
+            with open(path) as f:
+                prev = json.load(f)
+            if isinstance(prev, dict) and isinstance(prev.get("rows"), dict):
+                doc = prev
+        except (OSError, json.JSONDecodeError):
+            pass  # unreadable previous artifact: start fresh
+    for name, us_per_call, derived in rows:
+        doc["rows"][name] = {
+            "us_per_call": us_per_call,
+            **_parse_derived(derived),
+        }
+    tmp = f"{path}.tmp"
+    with open(tmp, "w") as f:
+        json.dump(doc, f, indent=1, sort_keys=True)
+        f.write("\n")
+    os.replace(tmp, path)
 
 
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default=None, help="substring filter")
     ap.add_argument(
+        "--json", default=None, metavar="PATH",
+        help="merge emitted rows into a machine-readable BENCH_<pr>.json",
+    )
+    ap.add_argument(
         "--keep-going", action="store_true",
         help="run every sub-bench even after a failure (still exits "
              "non-zero); the default aborts on the first raise",
     )
     args = ap.parse_args()
+    from benchmarks import common
+
     print("name,us_per_call,derived")
     failures = []
     for mod_name, desc in MODULES:
@@ -48,10 +100,15 @@ def main() -> None:
         except Exception:  # noqa: BLE001
             traceback.print_exc()
             if not args.keep_going:
+                if args.json:  # record whatever completed before the raise
+                    write_json(args.json, common.ROWS)
                 print(f"# FAILED: {mod_name} (fail-fast; use --keep-going "
                       f"to run the rest)")
                 sys.exit(1)
             failures.append(mod_name)
+    if args.json:
+        write_json(args.json, common.ROWS)
+        print(f"# wrote {len(common.ROWS)} rows to {args.json}")
     if failures:
         print(f"# FAILED: {failures}")
         sys.exit(1)

@@ -87,6 +87,11 @@ print(f"retrieval: {st.batches} batches, {st.queries} queries, "
       f"({100 * st.host_fraction():.0f}%), device={1e3 * st.device_s:.1f}ms, "
       f"overlap={100 * st.overlap_fraction():.0f}%, "
       f"p50={1e3 * st.p50_s():.1f}ms, p99={1e3 * st.p99_s():.1f}ms")
+print(f"early pruning: {st.tiles_skipped}/{st.tiles_dispatched} tile bodies "
+      f"skipped ({100 * st.prune_fraction():.0f}%), "
+      f"{st.rows_pruned} rows never computed, "
+      f"warm-start bounds on {st.warm_bound_queries}/{st.queries} queries "
+      f"(results bit-identical to the unpruned scan)")
 print("sample:", gen[0, :10].tolist())
 
 # --- live corpus mutation: insert a document, retrieve it immediately -------

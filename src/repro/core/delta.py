@@ -230,6 +230,7 @@ def delta_topk_block(
     assign,      # (cap,) int32
     vec_ids,     # (cap,) int32
     alive,       # (cap,) bool
+    bound,       # (Q,) f32 per-query upper bound on reportable distances
     *,
     nprobe: int,
     k: int,
@@ -241,6 +242,13 @@ def delta_topk_block(
     and its distance is the ADC sum over the (query, that centroid) LUT --
     the same value the device scan would produce for the same codes.  All
     shapes are static: Q x capacity, with capacity a power-of-two bucket.
+
+    `bound` applies the device kernels' early-pruning semantics to the
+    delta layer: rows with distance strictly above `bound[q]` are masked
+    out exactly like pruned kernel lanes ((+inf, -1)).  Callers must pass
+    a value no smaller than the largest distance that can still reach the
+    merged output (serving derives it from the warm-start bound machinery,
+    with tombstone slack); +inf disables the filter.
 
     Returns (dists (Q, k) f32 with +inf padding, ids (Q, k) int32 with -1).
     """
@@ -267,6 +275,7 @@ def delta_topk_block(
         return jnp.take(lut_flat, idx, axis=0).sum(axis=-1)
 
     dists = jax.vmap(per_q)(luts_flat, col)             # (Q, cap)
+    found = found & (dists <= bound[:, None])
     vals, idx = masked_topk_smallest(dists, found, k)
     good = vals < jnp.finfo(vals.dtype).max
     out_i = jnp.where(good, vec_ids[idx], -1)
@@ -281,13 +290,22 @@ def delta_topk(
     queries: np.ndarray,
     nprobe: int,
     k: int,
+    bound: np.ndarray | None = None,
 ) -> tuple[np.ndarray, np.ndarray]:
-    """Host wrapper around `delta_topk_block` (numpy in / numpy out)."""
+    """Host wrapper around `delta_topk_block` (numpy in / numpy out).
+
+    `bound` is the optional (Q,) early-pruning distance cutoff (see
+    `delta_topk_block`); None scans unbounded.  The bound array is always
+    materialized so both modes share one jitted executable.
+    """
     if k > delta.capacity:
         raise ValueError(
             f"k={k} > delta capacity {delta.capacity}; create the delta "
             f"with capacity >= k"
         )
+    q_n = np.asarray(queries).shape[0]
+    if bound is None:
+        bound = np.full(q_n, np.inf, np.float32)
     d, i = delta_topk_block(
         jnp.asarray(centroids, jnp.float32),
         jnp.asarray(codebook, jnp.float32),
@@ -296,6 +314,7 @@ def delta_topk(
         jnp.asarray(delta.assign),
         jnp.asarray(delta.vec_ids),
         jnp.asarray(delta.live_mask()),
+        jnp.asarray(bound, jnp.float32),
         nprobe=nprobe,
         k=k,
     )

@@ -33,6 +33,85 @@ import numpy as np
 
 from repro.core.placement import Placement
 
+# conservative margins applied to the ADC distance bounds so that f32
+# rounding anywhere on the device path (LUT build, gather-sum) can never
+# flip a comparison: lower bounds are deflated, upper bounds inflated.
+# The relative term dominates the ~(dsub + M) * 2^-24 accumulated rounding
+# of the kernels by orders of magnitude; the absolute term covers values
+# near zero.  Bit-identity never depends on tightness, only on direction.
+_BOUND_REL = 1e-4
+_BOUND_ABS = 1e-6
+
+
+def subspace_code_norms(codebook: np.ndarray) -> np.ndarray:
+    """(M,) largest codeword L2 norm per PQ subspace (cached per index).
+
+    This is the only codebook statistic the ADC bounds need: with residual
+    r split into subvectors r_m, every LUT entry satisfies
+    ``(max(0, |r_m| - R_m))^2 <= lut[m, j] <= (|r_m| + R_m)^2`` by the
+    triangle inequality, where ``R_m = max_j |cb[m, j]|``.
+    """
+    cb = np.asarray(codebook, np.float64)
+    return np.sqrt((cb**2).sum(axis=-1)).max(axis=1)
+
+
+def residual_bounds(
+    qmc: np.ndarray, code_norms: np.ndarray
+) -> tuple[np.ndarray, np.ndarray]:
+    """Sound per-(query, cluster) ADC distance bounds from residuals alone.
+
+    Args:
+      qmc: (Q, nprobe, D) f32 query - centroid residuals (from
+        `filter_clusters` -- no extra device work).
+      code_norms: (M,) per-subspace max codeword norms
+        (`subspace_code_norms`).
+
+    Returns:
+      (lb, ub): two (Q, nprobe) f32 arrays with, for every row x of
+      cluster c, ``lb[q, i] <= adc_dist(q, x) <= ub[q, i]`` -- including
+      the f32-computed distance the kernels produce (margins above).  The
+      lower bound is additionally deflated / the upper bound inflated so
+      comparisons against them are STRICT with respect to the exact value,
+      which is what makes bound-pruned results bit-identical (see
+      kernels/adc_topk.py).
+    """
+    qmc = np.asarray(qmc, np.float64)
+    q_n, nprobe, d = qmc.shape
+    m = code_norms.shape[0]
+    rn = np.sqrt(
+        (qmc.reshape(q_n, nprobe, m, d // m) ** 2).sum(axis=-1)
+    )  # (Q, nprobe, M) per-subspace residual norms
+    lb = (np.maximum(rn - code_norms, 0.0) ** 2).sum(axis=-1)
+    ub = ((rn + code_norms) ** 2).sum(axis=-1)
+    lb = np.maximum(lb * (1.0 - _BOUND_REL) - _BOUND_ABS, 0.0)
+    ub = ub * (1.0 + _BOUND_REL) + _BOUND_ABS
+    return lb.astype(np.float32), ub.astype(np.float32)
+
+
+def warm_start_bounds(
+    ub: np.ndarray, probed_sizes: np.ndarray, k: int
+) -> np.ndarray:
+    """(Q,) strict upper bounds on each query's final k-th ADC distance.
+
+    Sort each query's probed clusters by their distance upper bound and
+    accumulate sizes until >= k rows are covered: at least k candidates
+    then have distance <= that cluster's ub, so the final k-th does too.
+    Queries whose probed clusters hold fewer than k rows get +inf (no
+    warm start).  `ub` must come from `residual_bounds` (already strictly
+    inflated), so any row above the returned bound is strictly beyond the
+    k-th output lane -- the warm start can never evict a reportable row.
+    """
+    ub = np.asarray(ub, np.float32)
+    sizes = np.asarray(probed_sizes, np.int64)
+    order = np.argsort(ub, axis=1, kind="stable")
+    cum = np.cumsum(np.take_along_axis(sizes, order, axis=1), axis=1)
+    covered = cum >= k
+    hit = covered.argmax(axis=1)  # first probe index reaching k rows
+    b0 = np.take_along_axis(
+        np.take_along_axis(ub, order, axis=1), hit[:, None], axis=1
+    )[:, 0]
+    return np.where(covered.any(axis=1), b0, np.inf).astype(np.float32)
+
 
 @dataclasses.dataclass
 class Schedule:
@@ -328,6 +407,7 @@ def emit_tiles(
     slot_size: np.ndarray,
     block_n: int,
     tiles_per_dev: int,
+    pair_key: np.ndarray | None = None,
 ) -> tuple[np.ndarray, np.ndarray, np.ndarray]:
     """Vectorized tile emission: expand scheduled pairs to a flat work queue.
 
@@ -346,6 +426,15 @@ def emit_tiles(
       slot_size: (ndev, S) int32 valid rows per slot.
       block_n: kernel tile height (rows per grid step).
       tiles_per_dev: fixed per-device tile capacity (padded tail dummy).
+      pair_key: optional (ndev, P) sort key -- when given, each device's
+        pair runs are emitted in ascending key order (stable, ties by pair
+        slot) instead of slot order.  The early-pruning path passes the
+        per-pair distance lower bounds here so each query's most promising
+        clusters are scanned first and the kernel's running k-th bound
+        tightens within the first few tiles (best-first scheduling).
+        Whole runs are permuted -- tiles within a pair stay contiguous and
+        ascending -- so the per-pair merge sequence (and with it every
+        tie-break) is unchanged and results stay bit-identical.
 
     Returns:
       (tile_pair (ndev, T), tile_block (ndev, T), tile_row0 (ndev, T))
@@ -368,11 +457,16 @@ def emit_tiles(
     tile_pair = np.full((ndev, tiles_per_dev), p_cap, np.int32)
     tile_block = np.zeros((ndev, tiles_per_dev), np.int32)
     tile_row0 = np.zeros((ndev, tiles_per_dev), np.int32)
+    if pair_key is not None:
+        perm = np.argsort(pair_key, axis=1, kind="stable").astype(np.int64)
+        ntiles = np.take_along_axis(ntiles, perm, axis=1)
+    else:
+        perm = None
     counts = ntiles.ravel()
     if counts.sum() == 0:
         return tile_pair, tile_block, tile_row0
 
-    # one np.repeat expands every (device, pair) to its tile run; local tile
+    # one np.repeat expands every (device, rank) to its tile run; local tile
     # index = position minus the run start, device slot = position minus the
     # device's first run start
     rep = np.repeat(np.arange(ndev * p_cap, dtype=np.int64), counts)
@@ -382,7 +476,10 @@ def emit_tiles(
         np.int32
     )
     rep_dev = (rep // p_cap).astype(np.int64)
-    rep_pair = (rep % p_cap).astype(np.int32)
+    rep_rank = rep % p_cap
+    rep_pair = (
+        perm[rep_dev, rep_rank] if perm is not None else rep_rank
+    ).astype(np.int32)
     dev_start = np.zeros(ndev, np.int64)
     np.cumsum(totals[:-1], out=dev_start[1:])
     pos = np.arange(rep.shape[0], dtype=np.int64) - dev_start[rep_dev]

@@ -12,6 +12,58 @@ Grid is (Q, num_tiles): the LUT of query q stays resident in VMEM while its
 tiles stream -- one query's scan is the paper's "single cluster processed by
 all threads"; multiple queries iterate in the outer grid dimension, matching
 the sequential cluster loop on a DPU.
+
+Early pruning v2 -- whole-tile skips and warm-start bounds
+----------------------------------------------------------
+The production kernels (tiles / windows) additionally accept host-computed
+bounds that let them skip the *entire* tile body (gather / one-hot distance
+computation included), not just the merge, while staying bit-identical to
+the unpruned scan.  The soundness argument, which the equivalence test wall
+(`tests/test_pruning_props.py`) pins empirically:
+
+* **Per-pair lower bound** ``lb(q, c)``.  Every ADC distance in pair
+  (q, c)'s window is ``sum_m lut[m, code_m]`` with
+  ``lut[m, j] = ||r_m - cb[m, j]||^2`` built from the residual
+  ``r = q - centroid_c``.  By the reverse triangle inequality per subspace,
+  ``lut[m, j] >= max(0, ||r_m|| - R_m)^2`` where ``R_m`` is the largest
+  codeword norm of codebook m, so
+  ``lb = sum_m max(0, ||r_m|| - R_m)^2`` lower-bounds every distance the
+  scan can produce for that pair.  The host deflates it by a relative +
+  absolute margin (`core.scheduling.residual_bounds`) that dominates the
+  f32 rounding of both the on-device LUT build and the gather-sum, so the
+  deflated bound is <= every f32 distance the kernel computes.
+
+* **Warm-start bound ``b0(q)``** (a *strict* upper bound on the query's
+  final k-th output distance).  Symmetrically, every row of cluster c has
+  ADC distance <= ``ub(q, c) = sum_m (||r_m|| + R_m)^2``.  Accumulating the
+  probed clusters' sizes in ascending-``ub`` order until >= k rows are
+  covered yields a value V such that at least k candidates have distance
+  <= V, hence the final k-th <= V.  The host *inflates* V past every f32
+  rounding source, so ``b0 > final k-th`` strictly -- any row dropped
+  because it sits above ``b0`` is strictly beyond the output cut.
+
+* **Running per-query bound ``sq(q)``**.  After any pair of query q has
+  merged k candidates, its current k-th value upper-bounds the query's
+  *global* k-th (k real candidates exist at or below it), so the kernels
+  keep ``sq[q] = min`` over the pair k-th values seen so far and tighten
+  the warm start as the scan proceeds.  Best-first tile ordering
+  (`core.scheduling.emit_tiles(pair_key=...)`) visits low-``lb`` pairs
+  first so this happens within the first few tiles.
+
+* **Skip rule**: a tile's body is skipped iff ``lb >= pair_kth`` (the merge
+  would be a no-op -- the original §4.4 rule with the sound lower bound in
+  place of the computed tile min) **or** ``lb > min(b0, sq)`` (every row in
+  the tile is strictly beyond the final k-th).  Dropped rows are therefore
+  strictly greater than the final k-th output value, so the <=-k-th prefix
+  of every per-pair ascending result list is unchanged and sits at the same
+  lanes; every downstream merge (per-query local, cross-device global) sees
+  the same candidates at the same positions, and the output is bit-identical
+  -- distances *and* ids, ties included.
+
+The per-tile merge itself is a single stable sort over the (k + block_n)
+candidate set (`_merge_candidates`), replacing the old O(k * n) iterative
+masked-argmin loop; stability reproduces its (value, position) tie order
+exactly.
 """
 
 from __future__ import annotations
@@ -25,28 +77,32 @@ from jax.experimental.pallas import tpu as pltpu
 
 from repro.kernels.adc_scan import _gather_dists, _onehot_dists
 
+NEG_INF = float("-inf")
 
-def _select_k(
-    vals: jax.Array, idx: jax.Array, k: int
+
+def _merge_candidates(
+    cur_v: jax.Array,
+    cur_i: jax.Array,
+    dists: jax.Array,
+    ridx: jax.Array,
+    k: int,
 ) -> tuple[jax.Array, jax.Array]:
-    """k smallest (ascending) of a small 1-D array via iterative masked-min."""
-    out_v = jnp.full((k,), jnp.inf, vals.dtype)
-    out_i = jnp.full((k,), -1, jnp.int32)
+    """k smallest of the (k + block) candidate set via one stable sort.
 
-    def body(i, carry):
-        rem, ov, oi = carry
-        j = jnp.argmin(rem)
-        ov = ov.at[i].set(rem[j])
-        oi = oi.at[i].set(idx[j])
-        rem = rem.at[j].set(jnp.inf)
-        return rem, ov, oi
-
-    _, out_v, out_i = jax.lax.fori_loop(0, k, body, (vals, out_v, out_i))
-    return out_v, out_i
+    Replaces the O(k * n) iterative masked-argmin loop: a single stable
+    ascending argsort of the concatenated values reproduces its exact
+    (value, first-position) tie order -- `cur` entries precede tile rows,
+    tile rows keep ascending row order -- so results stay bit-identical.
+    """
+    all_v = jnp.concatenate([cur_v, dists])
+    all_i = jnp.concatenate([cur_i, ridx])
+    order = jnp.argsort(all_v, stable=True)[:k]
+    return all_v[order], all_i[order]
 
 
 def _adc_topk_kernel(
     nvalid_ref,
+    bound_ref,   # (1,) f32 per-query strict upper bound on the final k-th
     table_ref,
     addr_ref,
     vals_out,
@@ -76,15 +132,15 @@ def _adc_topk_kernel(
     dists = jnp.where(valid, dists, jnp.inf)
 
     # §4.4 early pruning: skip the merge when nothing in this tile can beat
-    # the current k-th best.
+    # the current k-th best, warm-started by the caller's per-query bound
+    # (a strict upper bound on the final k-th, so dropped rows can never
+    # appear in the output).
     kth = sv[k - 1]  # scratch is kept sorted ascending
     tile_min = jnp.min(dists)
 
-    @pl.when(tile_min < kth)
+    @pl.when((tile_min < kth) & (tile_min <= bound_ref[0]))
     def _merge():
-        all_v = jnp.concatenate([sv[...], dists])
-        all_i = jnp.concatenate([si[...], gidx])
-        out_v, out_i = _select_k(all_v, all_i, k)
+        out_v, out_i = _merge_candidates(sv[...], si[...], dists, gidx, k)
         sv[...] = out_v
         si[...] = out_i
 
@@ -129,9 +185,7 @@ def _adc_topk_pairs_kernel(
 
     @pl.when(tile_min < kth)
     def _merge():
-        all_v = jnp.concatenate([sv[...], dists])
-        all_i = jnp.concatenate([si[...], ridx])
-        out_v, out_i = _select_k(all_v, all_i, k)
+        out_v, out_i = _merge_candidates(sv[...], si[...], dists, ridx, k)
         sv[...] = out_v
         si[...] = out_i
 
@@ -144,12 +198,18 @@ def _adc_topk_tiles_kernel(
     tile_block_ref,  # scalar-prefetch: (T,) int32 code-block index per tile
     tile_row0_ref,   # scalar-prefetch: (T,) int32 window-row of the tile's first row
     nvalid_ref,      # scalar-prefetch: (P+1,) int32 valid rows per pair
+    pair_q_ref,      # scalar-prefetch: (P+1,) int32 query index per pair
+    pair_lb_ref,     # scalar-prefetch: (P+1,) f32 pair distance lower bound
+    bound_ref,       # scalar-prefetch: (Q,) f32 per-query warm-start bound
     table_ref,       # (1, A) table of this tile's pair
     codes_ref,       # (block_n, W) code tile
     vals_out,
     idx_out,
+    stats_out,       # (1, 2) int32 [tiles skipped, rows avoided] of this pair
     sv,              # (P+1, k) running top-k values
     si,              # (P+1, k) running top-k indices
+    sq,              # (Q,) f32 running per-query upper bound on the k-th
+    ss,              # (P+1, 2) int32 per-pair prune counters
     *,
     k: int,
     block_n: int,
@@ -160,13 +220,22 @@ def _adc_topk_tiles_kernel(
     one work item per REAL code block, so no padded-window DMA at all.  The
     running top-k lives in a (P+1, k) VMEM scratch (row P = dummy tiles).
 
+    Early-pruning v2: the whole tile body -- gather / one-hot distance
+    computation included -- sits behind the bound check (see the module
+    docstring for the soundness argument), so a pruned tile costs one SMEM
+    compare instead of a (block_n, W) scan.  Dummy tiles carry lb = +inf
+    and prune away on the first condition.  The skipped-tile / avoided-row
+    counters stream out per pair (same last-visit-wins contract as the
+    top-k rows).
+
     Each grid step writes its pair's (1, k) output row from the scratch;
-    tiles of one pair are contiguous in the work list (emit_tiles orders
-    them pair-major), so the final visit of a row carries the pair's
-    complete top-k.  Rows of pairs with no tiles are never written -- the
-    caller masks pairs with n_valid == 0 to (inf, -1).  (Writing the whole
-    (P+1, k) output as one constant-index block instead trips an XLA
-    sharding-propagation crash under shard_map on CPU.)
+    tiles of one pair are contiguous in the work list (emit_tiles keeps
+    each pair's run contiguous, ascending rows -- best-first ordering
+    permutes whole runs only), so the final visit of a row carries the
+    pair's complete top-k.  Rows of pairs with no tiles are never written
+    -- the caller masks pairs with n_valid == 0 to (inf, -1).  (Writing
+    the whole (P+1, k) output as one constant-index block instead trips an
+    XLA sharding-propagation crash under shard_map on CPU.)
 
     This is Algorithm 2 pushed down to tile granularity: the same idea the
     paper uses to balance DPUs, reused to keep every DMA useful."""
@@ -176,42 +245,65 @@ def _adc_topk_tiles_kernel(
     def _init():
         sv[...] = jnp.full(sv.shape, jnp.inf, sv.dtype)
         si[...] = jnp.full(si.shape, -1, jnp.int32)
+        sq[...] = jnp.full(sq.shape, jnp.inf, sq.dtype)
+        ss[...] = jnp.zeros(ss.shape, jnp.int32)
 
     pair = tile_pair_ref[t]
     row0 = tile_row0_ref[t]
-    table_flat = table_ref[...].reshape(-1)
-    addr = codes_ref[...].astype(jnp.int32)
-    if add_offsets:
-        offs = jax.lax.broadcasted_iota(jnp.int32, addr.shape, 1) * 256
-        addr = addr + offs
-    if path == "onehot":
-        dists = _onehot_dists(table_flat, addr)
-    else:
-        dists = _gather_dists(table_flat, addr)
-    ridx = row0 + jax.lax.broadcasted_iota(jnp.int32, (block_n,), 0)
-    valid = ridx < nvalid_ref[pair]
-    dists = jnp.where(valid, dists, jnp.inf)
+    qi = pair_q_ref[pair]
+    lb = pair_lb_ref[pair]
+    kth = sv[pair, k - 1]
+    qbound = jnp.minimum(sq[qi], bound_ref[qi])
+    # skip the whole tile body when the merge would provably be a no-op
+    # (lb >= pair k-th) or every row is strictly past the final k-th
+    # (lb > warm-start / running query bound)
+    skip = (lb >= kth) | (lb > qbound)
 
-    cur_v = sv[pair, :]
-    cur_i = si[pair, :]
-    kth = cur_v[k - 1]
-    tile_min = jnp.min(dists)
+    @pl.when(skip)
+    def _account():
+        rows = jnp.clip(nvalid_ref[pair] - row0, 0, block_n)
+        ss[pair, 0] = ss[pair, 0] + (rows > 0).astype(jnp.int32)
+        ss[pair, 1] = ss[pair, 1] + rows
 
-    @pl.when(tile_min < kth)
-    def _merge():
-        all_v = jnp.concatenate([cur_v, dists])
-        all_i = jnp.concatenate([cur_i, ridx])
-        out_v, out_i = _select_k(all_v, all_i, k)
-        sv[pair, :] = out_v
-        si[pair, :] = out_i
+    @pl.when(~skip)
+    def _scan():
+        table_flat = table_ref[...].reshape(-1)
+        addr = codes_ref[...].astype(jnp.int32)
+        if add_offsets:
+            offs = jax.lax.broadcasted_iota(jnp.int32, addr.shape, 1) * 256
+            addr_full = addr + offs
+        else:
+            addr_full = addr
+        if path == "onehot":
+            dists = _onehot_dists(table_flat, addr_full)
+        else:
+            dists = _gather_dists(table_flat, addr_full)
+        ridx = row0 + jax.lax.broadcasted_iota(jnp.int32, (block_n,), 0)
+        valid = ridx < nvalid_ref[pair]
+        dists = jnp.where(valid, dists, jnp.inf)
+        tile_min = jnp.min(dists)
+
+        @pl.when((tile_min < kth) & (tile_min <= qbound))
+        def _merge():
+            out_v, out_i = _merge_candidates(
+                sv[pair, :], si[pair, :], dists, ridx, k
+            )
+            sv[pair, :] = out_v
+            si[pair, :] = out_i
+
+    # tighten the running query bound with this pair's (post-merge) k-th
+    sq[qi] = jnp.minimum(sq[qi], sv[pair, k - 1])
 
     vals_out[...] = sv[pair, :].reshape(1, k)
     idx_out[...] = si[pair, :].reshape(1, k)
+    stats_out[...] = ss[pair, :].reshape(1, 2)
 
 
 @functools.partial(
     jax.jit,
-    static_argnames=("k", "block_n", "path", "interpret", "add_offsets"),
+    static_argnames=(
+        "k", "block_n", "path", "interpret", "add_offsets", "n_queries",
+    ),
 )
 def adc_topk_tiles_kernel(
     tables: jax.Array,       # (P, A)
@@ -226,43 +318,83 @@ def adc_topk_tiles_kernel(
     path: str = "gather",
     add_offsets: bool = False,
     interpret: bool = False,
-) -> tuple[jax.Array, jax.Array]:
+    pair_q: jax.Array | None = None,    # (P,) int32 query per pair
+    pair_lb: jax.Array | None = None,   # (P,) f32 pair lower bounds
+    bound: jax.Array | None = None,     # (n_queries,) f32 warm-start bounds
+    n_queries: int = 1,
+) -> tuple[jax.Array, jax.Array, jax.Array]:
     """Flat work-queue fused scan+top-k: one grid step per REAL code tile.
 
-    tile_pair must be pair-major ordered (all tiles of a pair contiguous,
-    ascending rows) as produced by `emit_tiles`.  Output rows of pairs that
-    emitted no tiles (n_valid == 0) are UNDEFINED -- callers must mask them
-    to (inf, -1) to match the windows kernel's contract.
+    tile_pair must keep each pair's tiles contiguous (ascending rows within
+    the run) as produced by `emit_tiles` -- best-first ordering permutes
+    whole runs, never splits them.  Output rows of pairs that emitted no
+    tiles (n_valid == 0) are UNDEFINED -- callers must mask them to
+    (inf, -1) to match the windows kernel's contract.
+
+    `pair_lb` / `bound` enable whole-tile pruning (module docstring); the
+    defaults (-inf / +inf) reproduce the unpruned scan bit-for-bit.  Returns
+    ((P, k) dists, (P, k) idx, (P, 2) int32 [tiles skipped, rows avoided]);
+    stats rows follow the same undefined-when-no-tiles contract.
     """
     p, t_sz = tables.shape
     t_n = tile_pair.shape[0]
     assert codes.shape[0] % block_n == 0
     w = codes.shape[1]
-    # dummy tiles reference table row P (a zero row appended here) and
-    # n_valid row P (zero) -> their merges always prune away
+    if pair_q is None:
+        # one virtual query per pair: the running query bound degenerates
+        # to the pair's own k-th, i.e. exactly the legacy (uncoupled) scan
+        pair_q = jax.lax.iota(jnp.int32, p)
+        n_queries = p
+        bound = None
+    if pair_lb is None:
+        pair_lb = jnp.full((p,), NEG_INF, jnp.float32)
+    if bound is None:
+        bound = jnp.full((n_queries,), jnp.inf, jnp.float32)
+    # dummy tiles reference table row P (a zero row appended here), n_valid
+    # row P (zero) and lb row P (+inf) -> they always prune away
     tables_ext = jnp.concatenate(
         [tables, jnp.zeros((1, t_sz), tables.dtype)], axis=0
     )
     nvalid_ext = jnp.concatenate(
         [n_valid.astype(jnp.int32), jnp.zeros((1,), jnp.int32)]
     )
+    pair_q_ext = jnp.concatenate(
+        [pair_q.astype(jnp.int32), jnp.zeros((1,), jnp.int32)]
+    )
+    pair_lb_ext = jnp.concatenate(
+        [pair_lb.astype(jnp.float32), jnp.full((1,), jnp.inf, jnp.float32)]
+    )
     grid_spec = pltpu.PrefetchScalarGridSpec(
-        num_scalar_prefetch=4,
+        num_scalar_prefetch=7,
         grid=(t_n,),
         in_specs=[
-            pl.BlockSpec((1, t_sz), lambda ti, tp, tb, tr, nv: (tp[ti], 0)),
-            pl.BlockSpec((block_n, w), lambda ti, tp, tb, tr, nv: (tb[ti], 0)),
+            pl.BlockSpec(
+                (1, t_sz), lambda ti, tp, tb, tr, nv, pq, lb, b0: (tp[ti], 0)
+            ),
+            pl.BlockSpec(
+                (block_n, w),
+                lambda ti, tp, tb, tr, nv, pq, lb, b0: (tb[ti], 0),
+            ),
         ],
         out_specs=[
-            pl.BlockSpec((1, k), lambda ti, tp, tb, tr, nv: (tp[ti], 0)),
-            pl.BlockSpec((1, k), lambda ti, tp, tb, tr, nv: (tp[ti], 0)),
+            pl.BlockSpec(
+                (1, k), lambda ti, tp, tb, tr, nv, pq, lb, b0: (tp[ti], 0)
+            ),
+            pl.BlockSpec(
+                (1, k), lambda ti, tp, tb, tr, nv, pq, lb, b0: (tp[ti], 0)
+            ),
+            pl.BlockSpec(
+                (1, 2), lambda ti, tp, tb, tr, nv, pq, lb, b0: (tp[ti], 0)
+            ),
         ],
         scratch_shapes=[
             pltpu.VMEM((p + 1, k), tables.dtype),
             pltpu.VMEM((p + 1, k), jnp.int32),
+            pltpu.VMEM((n_queries,), jnp.float32),
+            pltpu.VMEM((p + 1, 2), jnp.int32),
         ],
     )
-    vals, idx = pl.pallas_call(
+    vals, idx, stats = pl.pallas_call(
         functools.partial(
             _adc_topk_tiles_kernel, k=k, block_n=block_n, path=path,
             add_offsets=add_offsets,
@@ -271,6 +403,7 @@ def adc_topk_tiles_kernel(
         out_shape=[
             jax.ShapeDtypeStruct((p + 1, k), tables.dtype),
             jax.ShapeDtypeStruct((p + 1, k), jnp.int32),
+            jax.ShapeDtypeStruct((p + 1, 2), jnp.int32),
         ],
         interpret=interpret,
     )(
@@ -278,21 +411,30 @@ def adc_topk_tiles_kernel(
         tile_block.astype(jnp.int32),
         tile_row0.astype(jnp.int32),
         nvalid_ext,
+        pair_q_ext,
+        pair_lb_ext,
+        bound.astype(jnp.float32),
         tables_ext,
         codes,
     )
-    return vals[:p], idx[:p]
+    return vals[:p], idx[:p], stats[:p]
 
 
 def _adc_topk_windows_kernel(
     start_blk_ref,   # scalar-prefetch: (P,) int32 window start (in blocks)
     nvalid_ref,      # scalar-prefetch: (P,) int32 valid rows per window
+    pair_q_ref,      # scalar-prefetch: (P,) int32 query index per pair
+    pair_lb_ref,     # scalar-prefetch: (P,) f32 pair distance lower bound
+    bound_ref,       # scalar-prefetch: (Q,) f32 per-query warm-start bound
     table_ref,
     codes_ref,       # (block_n, W) tile selected by the prefetched index map
     vals_out,
     idx_out,
+    stats_out,       # (1, 2) int32 [tiles skipped, rows avoided] of this pair
     sv,
     si,
+    sq,              # (Q,) f32 running per-query upper bound on the k-th
+    ss,              # (2,) int32 per-pair prune counters
     *,
     k: int,
     block_n: int,
@@ -302,48 +444,72 @@ def _adc_topk_windows_kernel(
     """Window variant: pair p scans tiles [start[p], start[p] + T) of the
     device-resident code array -- no window materialization.  This is the
     HBM->VMEM streaming loop of the DPU (MRAM->WRAM DMA), with the §4.4
-    pruning applied per tile."""
+    pruning applied per tile and the early-pruning-v2 bounds (module
+    docstring) skipping whole tile bodies."""
     del start_blk_ref  # consumed by the BlockSpec index_map
     p = pl.program_id(0)
     t = pl.program_id(1)
+
+    @pl.when((p == 0) & (t == 0))
+    def _init_query():
+        sq[...] = jnp.full(sq.shape, jnp.inf, sq.dtype)
 
     @pl.when(t == 0)
     def _init():
         sv[...] = jnp.full((k,), jnp.inf, sv.dtype)
         si[...] = jnp.full((k,), -1, jnp.int32)
+        ss[...] = jnp.zeros((2,), jnp.int32)
 
-    table_flat = table_ref[...].reshape(-1)
-    addr = codes_ref[...].astype(jnp.int32)
-    if add_offsets:  # raw uint8 codes: direct addressing happens in VMEM
-        offs = jax.lax.broadcasted_iota(jnp.int32, addr.shape, 1) * 256
-        addr = addr + offs
-    if path == "onehot":
-        dists = _onehot_dists(table_flat, addr)
-    else:
-        dists = _gather_dists(table_flat, addr)
-    ridx = t * block_n + jax.lax.broadcasted_iota(jnp.int32, (block_n,), 0)
-    valid = ridx < nvalid_ref[p]
-    dists = jnp.where(valid, dists, jnp.inf)
-
+    qi = pair_q_ref[p]
+    lb = pair_lb_ref[p]
     kth = sv[k - 1]
-    tile_min = jnp.min(dists)
+    qbound = jnp.minimum(sq[qi], bound_ref[qi])
+    skip = (lb >= kth) | (lb > qbound)
 
-    @pl.when(tile_min < kth)
-    def _merge():
-        all_v = jnp.concatenate([sv[...], dists])
-        all_i = jnp.concatenate([si[...], ridx])
-        out_v, out_i = _select_k(all_v, all_i, k)
-        sv[...] = out_v
-        si[...] = out_i
+    @pl.when(skip)
+    def _account():
+        rows = jnp.clip(nvalid_ref[p] - t * block_n, 0, block_n)
+        ss[0] = ss[0] + (rows > 0).astype(jnp.int32)
+        ss[1] = ss[1] + rows
+
+    @pl.when(~skip)
+    def _scan():
+        table_flat = table_ref[...].reshape(-1)
+        addr = codes_ref[...].astype(jnp.int32)
+        if add_offsets:  # raw uint8 codes: direct addressing happens in VMEM
+            offs = jax.lax.broadcasted_iota(jnp.int32, addr.shape, 1) * 256
+            addr_full = addr + offs
+        else:
+            addr_full = addr
+        if path == "onehot":
+            dists = _onehot_dists(table_flat, addr_full)
+        else:
+            dists = _gather_dists(table_flat, addr_full)
+        ridx = t * block_n + jax.lax.broadcasted_iota(
+            jnp.int32, (block_n,), 0
+        )
+        valid = ridx < nvalid_ref[p]
+        dists = jnp.where(valid, dists, jnp.inf)
+        tile_min = jnp.min(dists)
+
+        @pl.when((tile_min < kth) & (tile_min <= qbound))
+        def _merge():
+            out_v, out_i = _merge_candidates(sv[...], si[...], dists, ridx, k)
+            sv[...] = out_v
+            si[...] = out_i
+
+    sq[qi] = jnp.minimum(sq[qi], sv[k - 1])
 
     vals_out[...] = sv[...].reshape(1, k)
     idx_out[...] = si[...].reshape(1, k)
+    stats_out[...] = ss[...].reshape(1, 2)
 
 
 @functools.partial(
     jax.jit,
     static_argnames=(
         "k", "window", "block_n", "path", "interpret", "add_offsets",
+        "n_queries",
     ),
 )
 def adc_topk_windows_kernel(
@@ -358,7 +524,11 @@ def adc_topk_windows_kernel(
     path: str = "gather",
     add_offsets: bool = False,
     interpret: bool = False,
-) -> tuple[jax.Array, jax.Array]:
+    pair_q: jax.Array | None = None,
+    pair_lb: jax.Array | None = None,
+    bound: jax.Array | None = None,
+    n_queries: int = 1,
+) -> tuple[jax.Array, jax.Array, jax.Array]:
     """Fused scan + top-k over per-pair windows of a shared code array.
 
     Args:
@@ -368,39 +538,55 @@ def adc_topk_windows_kernel(
       start_blocks: (P,) int32 -- slot_start // block_n per pair.
       n_valid: (P,) int32 valid rows per window.
       window: padded window length (rows), multiple of block_n.
+      pair_q / pair_lb / bound: early-pruning-v2 bounds (module docstring);
+        defaults reproduce the unpruned scan bit-for-bit.
 
     Returns:
-      ((P, k) ascending distances, (P, k) int32 window-row indices).
+      ((P, k) ascending distances, (P, k) int32 window-row indices,
+       (P, 2) int32 [tiles skipped, rows avoided]).
     """
     p, t_sz = tables.shape
     assert window % block_n == 0
     assert codes.shape[0] % block_n == 0
     w = codes.shape[1]
+    if pair_q is None:
+        # one virtual query per pair: the running query bound degenerates
+        # to the pair's own k-th, i.e. exactly the legacy (uncoupled) scan
+        pair_q = jax.lax.iota(jnp.int32, p)
+        n_queries = p
+        bound = None
+    if pair_lb is None:
+        pair_lb = jnp.full((p,), NEG_INF, jnp.float32)
+    if bound is None:
+        bound = jnp.full((n_queries,), jnp.inf, jnp.float32)
     # clamp the streamed block index so a window that would overrun the last
     # cluster's storage re-reads the final block instead (those rows are
     # already masked by n_valid) -- lets the layout drop its overrun pad
     nblocks = codes.shape[0] // block_n
     grid = (p, window // block_n)
     grid_spec = pltpu.PrefetchScalarGridSpec(
-        num_scalar_prefetch=2,
+        num_scalar_prefetch=5,
         grid=grid,
         in_specs=[
-            pl.BlockSpec((1, t_sz), lambda pi, ti, sb, nv: (pi, 0)),
+            pl.BlockSpec((1, t_sz), lambda pi, ti, sb, nv, pq, lb, b0: (pi, 0)),
             pl.BlockSpec(
                 (block_n, w),
-                lambda pi, ti, sb, nv: (
+                lambda pi, ti, sb, nv, pq, lb, b0: (
                     jnp.minimum(sb[pi] + ti, nblocks - 1),
                     0,
                 ),
             ),
         ],
         out_specs=[
-            pl.BlockSpec((1, k), lambda pi, ti, sb, nv: (pi, 0)),
-            pl.BlockSpec((1, k), lambda pi, ti, sb, nv: (pi, 0)),
+            pl.BlockSpec((1, k), lambda pi, ti, sb, nv, pq, lb, b0: (pi, 0)),
+            pl.BlockSpec((1, k), lambda pi, ti, sb, nv, pq, lb, b0: (pi, 0)),
+            pl.BlockSpec((1, 2), lambda pi, ti, sb, nv, pq, lb, b0: (pi, 0)),
         ],
         scratch_shapes=[
             pltpu.VMEM((k,), tables.dtype),
             pltpu.VMEM((k,), jnp.int32),
+            pltpu.VMEM((n_queries,), jnp.float32),
+            pltpu.VMEM((2,), jnp.int32),
         ],
     )
     return pl.pallas_call(
@@ -412,11 +598,15 @@ def adc_topk_windows_kernel(
         out_shape=[
             jax.ShapeDtypeStruct((p, k), tables.dtype),
             jax.ShapeDtypeStruct((p, k), jnp.int32),
+            jax.ShapeDtypeStruct((p, 2), jnp.int32),
         ],
         interpret=interpret,
     )(
         start_blocks.astype(jnp.int32),
         n_valid.astype(jnp.int32),
+        pair_q.astype(jnp.int32),
+        pair_lb.astype(jnp.float32),
+        bound.astype(jnp.float32),
         tables,
         codes,
     )
@@ -487,6 +677,7 @@ def adc_topk_kernel(
     block_n: int = 1024,
     path: str = "gather",
     interpret: bool = False,
+    bound: jax.Array | None = None,
 ) -> tuple[jax.Array, jax.Array]:
     """Fused scan + top-k over flat-address codes.
 
@@ -494,6 +685,10 @@ def adc_topk_kernel(
       tables: (Q, T) float32 flat tables (one per query/probe).
       addrs: (N, W) int32, N % block_n == 0 (ops.py pads).
       n_valid: (1,) int32 -- true number of rows (padding masked to +inf).
+      bound: optional (Q,) f32 per-query initial bound -- a STRICT upper
+        bound on the final k-th distance (module docstring).  Tiles whose
+        computed minimum exceeds it are never merged; default +inf keeps
+        the scan unpruned.
 
     Returns:
       ((Q, k) ascending distances, (Q, k) int32 row indices).
@@ -501,6 +696,8 @@ def adc_topk_kernel(
     q, t_sz = tables.shape
     n, w = addrs.shape
     assert n % block_n == 0
+    if bound is None:
+        bound = jnp.full((q,), jnp.inf, jnp.float32)
     grid = (q, n // block_n)
     return pl.pallas_call(
         functools.partial(
@@ -509,6 +706,7 @@ def adc_topk_kernel(
         grid=grid,
         in_specs=[
             pl.BlockSpec((1,), lambda qi, ti: (0,)),
+            pl.BlockSpec((1,), lambda qi, ti: (qi,)),
             pl.BlockSpec((1, t_sz), lambda qi, ti: (qi, 0)),
             pl.BlockSpec((block_n, w), lambda qi, ti: (ti, 0)),
         ],
@@ -525,4 +723,4 @@ def adc_topk_kernel(
             pltpu.VMEM((k,), jnp.int32),
         ],
         interpret=interpret,
-    )(n_valid, tables, addrs)
+    )(n_valid, bound.astype(jnp.float32), tables, addrs)

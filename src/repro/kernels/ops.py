@@ -120,8 +120,12 @@ def adc_topk(
     block_n: int = 1024,
     path: str = "gather",
     interpret: bool | None = None,
+    bound: jax.Array | None = None,
 ) -> tuple[jax.Array, jax.Array]:
-    """(Q, M, 256) x (N, M) -> ((Q, k) dists, (Q, k) idx), fused."""
+    """(Q, M, 256) x (N, M) -> ((Q, k) dists, (Q, k) idx), fused.
+
+    `bound` is an optional (Q,) f32 per-query warm-start bound (a STRICT
+    upper bound on the final k-th distance; see adc_topk.py)."""
     if interpret is None:
         interpret = _interpret_default()
     q = luts.shape[0]
@@ -137,6 +141,7 @@ def adc_topk(
         block_n=block_n,
         path=path,
         interpret=interpret,
+        bound=bound,
     )
 
 
@@ -151,6 +156,7 @@ def adc_topk_flat(
     block_n: int = 1024,
     path: str = "gather",
     interpret: bool | None = None,
+    bound: jax.Array | None = None,
 ) -> tuple[jax.Array, jax.Array]:
     """(Q, A) x (N, W) direct-address fused scan + top-k."""
     if interpret is None:
@@ -168,6 +174,7 @@ def adc_topk_flat(
         block_n=block_n,
         path=path,
         interpret=interpret,
+        bound=bound,
     )
 
 
@@ -205,6 +212,7 @@ def adc_topk_pairs(
     jax.jit,
     static_argnames=(
         "k", "window", "block_n", "path", "add_offsets", "interpret",
+        "n_queries", "with_stats",
     ),
 )
 def adc_topk_windows(
@@ -219,19 +227,29 @@ def adc_topk_windows(
     path: str = "gather",
     add_offsets: bool = False,
     interpret: bool | None = None,
-) -> tuple[jax.Array, jax.Array]:
+    pair_q: jax.Array | None = None,
+    pair_lb: jax.Array | None = None,
+    bound: jax.Array | None = None,
+    n_queries: int = 1,
+    with_stats: bool = False,
+):
     """Per-pair window scan over a shared device-resident code array.
 
     tables (P, A); codes (cap, W) flat addresses (uint8 raw codes when
     add_offsets -- widened in VMEM, so HBM sees the compact dtype); starts
     (P,) block_n-aligned row starts; n_valid (P,).  The production path:
     windows are indexed via scalar prefetch, never materialized.
+
+    `pair_q`/`pair_lb`/`bound` drive the early-pruning-v2 whole-tile skip
+    (see adc_topk.py); the defaults reproduce the unpruned scan exactly.
+    With `with_stats=True` additionally returns the (P, 2) int32
+    [tiles skipped, rows avoided] counters.
     """
     if interpret is None:
         interpret = _interpret_default()
     tables_p = _pad_table(tables)
     start_blocks = starts.astype(jnp.int32) // block_n
-    return _topk.adc_topk_windows_kernel(
+    vals, idx, stats = _topk.adc_topk_windows_kernel(
         tables_p,
         codes,
         start_blocks,
@@ -242,12 +260,22 @@ def adc_topk_windows(
         path=path,
         add_offsets=add_offsets,
         interpret=interpret,
+        pair_q=pair_q,
+        pair_lb=pair_lb,
+        bound=bound,
+        n_queries=n_queries,
     )
+    if with_stats:
+        return vals, idx, stats
+    return vals, idx
 
 
 @functools.partial(
     jax.jit,
-    static_argnames=("k", "block_n", "path", "add_offsets", "interpret"),
+    static_argnames=(
+        "k", "block_n", "path", "add_offsets", "interpret", "n_queries",
+        "with_stats",
+    ),
 )
 def adc_topk_tiles(
     tables: jax.Array,
@@ -262,7 +290,12 @@ def adc_topk_tiles(
     path: str = "gather",
     add_offsets: bool = False,
     interpret: bool | None = None,
-) -> tuple[jax.Array, jax.Array]:
+    pair_q: jax.Array | None = None,
+    pair_lb: jax.Array | None = None,
+    bound: jax.Array | None = None,
+    n_queries: int = 1,
+    with_stats: bool = False,
+):
     """Flat work-queue scan over a shared device-resident code array.
 
     tables (P, A); codes (cap, W) (raw uint8 when add_offsets); tile_pair /
@@ -270,11 +303,16 @@ def adc_topk_tiles(
     P marks dummy padding tiles); n_valid (P,).  One grid step per REAL code
     tile -- device wall-clock is sum(actual probed rows), not
     P * max-cluster window.
+
+    `pair_q`/`pair_lb`/`bound` drive the early-pruning-v2 whole-tile skip
+    (see adc_topk.py); the defaults reproduce the unpruned scan exactly.
+    With `with_stats=True` additionally returns the (P, 2) int32
+    [tiles skipped, rows avoided] counters.
     """
     if interpret is None:
         interpret = _interpret_default()
     tables_p = _pad_table(tables)
-    return _topk.adc_topk_tiles_kernel(
+    vals, idx, stats = _topk.adc_topk_tiles_kernel(
         tables_p,
         codes,
         tile_pair.astype(jnp.int32),
@@ -286,7 +324,14 @@ def adc_topk_tiles(
         path=path,
         add_offsets=add_offsets,
         interpret=interpret,
+        pair_q=pair_q,
+        pair_lb=pair_lb,
+        bound=bound,
+        n_queries=n_queries,
     )
+    if with_stats:
+        return vals, idx, stats
+    return vals, idx
 
 
 @functools.partial(jax.jit, static_argnames=("interpret",))

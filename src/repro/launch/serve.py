@@ -167,6 +167,15 @@ def main():
             "p99_ms": round(1e3 * st.p99_s(), 2),
             "rows_scanned": st.rows_scanned,
             "load_carry": [round(x, 1) for x in srv.load_carry().tolist()],
+            # early-pruning effectiveness: bound-driven whole-tile skips
+            "prune": {
+                "tiles_dispatched": st.tiles_dispatched,
+                "tiles_skipped": st.tiles_skipped,
+                "rows_pruned": st.rows_pruned,
+                "skip_fraction": round(st.prune_fraction(), 3),
+                "skip_frac_p50": round(st.prune_percentile(50.0), 3),
+                "warm_bound_queries": st.warm_bound_queries,
+            },
         }
         if churn:
             report["retrieval_stats"]["mutation"] = {

@@ -28,7 +28,10 @@ from repro.core.scheduling import (
     count_tiles,
     densify_schedule,
     emit_tiles,
+    residual_bounds,
     schedule_queries,
+    subspace_code_norms,
+    warm_start_bounds,
 )
 from repro.retrieval.layout import DeviceShards, build_shards
 from repro.retrieval.search import DPU_AXIS, InFlightSearch, sharded_search
@@ -70,11 +73,32 @@ class SearchPlan:
     tile_block: np.ndarray | None = None  # (ndev, T) int32 code-block index
     tile_row0: np.ndarray | None = None   # (ndev, T) int32 window-rel row
     tiles_per_dev: int = 0
+    # early-pruning bound arrays (None = plan executes unpruned; the
+    # executable is identical either way -- bounds are runtime data)
+    pair_lb: np.ndarray | None = None      # (ndev, P) f32 pair lower bounds
+    probed_ub: np.ndarray | None = None    # (Q, nprobe) f32 cluster upper bds
+    probed_sizes: np.ndarray | None = None  # (Q, nprobe) int64 cluster sizes
 
     @property
     def scan(self) -> str:
         """Device scan variant this plan was built for."""
         return "tiles" if self.tile_pair is not None else "windows"
+
+    @property
+    def pruned(self) -> bool:
+        """True when this plan carries early-pruning bounds."""
+        return self.pair_lb is not None
+
+    def query_bounds(self, k: int) -> np.ndarray:
+        """(Q,) strict warm-start upper bounds on the k-th output distance.
+
+        Computed per dispatch (the plan itself is k-agnostic) from the
+        probed clusters' distance upper bounds and sizes; +inf everywhere
+        when the plan is unpruned or has no probe metadata (warmup plans).
+        """
+        if self.probed_ub is None or self.probed_sizes is None:
+            return np.full(self.n_queries, np.inf, np.float32)
+        return warm_start_bounds(self.probed_ub, self.probed_sizes, k)
 
 
 @dataclasses.dataclass
@@ -85,10 +109,12 @@ class MemANNSEngine:
     mesh: jax.sharding.Mesh
     path: str = "gather"
     scan: str = "tiles"  # device scan variant: "tiles" | "windows"
+    prune: bool = True   # early-pruning v2 bounds (exact; False = reference)
     interpret: bool | None = None
     freqs: np.ndarray | None = None   # f_i estimate (kept for re-placement)
     delta: "object | None" = None     # DeltaIndex once mutation is enabled
     _dev_arrays: tuple | None = None
+    _code_norms: np.ndarray | None = None  # (M,) cached codebook max norms
 
     @classmethod
     def build(
@@ -108,6 +134,7 @@ class MemANNSEngine:
         pq_iters: int = 10,
         path: str = "gather",
         scan: str = "tiles",
+        prune: bool = True,
         interpret: bool | None = None,
         mutable: bool = False,
         delta_capacity: int = 4096,
@@ -121,6 +148,13 @@ class MemANNSEngine:
         (`cap_slack`/`slot_slack`/`window_slack`, defaulting to 50% rows /
         4 slots / 2 window blocks) so incremental compactions keep every
         compiled shape stable under moderate churn."""
+        # unsupported combinations fail before any expensive work (the
+        # k-means build + Algorithm-1 placement below can take minutes)
+        if mutable and use_cooc:
+            raise NotImplementedError(
+                "mutable=True requires use_cooc=False (co-occ shards are "
+                "immutable; see retrieval.layout.update_shards)"
+            )
         mesh = mesh or make_dpu_mesh()
         ndev = math.prod(mesh.devices.shape)
         index = build_index(
@@ -142,11 +176,6 @@ class MemANNSEngine:
             ndev,
             centroids=index.centroids,
         )
-        if mutable and use_cooc:
-            raise NotImplementedError(
-                "mutable=True requires use_cooc=False (co-occ shards are "
-                "immutable; see retrieval.layout.update_shards)"
-            )
         shards = build_shards(
             index,
             placement,
@@ -167,6 +196,7 @@ class MemANNSEngine:
             mesh=mesh,
             path=path,
             scan=scan,
+            prune=prune,
             interpret=interpret,
             freqs=freqs,
         )
@@ -258,6 +288,12 @@ class MemANNSEngine:
         )
         return schedule, probed, np.asarray(qmc)
 
+    def code_norms(self) -> np.ndarray:
+        """(M,) cached per-subspace max codeword norms (bound inputs)."""
+        if self._code_norms is None:
+            self._code_norms = subspace_code_norms(self.index.codebook)
+        return self._code_norms
+
     def plan_batch(
         self,
         queries: np.ndarray,
@@ -266,6 +302,7 @@ class MemANNSEngine:
         capacity_floor: int = 8,
         tiles_per_dev: int | None = None,
         load_carry: np.ndarray | None = None,
+        prune: bool | None = None,
     ) -> SearchPlan:
         """Host-side online phase: filter + schedule + array densify.
 
@@ -275,10 +312,19 @@ class MemANNSEngine:
         capacity is rounded to `pairs_per_dev * 2^i` buckets so serving
         can pre-warm every reachable executable.  `load_carry` biases the
         schedule toward cold devices (see `schedule_queries`).
+
+        With pruning (default `self.prune`) the plan also carries sound
+        per-pair ADC distance lower bounds (scattered alongside the
+        residuals) plus each query's probed-cluster upper bounds/sizes
+        (for the per-dispatch warm-start bound), and the tile queue is
+        ordered best-first (ascending lower bound) so the kernel's running
+        k-th tightens within the first few tiles.  `prune=False` plans the
+        exact pre-bounds reference scan.
         """
         queries = np.asarray(queries, np.float32)
         q_n = queries.shape[0]
         ndev = self.shards.ndev
+        prune = self.prune if prune is None else prune
         schedule, probed, qmc = self.schedule_batch(
             queries, nprobe, load_carry=load_carry
         )
@@ -300,6 +346,16 @@ class MemANNSEngine:
         qmc_pairs = np.zeros((ndev, pairs_per_dev, queries.shape[1]), np.float32)
         qmc_pairs[d_sorted, pos] = qmc[pq, cols]
 
+        pair_lb = probed_ub = probed_sizes = None
+        if prune:
+            lb, ub = residual_bounds(qmc, self.code_norms())
+            # densify-padding pairs get +inf: their (empty) tile bodies are
+            # skipped for free and their (inf, -1) outputs are unchanged
+            pair_lb = np.full((ndev, pairs_per_dev), np.inf, np.float32)
+            pair_lb[d_sorted, pos] = lb[pq, cols]
+            probed_ub = ub
+            probed_sizes = self.index.cluster_sizes()[probed]
+
         tile_pair = tile_block = tile_row0 = None
         tiles_cap = 0
         if self.scan == "tiles":
@@ -316,6 +372,7 @@ class MemANNSEngine:
             tile_pair, tile_block, tile_row0 = emit_tiles(
                 pair_slot, pair_valid, s.slot_start, s.slot_size,
                 s.block_n, tiles_per_dev,
+                pair_key=pair_lb if prune else None,
             )
         return SearchPlan(
             qmc_pairs=qmc_pairs,
@@ -329,6 +386,9 @@ class MemANNSEngine:
             tile_block=tile_block,
             tile_row0=tile_row0,
             tiles_per_dev=tiles_cap,
+            pair_lb=pair_lb,
+            probed_ub=probed_ub,
+            probed_sizes=probed_sizes,
         )
 
     def plan_dev_rows(self, plan: SearchPlan) -> np.ndarray:
@@ -350,6 +410,25 @@ class MemANNSEngine:
         )
         return nv.sum(axis=1).astype(np.int64)
 
+    def plan_tile_count(self, plan: SearchPlan) -> int:
+        """Total non-empty code tiles `plan` dispatches (all devices).
+
+        The denominator of the prune-effectiveness telemetry: on the tiles
+        path it is the real (non-dummy) tile count; on the windows path,
+        the number of window tiles holding at least one valid row (padding
+        tiles past a cluster's end never count — the kernels skip-account
+        with the same rule).
+        """
+        if plan.scan == "tiles":
+            return int((plan.tile_pair != plan.pairs_per_dev).sum())
+        nv = np.where(
+            plan.pair_valid,
+            np.take_along_axis(self.shards.slot_size, plan.pair_slot, axis=1),
+            0,
+        )
+        bn = self.shards.block_n
+        return int(((nv + bn - 1) // bn).sum())
+
     def dispatch_plan(self, plan: SearchPlan, k: int) -> InFlightSearch:
         """Enqueue one shard_map step without blocking on its results.
 
@@ -364,7 +443,7 @@ class MemANNSEngine:
         """
         dev = self._device_put()
         ndev = self.shards.ndev
-        spec_dev, _ = self._sharding_specs()
+        spec_dev, spec_rep = self._sharding_specs()
         if plan.scan == "tiles":
             tile_pair, tile_block, tile_row0 = (
                 plan.tile_pair, plan.tile_block, plan.tile_row0
@@ -373,14 +452,24 @@ class MemANNSEngine:
             tile_pair = np.zeros((ndev, 1), np.int32)
             tile_block = np.zeros((ndev, 1), np.int32)
             tile_row0 = np.zeros((ndev, 1), np.int32)
+        # bound sentinels (-inf / +inf) run the identical executable
+        # unpruned; the warm-start bound is derived here because it
+        # depends on the dispatched k (plans are k-agnostic)
+        if plan.pair_lb is not None:
+            pair_lb = plan.pair_lb
+        else:
+            pair_lb = np.full(
+                (ndev, plan.pairs_per_dev), -np.inf, np.float32
+            )
+        query_bound = plan.query_bounds(k)
         batch = jax.device_put(
             (
                 plan.qmc_pairs, plan.pair_q, plan.pair_slot, plan.pair_valid,
-                tile_pair, tile_block, tile_row0,
+                tile_pair, tile_block, tile_row0, pair_lb, query_bound,
             ),
-            spec_dev,
+            (spec_dev,) * 8 + (spec_rep,),
         )
-        out_d, out_i = sharded_search(
+        out_d, out_i, prune_stats = sharded_search(
             *dev,
             *batch,
             mesh=self.mesh,
@@ -396,6 +485,8 @@ class MemANNSEngine:
         return InFlightSearch(
             out_d=out_d, out_i=out_i, plan=plan,
             dev_rows=self.plan_dev_rows(plan),
+            prune_stats=prune_stats,
+            query_bound=query_bound,
         )
 
     def collect(

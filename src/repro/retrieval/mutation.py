@@ -87,9 +87,16 @@ def delete_from(engine: "MemANNSEngine", ids: np.ndarray) -> int:
 
 
 def engine_delta_topk(
-    engine: "MemANNSEngine", queries: np.ndarray, nprobe: int, k: int
+    engine: "MemANNSEngine",
+    queries: np.ndarray,
+    nprobe: int,
+    k: int,
+    bound: np.ndarray | None = None,
 ) -> tuple[np.ndarray, np.ndarray]:
-    """Delta-buffer top-k under the engine's probe semantics."""
+    """Delta-buffer top-k under the engine's probe semantics.
+
+    `bound` forwards the early-pruning distance cutoff (None = unbounded;
+    see `delta_topk_block` for the exactness contract)."""
     return delta_topk(
         engine.delta,
         engine.index.centroids,
@@ -97,7 +104,28 @@ def engine_delta_topk(
         np.asarray(queries, np.float32),
         nprobe,
         k,
+        bound=bound,
     )
+
+
+def delta_prune_bound(
+    engine: "MemANNSEngine", plan, k: int, k_fetch: int, tombstones: int
+) -> np.ndarray | None:
+    """Sound (Q,) distance cutoff for the delta scan, or None when unsafe.
+
+    The merged-and-filtered k-th distance is upper-bounded by the value V
+    at which the probed clusters accumulate `k + tombstones` rows: even if
+    every tombstone lands below V, >= k surviving main candidates stay at
+    or below it *within the fetched window* -- but only while the fetch
+    window is wide enough to contain the k + tombstones smallest rows
+    (`k_fetch >= k + tombstones`).  Outside that regime (tombstone counts
+    past the overfetch, i.e. potential starvation) the delta scan must run
+    unbounded, exactly like the main path falls back to compaction.
+    """
+    if not plan.pruned or k_fetch < k + tombstones:
+        return None
+    bound = plan.query_bounds(k + tombstones)
+    return bound if np.isfinite(bound).any() else None
 
 
 def mutable_search(
@@ -125,7 +153,10 @@ def mutable_search(
     main_d, main_i = engine.execute_plan(plan, k_fetch)
     delta_d = delta_i = None
     if delta is not None and delta.live_count > 0:
-        delta_d, delta_i = engine_delta_topk(engine, queries, nprobe, k)
+        bound = delta_prune_bound(engine, plan, k, k_fetch, tomb.size)
+        delta_d, delta_i = engine_delta_topk(
+            engine, queries, nprobe, k, bound=bound
+        )
     return merge_results(main_d, main_i, delta_d, delta_i, tomb, k)
 
 

@@ -48,12 +48,19 @@ class InFlightSearch:
         circular import with engine.py).
       dev_rows: (ndev,) int64 rows the device scan visits for this plan —
         the load report consumed by the scheduler's `load_carry`.
+      prune_stats: (ndev, 2) int32 device array (in flight): per device,
+        [tiles whose body the bound check skipped, valid rows in them] —
+        the early-pruning telemetry consumed by `ServingStats`.
+      query_bound: (Q,) f32 warm-start bounds this dispatch ran with
+        (host copy, so telemetry never recomputes them).
     """
 
     out_d: jax.Array
     out_i: jax.Array
     plan: object
     dev_rows: np.ndarray
+    prune_stats: jax.Array | None = None
+    query_bound: np.ndarray | None = None
 
 
 def _shard_map(fn, mesh, in_specs, out_specs):
@@ -109,6 +116,8 @@ def _device_search(
     tile_pair,    # (T,) int32            [device-local; (1,) dummy on windows]
     tile_block,   # (T,) int32
     tile_row0,    # (T,) int32
+    pair_lb,      # (P,) f32 per-pair ADC distance lower bounds
+    query_bound,  # (Q,) f32 warm-start bounds      [replicated]
     *,
     n_queries: int,
     k: int,
@@ -151,22 +160,28 @@ def _device_search(
     starts = slot_start[pair_slot]  # (P,) block-aligned by layout.py
     n_valid = jnp.where(pair_valid, slot_size[pair_slot], 0)
     if scan == "tiles":
-        tv, ti = ops.adc_topk_tiles(
+        tv, ti, prune = ops.adc_topk_tiles(
             tables, codes, tile_pair, tile_block, tile_row0, n_valid, k,
             block_n=block_n, path=path, add_offsets=add_offsets,
-            interpret=interpret,
+            interpret=interpret, pair_q=pair_q, pair_lb=pair_lb,
+            bound=query_bound, n_queries=n_queries, with_stats=True,
         )  # per-pair top-k sliced from the (P+1, k) scratch
         # pairs that emitted no tiles have undefined output rows; mask to
         # the windows kernel's init values so both paths stay bit-identical
+        # (their prune-stat rows are equally undefined -> masked to zero)
         empty = (n_valid <= 0)[:, None]
         tv = jnp.where(empty, jnp.inf, tv)
         ti = jnp.where(empty, -1, ti)
+        prune = jnp.where(empty, 0, prune)
     else:
-        tv, ti = ops.adc_topk_windows(
+        tv, ti, prune = ops.adc_topk_windows(
             tables, codes, starts, n_valid, k,
             window=window, block_n=block_n, path=path,
             add_offsets=add_offsets, interpret=interpret,
-        )  # (P, k) dists, (P, k) window-row idx
+            pair_q=pair_q, pair_lb=pair_lb,
+            bound=query_bound, n_queries=n_queries, with_stats=True,
+        )  # (P, k) dists, (P, k) window-row idx, (P, 2) prune counters
+    prune_dev = prune.sum(axis=0).reshape(1, 2)  # (1, 2) device totals
 
     rows = starts[:, None] + ti                     # (P, k) device rows
     gids = jnp.where(ti >= 0, vec_ids[jnp.clip(rows, 0, None)], -1)
@@ -191,7 +206,7 @@ def _device_search(
     neg, sel = jax.lax.top_k(-all_d, k)
     out_d = -neg
     out_i = jnp.take_along_axis(all_i, sel, axis=-1)
-    return out_d, out_i
+    return out_d, out_i, prune_dev
 
 
 @functools.partial(
@@ -205,6 +220,7 @@ def sharded_search(
     codes, vec_ids, slot_start, slot_size, combo_addrs,
     codebook, qmc, pair_q, pair_slot, pair_valid,
     tile_pair, tile_block, tile_row0,
+    pair_lb, query_bound,
     *,
     mesh: jax.sharding.Mesh,
     n_queries: int,
@@ -222,6 +238,11 @@ def sharded_search(
     windows) or "tiles" (flat work queue; `tile_*` are (ndev, T) arrays
     from `emit_tiles`).  On the windows path `tile_*` are unused (pass any
     (ndev, 1) int32 arrays; a fixed width keeps the jit cache stable).
+
+    `pair_lb` ((ndev, P) f32) and `query_bound` ((Q,) f32, replicated)
+    drive the early-pruning whole-tile skip; (-inf, +inf) sentinels run
+    the scan unpruned with the same executable.  Returns
+    (out_d (Q, k), out_i (Q, k), prune_stats (ndev, 2) int32).
     """
     spec_dev = jax.sharding.PartitionSpec(DPU_AXIS)
     spec_rep = jax.sharding.PartitionSpec()
@@ -234,12 +255,13 @@ def sharded_search(
 
     def per_device(codes, vec_ids, slot_start, slot_size, combo_addrs,
                    codebook, qmc, pair_q, pair_slot, pair_valid,
-                   tile_pair, tile_block, tile_row0):
+                   tile_pair, tile_block, tile_row0, pair_lb, query_bound):
         # strip the leading (size-1) shard dim
         return fn(
             codes[0], vec_ids[0], slot_start[0], slot_size[0], combo_addrs[0],
             codebook, qmc[0], pair_q[0], pair_slot[0], pair_valid[0],
             tile_pair[0], tile_block[0], tile_row0[0],
+            pair_lb[0], query_bound,
         )
 
     return _shard_map(
@@ -248,11 +270,12 @@ def sharded_search(
         in_specs=(
             spec_dev, spec_dev, spec_dev, spec_dev, spec_dev,
             spec_rep, spec_dev, spec_dev, spec_dev, spec_dev,
-            spec_dev, spec_dev, spec_dev,
+            spec_dev, spec_dev, spec_dev, spec_dev, spec_rep,
         ),
-        out_specs=(spec_rep, spec_rep),
+        out_specs=(spec_rep, spec_rep, spec_dev),
     )(
         codes, vec_ids, slot_start, slot_size, combo_addrs,
         codebook, qmc, pair_q, pair_slot, pair_valid,
         tile_pair, tile_block, tile_row0,
+        pair_lb, query_bound,
     )

@@ -55,6 +55,7 @@ from repro.retrieval.engine import MemANNSEngine, SearchPlan, round_capacity
 from repro.retrieval.mutation import (
     compact_engine,
     delete_from,
+    delta_prune_bound,
     engine_delta_topk,
     ensure_delta,
     insert_into,
@@ -79,6 +80,11 @@ class ServingStats:
     device_s: float = 0.0  # dispatch + blocked collect (incl. transfers)
     overlap_s: float = 0.0  # host planning done while a batch was in flight
     rows_scanned: int = 0   # total code rows visited by collected batches
+    # --- early-pruning telemetry (bound-driven whole-tile skips) ---
+    tiles_dispatched: int = 0  # non-empty code tiles handed to the kernels
+    tiles_skipped: int = 0     # tile bodies the bound check skipped
+    rows_pruned: int = 0       # valid rows inside those skipped tiles
+    warm_bound_queries: int = 0  # queries dispatched with a finite warm start
     # --- mutation counters (mutable serving only) ---
     inserts: int = 0        # vectors appended to the delta buffer
     deletes: int = 0        # ids tombstoned
@@ -90,11 +96,29 @@ class ServingStats:
     latencies_s: collections.deque = dataclasses.field(
         default_factory=lambda: collections.deque(maxlen=LATENCY_WINDOW)
     )
+    # per-batch prune effectiveness samples (skipped / dispatched tiles),
+    # windowed like the latency samples so both report the same traffic
+    prune_fracs: collections.deque = dataclasses.field(
+        default_factory=lambda: collections.deque(maxlen=LATENCY_WINDOW)
+    )
     bucket_hits: dict[int, int] = dataclasses.field(default_factory=dict)
 
     def host_fraction(self) -> float:
         total = self.host_s + self.device_s
         return self.host_s / total if total > 0 else 0.0
+
+    def prune_fraction(self) -> float:
+        """Lifetime fraction of dispatched tile bodies the bounds skipped."""
+        if self.tiles_dispatched <= 0:
+            return 0.0
+        return self.tiles_skipped / self.tiles_dispatched
+
+    def prune_percentile(self, q: float) -> float:
+        """Per-batch prune-effectiveness percentile (bound-tightening
+        profile) over the last `LATENCY_WINDOW` batches."""
+        if not self.prune_fracs:
+            return 0.0
+        return float(np.percentile(np.asarray(self.prune_fracs), q))
 
     def overlap_fraction(self) -> float:
         """Fraction of host planning time hidden behind in-flight batches."""
@@ -371,13 +395,15 @@ class ServingEngine:
         )
 
     def _delta_micro_batch(
-        self, padded: np.ndarray
+        self, padded: np.ndarray, plan: SearchPlan, k_fetch: int
     ) -> tuple[np.ndarray | None, np.ndarray | None, np.ndarray]:
         """Delta top-k + tombstone snapshot for one padded micro-batch.
 
         Runs at plan time so mutations landing later in the stream never
         retroactively change an already-planned batch (pipeline-depth
-        invariance); returns (delta_d, delta_i, tombstone_array).
+        invariance); returns (delta_d, delta_i, tombstone_array).  The
+        delta scan gets the same early-pruning bound semantics as the
+        device kernels when it is provably safe (`delta_prune_bound`).
         """
         delta = self.engine.delta
         if delta is None or not delta.active:
@@ -389,7 +415,12 @@ class ServingEngine:
         if key not in self._warm:  # capacity grew past the warmed bucket
             self.stats.compiles += 1
             self._warm.add(key)
-        dd, di = engine_delta_topk(self.engine, padded, self.nprobe, self.k)
+        bound = delta_prune_bound(
+            self.engine, plan, self.k, k_fetch, tomb.size
+        )
+        dd, di = engine_delta_topk(
+            self.engine, padded, self.nprobe, self.k, bound=bound
+        )
         return dd, di, tomb
 
     def _dispatch_micro_batch(
@@ -440,6 +471,22 @@ class ServingEngine:
         self.stats.batches += 1
         self.stats.queries += q_n
         self.stats.rows_scanned += int(handle.dev_rows.sum())
+        # early-pruning effectiveness: skipped tile bodies vs dispatched
+        # tiles, per batch (windowed, the bound-tightening profile)
+        tiles = self.engine.plan_tile_count(handle.plan)
+        skipped = rows = 0
+        if handle.prune_stats is not None:
+            ps = np.asarray(handle.prune_stats).sum(axis=0)
+            skipped, rows = int(ps[0]), int(ps[1])
+        self.stats.tiles_dispatched += tiles
+        self.stats.tiles_skipped += skipped
+        self.stats.rows_pruned += rows
+        self.stats.prune_fracs.append(skipped / tiles if tiles else 0.0)
+        if handle.plan.pruned and handle.query_bound is not None:
+            # real (unpadded) queries dispatched with a finite warm start
+            self.stats.warm_bound_queries += int(
+                np.isfinite(handle.query_bound[:q_n]).sum()
+            )
         if mut is not None:
             dd, di, tomb = mut
             d, i = merge_results(d, i, dd, di, tomb, self.k)
@@ -487,7 +534,7 @@ class ServingEngine:
             if mutating:
                 # delta search + tombstone snapshot at plan time: host work,
                 # overlappable with in-flight device batches like planning
-                mut = self._delta_micro_batch(padded)
+                mut = self._delta_micro_batch(padded, plan, k_fetch)
             t1 = time.perf_counter()
             self.stats.host_s += t1 - t0
             if inflight:  # host planning hidden behind in-flight device work

@@ -123,7 +123,7 @@ def test_adc_topk_windows_compact_dtypes(dtype):
     )
     sizes = jnp.asarray(RNG.integers(1, window, (p,)).astype(np.int32))
     starts = jnp.asarray((np.arange(p) * 3 * bn).astype(np.int32))
-    tv, ti = adc_topk_windows_kernel(
+    tv, ti, _ = adc_topk_windows_kernel(
         tables, codes, starts // bn, sizes, k=k, window=window,
         block_n=bn, add_offsets=add_offsets, interpret=True,
     )
@@ -160,7 +160,7 @@ def test_adc_topk_tiles():
     tp_ += [p, p]  # dummy padding tiles
     tb_ += [0, 0]
     tr_ += [0, 0]
-    tv, ti = adc_topk_tiles_kernel(
+    tv, ti, _ = adc_topk_tiles_kernel(
         tables, codes, jnp.asarray(tp_), jnp.asarray(tb_), jnp.asarray(tr_),
         jnp.asarray(sizes), k=k, block_n=bn, add_offsets=True, interpret=True,
     )

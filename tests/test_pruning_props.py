@@ -1,0 +1,214 @@
+"""Hypothesis property wall for early-pruning v2.
+
+The pruning contract is *exactness*: bound-driven whole-tile skips, the
+warm-started top-k, best-first tile ordering and the bounded delta scan are
+pure optimizations -- `search` results must stay bit-identical (distances
+AND ids) to the unpruned reference across random layouts, ks, nprobes and
+both scan variants, including degenerate cases (empty clusters, all-dummy
+tile lists) and the mutable churn stream at zero steady-state recompiles.
+
+Requires the `[test]` extra (`pip install -e .[test]`); skipped cleanly
+when hypothesis is missing so the tier-1 suite still collects.
+"""
+
+import dataclasses
+
+import numpy as np
+import pytest
+
+pytest.importorskip("hypothesis")
+
+from hypothesis import given, settings, strategies as st  # noqa: E402
+
+import jax  # noqa: E402
+import jax.numpy as jnp  # noqa: E402
+
+from repro.core.index import IVFPQIndex  # noqa: E402
+from repro.core.lut import build_lut  # noqa: E402
+from repro.core.placement import place_clusters  # noqa: E402
+from repro.core.scheduling import (  # noqa: E402
+    emit_tiles,
+    residual_bounds,
+    subspace_code_norms,
+    warm_start_bounds,
+)
+from repro.retrieval import MemANNSEngine, build_shards  # noqa: E402
+from repro.retrieval.engine import make_dpu_mesh  # noqa: E402
+
+NCODES = 256
+SETTINGS = dict(max_examples=12, deadline=None)
+
+
+def _engine_from_sizes(rng, sizes, *, m=4, dim=16, block_n=64, scan="tiles",
+                       centroid_scale=50.0):
+    """MemANNSEngine over a synthetic IVFPQ index with EXACT cluster sizes
+    (k-means would flatten the layouts hypothesis draws)."""
+    sizes = np.asarray(sizes, np.int64)
+    c = len(sizes)
+    n = int(sizes.sum())
+    centroids = rng.normal(0, centroid_scale, (c, dim)).astype(np.float32)
+    codebook = np.abs(rng.normal(0, 1, (m, NCODES, dim // m))).astype(
+        np.float32
+    )
+    codes = rng.integers(0, NCODES, (max(n, 1), m)).astype(np.uint8)[:n]
+    offsets = np.zeros(c + 1, np.int64)
+    np.cumsum(sizes, out=offsets[1:])
+    index = IVFPQIndex(
+        centroids=centroids, codebook=codebook, codes=codes,
+        vec_ids=np.arange(n, dtype=np.int32), offsets=offsets,
+    )
+    placement = place_clusters(
+        sizes.astype(np.float64), np.ones(c) / c, len(jax.devices()),
+        centroids=centroids,
+    )
+    shards = build_shards(index, placement, block_n=block_n)
+    return MemANNSEngine(
+        index=index, placement=placement, shards=shards,
+        mesh=make_dpu_mesh(), scan=scan,
+    )
+
+
+@given(
+    seed=st.integers(0, 10_000),
+    n_clusters=st.integers(2, 10),
+    max_size=st.integers(0, 400),
+    k=st.integers(1, 12),
+    nprobe=st.integers(1, 6),
+    scan=st.sampled_from(["tiles", "windows"]),
+    qscale=st.sampled_from([1.0, 50.0, 200.0]),
+)
+@settings(**SETTINGS)
+def test_pruned_search_bit_identical_to_unpruned(
+    seed, n_clusters, max_size, k, nprobe, scan, qscale
+):
+    """The acceptance gate: pruned == unpruned, bit for bit, end to end.
+
+    Layouts include zero-size clusters (whole probes empty -> all-dummy
+    tiles on some devices) and query scales from on-top-of-the-data
+    (pruning-hostile) to far-field (every bound trips); duplicate code
+    rows (uint8 draws collide constantly at these sizes) exercise the
+    tie-breaking paths.
+    """
+    rng = np.random.default_rng(seed)
+    sizes = rng.integers(0, max_size + 1, n_clusters)
+    eng = _engine_from_sizes(rng, sizes, scan=scan)
+    eng_ref = dataclasses.replace(eng, prune=False)
+    qs = rng.normal(0, qscale, (5, 16)).astype(np.float32)
+    nprobe = min(nprobe, n_clusters)
+    d_p, i_p = eng.search(qs, nprobe=nprobe, k=k)
+    d_u, i_u = eng_ref.search(qs, nprobe=nprobe, k=k)
+    np.testing.assert_array_equal(d_p, d_u)
+    np.testing.assert_array_equal(i_p, i_u)
+
+
+@given(
+    seed=st.integers(0, 10_000),
+    m=st.sampled_from([2, 4, 8]),
+    dsub=st.sampled_from([2, 4]),
+    nprobe=st.integers(1, 5),
+    k=st.integers(1, 16),
+)
+@settings(max_examples=40, deadline=None)
+def test_residual_bounds_are_sound(seed, m, dsub, nprobe, k):
+    """lb <= every f32 ADC distance <= ub, and the warm-start bound covers
+    the k-th of the pooled candidates -- the inequalities every pruning
+    decision in the kernels rests on."""
+    rng = np.random.default_rng(seed)
+    dim = m * dsub
+    codebook = rng.normal(0, 2, (m, NCODES, dsub)).astype(np.float32)
+    qmc = rng.normal(0, rng.choice([0.5, 5.0, 50.0]), (3, nprobe, dim)).astype(
+        np.float32
+    )
+    lb, ub = residual_bounds(qmc, subspace_code_norms(codebook))
+
+    sizes = rng.integers(0, 40, (3, nprobe))
+    all_d = [[] for _ in range(3)]
+    for qi in range(3):
+        for pi in range(nprobe):
+            nrows = int(sizes[qi, pi])
+            if nrows == 0:
+                continue
+            lut = np.asarray(build_lut(jnp.asarray(codebook),
+                                       jnp.asarray(qmc[qi, pi])))
+            codes = rng.integers(0, NCODES, (nrows, m))
+            d = lut[np.arange(m)[None, :], codes].astype(np.float32).sum(
+                axis=1, dtype=np.float32
+            )
+            assert float(d.min()) >= float(lb[qi, pi])
+            assert float(d.max()) <= float(ub[qi, pi])
+            all_d[qi].extend(d.tolist())
+
+    b0 = warm_start_bounds(ub, sizes, k)
+    for qi in range(3):
+        pooled = np.sort(np.asarray(all_d[qi], np.float32))
+        if pooled.size >= k:
+            assert pooled[k - 1] <= b0[qi]
+        # with fewer than k candidates no finite bound is claimed to cover
+        # them; b0 may still be finite if sizes promise rows elsewhere
+
+
+@given(
+    ndev=st.integers(1, 4),
+    n_slots=st.integers(1, 6),
+    p_cap=st.integers(1, 12),
+    block_n=st.sampled_from([4, 8, 16]),
+    seed=st.integers(0, 10_000),
+)
+@settings(max_examples=40, deadline=None)
+def test_best_first_emission_permutes_whole_runs(
+    ndev, n_slots, p_cap, block_n, seed
+):
+    """emit_tiles(pair_key=...) must emit the same tile multiset as the
+    slot-order emission, keep each pair's run contiguous with ascending
+    rows (the kernel's revisiting + tie-break contract), and order runs by
+    ascending key."""
+    rng = np.random.default_rng(seed)
+    slot_size = rng.integers(0, 5 * block_n, (ndev, n_slots)).astype(np.int32)
+    slot_start = np.zeros((ndev, n_slots), np.int32)
+    for d in range(ndev):
+        cursor = 0
+        for s in range(n_slots):
+            slot_start[d, s] = cursor
+            cursor += -(-max(int(slot_size[d, s]), 1) // block_n) * block_n
+    pair_slot = rng.integers(0, n_slots, (ndev, p_cap)).astype(np.int32)
+    pair_valid = rng.random((ndev, p_cap)) < 0.7
+    key = rng.normal(0, 1, (ndev, p_cap)).astype(np.float32)
+
+    nv = np.where(
+        pair_valid, np.take_along_axis(slot_size, pair_slot, axis=1), 0
+    )
+    t_cap = max(int(((nv + block_n - 1) // block_n).sum(axis=1).max()), 1)
+    plain = emit_tiles(
+        pair_slot, pair_valid, slot_start, slot_size, block_n, t_cap
+    )
+    keyed = emit_tiles(
+        pair_slot, pair_valid, slot_start, slot_size, block_n, t_cap,
+        pair_key=key,
+    )
+    for d in range(ndev):
+        a = sorted(zip(*(x[d].tolist() for x in plain)))
+        b = sorted(zip(*(x[d].tolist() for x in keyed)))
+        assert a == b  # same tile multiset, dummies included
+
+        seq = keyed[0][d][keyed[0][d] != p_cap]
+        if seq.size == 0:
+            continue
+        # contiguous runs ...
+        changes = int((np.diff(seq) != 0).sum()) + 1
+        assert changes == len(np.unique(seq))
+        # ... in ascending-key order (stable: ties by pair slot) ...
+        run_pairs = seq[np.r_[True, np.diff(seq) != 0]]
+        run_keys = key[d][run_pairs]
+        assert all(
+            (k1 < k2) or (k1 == k2 and p1 < p2)
+            for (k1, p1), (k2, p2) in zip(
+                zip(run_keys, run_pairs), zip(run_keys[1:], run_pairs[1:])
+            )
+        )
+        # ... with ascending rows inside each run
+        rows = keyed[2][d][keyed[0][d] != p_cap]
+        starts_run = np.r_[True, np.diff(seq) != 0]
+        assert (rows[starts_run] == 0).all()
+        assert (np.diff(rows)[~starts_run[1:]] == block_n).all()
+
+

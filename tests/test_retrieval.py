@@ -77,3 +77,29 @@ def test_engine_batch_invariance(engines, clustered_data):
     d1, i1 = eng.search(qs[:12], nprobe=8, k=5)
     d2, i2 = eng.search(qs[12:], nprobe=8, k=5)
     np.testing.assert_array_equal(i_all, np.concatenate([i1, i2]))
+
+
+def test_mutable_cooc_raises_before_placement(monkeypatch):
+    """mutable + use_cooc is unsupported: the NotImplementedError must fire
+    BEFORE the (expensive) k-means build / Algorithm-1 placement pass, not
+    after a full placement has been burned."""
+    import repro.core.placement as placement_mod
+    import repro.retrieval.engine as engine_mod
+
+    def _boom(*a, **k):  # any placement work means the check came too late
+        raise AssertionError("place_clusters ran before the early check")
+
+    monkeypatch.setattr(placement_mod, "place_clusters", _boom)
+    monkeypatch.setattr(engine_mod, "place_clusters", _boom)
+    monkeypatch.setattr(
+        engine_mod, "build_index",
+        lambda *a, **k: (_ for _ in ()).throw(
+            AssertionError("build_index ran before the early check")
+        ),
+    )
+    xs = np.zeros((64, 16), np.float32)
+    with pytest.raises(NotImplementedError, match="use_cooc"):
+        MemANNSEngine.build(
+            jax.random.PRNGKey(0), xs, n_clusters=4, m=4,
+            mutable=True, use_cooc=True,
+        )

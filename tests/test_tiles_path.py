@@ -73,6 +73,14 @@ def test_tiles_equals_windows_end_to_end(kind):
     np.testing.assert_array_equal(i_t, i_w)
     np.testing.assert_array_equal(d_t, d_w)  # bit-identical, not allclose
 
+    # early pruning is an exact optimization: the bound-driven scan must
+    # reproduce the unpruned reference bit for bit on both variants
+    for eng in (eng_t, eng_w):
+        eng_ref = dataclasses.replace(eng, prune=False)
+        d_u, i_u = eng_ref.search(qs, nprobe=nprobe, k=10)
+        np.testing.assert_array_equal(d_t, d_u)
+        np.testing.assert_array_equal(i_t, i_u)
+
     # the whole point: fewer rows DMA'd on skewed layouts, never more
     plan_t = eng_t.plan_batch(qs, nprobe)
     plan_w = eng_w.plan_batch(qs, nprobe)
@@ -203,7 +211,7 @@ def test_all_dummy_tile_list_masks_to_windows_contract():
     tile_block = jnp.zeros((t_cap,), jnp.int32)
     tile_row0 = jnp.zeros((t_cap,), jnp.int32)
 
-    tv, ti = adc_topk_tiles_kernel(
+    tv, ti, _ = adc_topk_tiles_kernel(
         tables, jnp.asarray(codes), tile_pair, tile_block, tile_row0,
         n_valid, k=k, block_n=bn, add_offsets=True, interpret=True,
     )
@@ -211,10 +219,120 @@ def test_all_dummy_tile_list_masks_to_windows_contract():
     tv = jnp.where((n_valid <= 0)[:, None], jnp.inf, tv)
     ti = jnp.where((n_valid <= 0)[:, None], -1, ti)
 
-    wv, wi = adc_topk_windows_kernel(
+    wv, wi, _ = adc_topk_windows_kernel(
         tables, jnp.asarray(codes),
         (jnp.asarray(starts[:p]) // bn).astype(jnp.int32), n_valid,
         k=k, window=2 * bn, block_n=bn, add_offsets=True, interpret=True,
     )
     np.testing.assert_array_equal(np.asarray(tv), np.asarray(wv))
     np.testing.assert_array_equal(np.asarray(ti), np.asarray(wi))
+
+
+# --------------------------------------------------------------------- #
+# early-pruning v2: bound-driven whole-tile skips stay exact
+# --------------------------------------------------------------------- #
+
+
+def test_all_dummy_tile_list_pruned_matches_unpruned():
+    """Degenerate queue under pruning: every tile a dummy, finite bounds on
+    -- still the windows-contract outputs and zero (masked) prune stats."""
+    rng = np.random.default_rng(9)
+    m, bn, k, p, q_n = 4, 8, 3, 4, 2
+    codes = rng.integers(0, NCODES, (4 * bn, m)).astype(np.uint8)
+    tables = jnp.asarray(
+        np.abs(rng.normal(0, 1, (p, m * NCODES + 1))).astype(np.float32)
+    )
+    n_valid = jnp.zeros((p,), jnp.int32)
+    tile_pair = jnp.full((6,), p, jnp.int32)
+    tile_block = jnp.zeros((6,), jnp.int32)
+    tile_row0 = jnp.zeros((6,), jnp.int32)
+    kw = dict(k=k, block_n=bn, add_offsets=True, interpret=True)
+    tv, ti = ops.adc_topk_tiles(
+        tables, jnp.asarray(codes), tile_pair, tile_block, tile_row0,
+        n_valid, **kw,
+    )
+    tvp, tip, stats = ops.adc_topk_tiles(
+        tables, jnp.asarray(codes), tile_pair, tile_block, tile_row0,
+        n_valid,
+        pair_q=jnp.asarray([0, 1, 0, 1], jnp.int32),
+        pair_lb=jnp.zeros((p,), jnp.float32),
+        bound=jnp.full((q_n,), 7.5, jnp.float32),
+        n_queries=q_n, with_stats=True, **kw,
+    )
+    mask = np.ones((p, 1), bool)  # every pair empty -> all rows masked
+    np.testing.assert_array_equal(
+        np.where(mask, np.inf, np.asarray(tv)),
+        np.where(mask, np.inf, np.asarray(tvp)),
+    )
+    np.testing.assert_array_equal(
+        np.where(mask, 0, np.asarray(stats)), np.zeros((p, 2), np.int32)
+    )
+
+
+def test_pruning_reports_skips_and_stays_exact_on_skew():
+    """On the giant-cluster layout the bounds must skip real tiles (rows
+    avoided > 0) while the merged results stay bit-identical -- the
+    telemetry the serving stats and bench_prune build on."""
+    rng = np.random.default_rng(13)
+    eng = _engine_from_sizes(rng, SIZES["giant"])
+    qs = rng.normal(0, 50, (10, 16)).astype(np.float32)
+    plan = eng.plan_batch(qs, 8)
+    assert plan.pruned and plan.pair_lb is not None
+    assert np.isfinite(plan.query_bounds(10)).any()
+    handle = eng.dispatch_plan(plan, 10)
+    d_p, i_p = eng.collect(handle)
+    stats = np.asarray(handle.prune_stats).sum(axis=0)
+    assert stats[0] > 0, "no tile bodies skipped on a skewed layout"
+    assert stats[1] > 0
+    assert stats[0] <= eng.plan_tile_count(plan)
+
+    eng_ref = dataclasses.replace(eng, prune=False)
+    plan_u = eng_ref.plan_batch(qs, 8)
+    handle_u = eng_ref.dispatch_plan(plan_u, 10)
+    d_u, i_u = eng_ref.collect(handle_u)
+    assert int(np.asarray(handle_u.prune_stats).sum()) == 0
+    np.testing.assert_array_equal(d_p, d_u)
+    np.testing.assert_array_equal(i_p, i_u)
+
+
+def test_mutable_churn_pruned_bit_identical_at_zero_recompiles():
+    """The mutable stream (inserts + tombstones + overfetch + bounded delta
+    merge) under pruning: identical results to a prune=False twin fed the
+    same mutations, with zero steady-state recompiles after warmup."""
+    from repro.retrieval import ServingEngine
+
+    rng = np.random.default_rng(11)
+    sizes = [700] + [50] * 11
+    eng = _engine_from_sizes(rng, sizes, block_n=64)
+    eng_ref = dataclasses.replace(
+        eng, prune=False, delta=None, _dev_arrays=None
+    )
+    srv = ServingEngine(
+        eng, nprobe=6, k=5, micro_batch=4, mutable=True, delta_capacity=256
+    )
+    srv_ref = ServingEngine(
+        eng_ref, nprobe=6, k=5, micro_batch=4, mutable=True,
+        delta_capacity=256,
+    )
+    srv.warmup()
+    srv_ref.warmup()
+    warm_compiles = srv.stats.compiles
+
+    next_id = int(sum(sizes))
+    dim = eng.index.centroids.shape[1]
+    for step in range(4):
+        ids = np.arange(next_id, next_id + 8, dtype=np.int32)
+        next_id += 8
+        vecs = rng.normal(0, 50, (8, dim)).astype(np.float32)
+        for s in (srv, srv_ref):
+            s.insert(ids, vecs)
+        dead = rng.integers(0, 700, 3)
+        for s in (srv, srv_ref):
+            s.delete(dead)
+        qs = rng.normal(0, 50, (6, dim)).astype(np.float32)
+        d_p, i_p = srv.search(qs)
+        d_u, i_u = srv_ref.search(qs)
+        np.testing.assert_array_equal(d_p, d_u, err_msg=f"step {step}")
+        np.testing.assert_array_equal(i_p, i_u, err_msg=f"step {step}")
+    assert srv.stats.compiles == warm_compiles, "churn stream recompiled"
+    assert srv.stats.tiles_dispatched > 0
