@@ -1,0 +1,149 @@
+"""Recall frontier: PQ-only vs the exact re-rank cascade, recall@k vs QPS.
+
+Sweeps ``(nprobe, k_overfetch, rerank)`` over one shared system and emits a
+``frontier_nprobe{n}_{mode}`` row per configuration with ``recall`` and
+``qps`` in the derived column — the machine-readable recall-vs-throughput
+frontier CI tracks across PRs in ``BENCH_<pr>.json``.
+
+In-bench contract checks (CI smoke):
+
+  * at equal nprobe the cascade's recall@k DOMINATES the PQ-only scan
+    (>=, and strictly better on the sweep mean — ADC quantization error is
+    what the full-precision pass removes);
+  * cascade exactness: the engine's fused rerank path is BIT-IDENTICAL to
+    a host-side fp32 re-rank of the same overfetched ADC candidate set
+    through the same kernel (`ops.rerank_dists` at the same (Q, k', D)
+    shape), ties broken by ADC candidate position.
+
+Methodology notes live in docs/BENCHMARKS.md.  CPU-interpret wall times are
+relative signals; the frontier SHAPE (recall up, QPS down as k' grows) is
+the reproduced result.  Fast enough for CI
+(`python -m benchmarks.run --only recall_frontier`).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import time
+
+import numpy as np
+
+from benchmarks.common import emit
+
+K = 10
+NPROBES = (2, 4, 8)
+OVERFETCHES = (32, 128)
+
+
+def _build(seed=0, n=8000, dim=32, c=32, m=8):
+    import jax
+
+    from repro.data import make_clustered_vectors
+    from repro.retrieval import MemANNSEngine
+
+    xs, centers, _ = make_clustered_vectors(
+        n, dim, c, pattern_pool=32, seed=seed
+    )
+    rng = np.random.default_rng(seed + 1)
+    qs = (
+        centers[rng.integers(0, len(centers), 32)]
+        + rng.normal(0, 0.5, (32, dim))
+    ).astype(np.float32)
+    eng = MemANNSEngine.build(
+        jax.random.PRNGKey(0), xs, c, m, block_n=256,
+        kmeans_iters=8, pq_iters=6,
+        rerank="exact", k_overfetch=OVERFETCHES[0],
+    )
+    # exact L2 ground truth for recall@K
+    d2 = ((qs[:, None, :] - xs[None, :, :]) ** 2).sum(-1)
+    gt = np.argsort(d2, axis=1, kind="stable")[:, :K]
+    return xs, qs, gt, eng
+
+
+def _recall(ids: np.ndarray, gt: np.ndarray) -> float:
+    hits = sum(
+        len(set(ids[q].tolist()) & set(gt[q].tolist()))
+        for q in range(gt.shape[0])
+    )
+    return hits / gt.size
+
+
+def _qps(eng, qs, nprobe, iters=3) -> float:
+    eng.search(qs, nprobe=nprobe, k=K)  # warm
+    best = 0.0
+    for _ in range(2):  # interleaved best-of: CPU wall times are noisy
+        t0 = time.perf_counter()
+        for _ in range(iters):
+            d, i = eng.search(qs, nprobe=nprobe, k=K)
+        best = max(best, iters * qs.shape[0] / (time.perf_counter() - t0))
+    return best
+
+
+def _assert_bit_identity(xs, qs, eng, nprobe):
+    """Engine cascade == host fp32 re-rank of the same ADC candidate set."""
+    from repro.kernels import ops
+
+    kp = eng.k_prime(K)
+    handle = eng.dispatch_plan(eng.plan_batch(qs, nprobe), kp)
+    adc_d, adc_i = eng.collect(handle)
+    # ADC kernels pad past-the-end lanes with (+inf, junk-id): mask before
+    # re-scoring, exactly as the engine's dispatch_rerank does
+    cand = np.where(np.isfinite(adc_d), adc_i, -1)
+    vecs = xs[np.clip(cand, 0, None)].astype(np.float32)
+    # same kernel at the same (Q, k', D) shape -> identical f32 reduction
+    exact = np.asarray(ops.rerank_dists(qs, vecs))
+    exact = np.where(cand >= 0, exact, np.inf)
+    sel = np.argsort(exact, axis=-1, kind="stable")[:, :K]
+    ref_d = np.take_along_axis(exact, sel, axis=-1)
+    ref_i = np.take_along_axis(cand, sel, axis=-1)
+    ref_i = np.where(np.isfinite(ref_d), ref_i, -1)
+    got_d, got_i = eng.search(qs, nprobe=nprobe, k=K)
+    assert np.array_equal(got_i, ref_i) and np.array_equal(got_d, ref_d), (
+        "cascade exactness violated: engine rerank path diverged from the "
+        "host fp32 re-rank of the same candidate set"
+    )
+
+
+def run():
+    xs, qs, gt, eng = _build()
+    eng_off = dataclasses.replace(eng, rerank="off")
+    _assert_bit_identity(xs, qs, eng, nprobe=max(NPROBES))
+
+    r_off, r_on = [], []
+    for nprobe in NPROBES:
+        d, i = eng_off.search(qs, nprobe=nprobe, k=K)
+        rec_off = _recall(i, gt)
+        r_off.append(rec_off)
+        qps = _qps(eng_off, qs, nprobe)
+        emit(
+            f"frontier_nprobe{nprobe}_off",
+            1e6 / max(qps, 1e-9),
+            f"recall={rec_off:.4f};qps={qps:.1f};k={K};rerank=off",
+        )
+        best = 0.0
+        for kov in OVERFETCHES:
+            eng_on = dataclasses.replace(eng, k_overfetch=kov)
+            d, i = eng_on.search(qs, nprobe=nprobe, k=K)
+            rec = _recall(i, gt)
+            best = max(best, rec)
+            qps = _qps(eng_on, qs, nprobe)
+            emit(
+                f"frontier_nprobe{nprobe}_exact_of{kov}",
+                1e6 / max(qps, 1e-9),
+                f"recall={rec:.4f};qps={qps:.1f};k={K};rerank=exact;"
+                f"k_prime={eng_on.k_prime(K)}",
+            )
+        r_on.append(best)
+        assert best >= rec_off, (
+            f"nprobe={nprobe}: cascade recall {best:.4f} fell below the "
+            f"PQ-only scan {rec_off:.4f} — re-ranking exact distances can "
+            f"only re-order the overfetched superset"
+        )
+    assert float(np.mean(r_on)) > float(np.mean(r_off)), (
+        f"cascade mean recall {np.mean(r_on):.4f} did not improve on "
+        f"PQ-only {np.mean(r_off):.4f} across the nprobe sweep"
+    )
+
+
+if __name__ == "__main__":
+    run()

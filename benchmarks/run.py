@@ -33,6 +33,7 @@ MODULES = [
     ("bench_tiles", "tile-list vs padded-window device scan"),
     ("bench_prune", "early-pruning v2: bound-driven tile skips"),
     ("bench_mutation", "insert/delete churn QPS + compaction latency"),
+    ("bench_recall_frontier", "recall@k vs QPS: PQ-only vs exact re-rank"),
 ]
 
 
@@ -50,8 +51,14 @@ def _parse_derived(derived: str) -> dict:
     return out
 
 
-def write_json(path: str, rows) -> None:
-    """Merge benchmark rows into `path` (rows keyed by bench name)."""
+def write_json(path: str, rows, errors: dict | None = None) -> None:
+    """Merge benchmark rows into `path` (rows keyed by bench name).
+
+    `errors` maps module name -> exception string for modules that raised;
+    each lands as a ``{"error": ...}`` row so a partial run is visible in
+    the artifact instead of silently absent (a module that emitted some
+    rows before raising keeps those rows AND gains the error marker).
+    """
     doc = {"schema": 1, "rows": {}}
     if os.path.exists(path):
         try:
@@ -65,6 +72,10 @@ def write_json(path: str, rows) -> None:
         doc["rows"][name] = {
             "us_per_call": us_per_call,
             **_parse_derived(derived),
+        }
+    for mod_name, msg in (errors or {}).items():
+        doc["rows"][mod_name] = {
+            **doc["rows"].get(mod_name, {}), "error": msg,
         }
     tmp = f"{path}.tmp"
     with open(tmp, "w") as f:
@@ -89,7 +100,7 @@ def main() -> None:
     from benchmarks import common
 
     print("name,us_per_call,derived")
-    failures = []
+    failures: dict[str, str] = {}
     for mod_name, desc in MODULES:
         if args.only and args.only not in mod_name:
             continue
@@ -97,20 +108,26 @@ def main() -> None:
         try:
             mod = __import__(f"benchmarks.{mod_name}", fromlist=["run"])
             mod.run()
-        except Exception:  # noqa: BLE001
+        except Exception as exc:  # noqa: BLE001
             traceback.print_exc()
+            failures[mod_name] = f"{type(exc).__name__}: {exc}"
             if not args.keep_going:
-                if args.json:  # record whatever completed before the raise
-                    write_json(args.json, common.ROWS)
+                # record whatever completed before the raise + the error
+                # marker, so partial runs are visible in the artifact
+                if args.json:
+                    write_json(args.json, common.ROWS, failures)
                 print(f"# FAILED: {mod_name} (fail-fast; use --keep-going "
                       f"to run the rest)")
                 sys.exit(1)
-            failures.append(mod_name)
+        if args.json:
+            # incremental merge after every module: a later hard crash
+            # (OOM, SIGKILL) cannot drop rows already measured
+            write_json(args.json, common.ROWS, failures)
     if args.json:
-        write_json(args.json, common.ROWS)
+        write_json(args.json, common.ROWS, failures)
         print(f"# wrote {len(common.ROWS)} rows to {args.json}")
     if failures:
-        print(f"# FAILED: {failures}")
+        print(f"# FAILED: {sorted(failures)}")
         sys.exit(1)
     print("# all benchmarks completed")
 

@@ -1,9 +1,17 @@
 from repro.checkpoint.store import (
     latest_step,
     load_index,
+    load_raw_store,
     restore,
     save,
     save_index,
 )
 
-__all__ = ["latest_step", "load_index", "restore", "save", "save_index"]
+__all__ = [
+    "latest_step",
+    "load_index",
+    "load_raw_store",
+    "restore",
+    "save",
+    "save_index",
+]

@@ -130,17 +130,25 @@ def restore(
 
 _INDEX_FIELDS = ("centroids", "codebook", "codes", "vec_ids", "offsets")
 _DELTA_FIELDS = ("codes", "assign", "vec_ids", "dead")
+_RAW_FIELDS = ("vectors", "used", "id_dev", "id_row")
 
 
-def save_index(path: str, index, delta=None, extra: dict | None = None) -> str:
+def save_index(
+    path: str, index, delta=None, raw=None, extra: dict | None = None
+) -> str:
     """Atomically checkpoint an IVFPQIndex (+ optional DeltaIndex + meta).
 
     Args:
       path: target directory (written as path.tmp, then renamed).
-      index: `repro.core.index.IVFPQIndex`.
+      index: `repro.core.index.IVFPQIndex`; an OPQ rotation, when present,
+        is persisted alongside the codes so the restored index keeps
+        rotating queries at entry.
       delta: optional `repro.core.delta.DeltaIndex`; its buffered inserts,
-        dead-row mask and tombstone set are all persisted, so a restart
-        resumes mid-churn with nothing lost.
+        dead-row mask, raw insert vectors (when kept for the re-rank
+        cascade) and tombstone set are all persisted, so a restart resumes
+        mid-churn with nothing lost.
+      raw: optional `repro.retrieval.layout.RawStore` (the full-precision
+        re-rank shard); restored separately via `load_raw_store`.
       extra: JSON-serializable layout metadata (e.g. block_n, scan variant,
         shard slack) surfaced again by `load_index`.
     """
@@ -151,16 +159,29 @@ def save_index(path: str, index, delta=None, extra: dict | None = None) -> str:
     os.makedirs(os.path.join(tmp, "index"))
     for f in _INDEX_FIELDS:
         np.save(os.path.join(tmp, "index", f + ".npy"), getattr(index, f))
-    meta = {"has_delta": delta is not None, "extra": extra or {}}
+    if getattr(index, "rotation", None) is not None:
+        np.save(os.path.join(tmp, "index", "rotation.npy"), index.rotation)
+    meta = {
+        "has_delta": delta is not None,
+        "has_raw": raw is not None,
+        "extra": extra or {},
+    }
     if delta is not None:
         os.makedirs(os.path.join(tmp, "delta"))
         for f in _DELTA_FIELDS:
             np.save(os.path.join(tmp, "delta", f + ".npy"), getattr(delta, f))
+        if getattr(delta, "vectors", None) is not None:
+            np.save(os.path.join(tmp, "delta", "vectors.npy"), delta.vectors)
         np.save(
             os.path.join(tmp, "delta", "tombstones.npy"),
             delta.tombstone_array(),
         )
         meta["delta_n"] = int(delta.n)
+    if raw is not None:
+        os.makedirs(os.path.join(tmp, "raw"))
+        for f in _RAW_FIELDS:
+            np.save(os.path.join(tmp, "raw", f + ".npy"), getattr(raw, f))
+        meta["raw_dtype"] = raw.dtype
     with open(os.path.join(tmp, "meta.json"), "w") as f:
         json.dump(meta, f)
     # overwrite without a loss window: the previous checkpoint is renamed
@@ -199,6 +220,9 @@ def load_index(path: str):
         f: np.load(os.path.join(path, "index", f + ".npy"))
         for f in _INDEX_FIELDS
     }
+    rot_path = os.path.join(path, "index", "rotation.npy")
+    if os.path.exists(rot_path):
+        arrays["rotation"] = np.load(rot_path)
     index = IVFPQIndex(**arrays).validate()
     delta = None
     if meta.get("has_delta"):
@@ -206,6 +230,9 @@ def load_index(path: str):
             f: np.load(os.path.join(path, "delta", f + ".npy"))
             for f in _DELTA_FIELDS
         }
+        vec_path = os.path.join(path, "delta", "vectors.npy")
+        if os.path.exists(vec_path):
+            dargs["vectors"] = np.load(vec_path)
         tomb = np.load(os.path.join(path, "delta", "tombstones.npy"))
         delta = DeltaIndex(
             n=int(meta["delta_n"]),
@@ -213,3 +240,26 @@ def load_index(path: str):
             **dargs,
         )
     return index, delta, meta.get("extra", {})
+
+
+def load_raw_store(path: str):
+    """Restore the raw-vector re-rank shard saved by `save_index(raw=...)`.
+
+    Returns a `repro.retrieval.layout.RawStore`, or None when the
+    checkpoint was written without one.  Same `.old` fallback as
+    `load_index`.
+    """
+    from repro.retrieval.layout import RawStore
+
+    path = path.rstrip("/")
+    if not os.path.exists(path) and os.path.exists(path + ".old"):
+        path = path + ".old"
+    with open(os.path.join(path, "meta.json")) as f:
+        meta = json.load(f)
+    if not meta.get("has_raw"):
+        return None
+    arrays = {
+        f: np.load(os.path.join(path, "raw", f + ".npy"))
+        for f in _RAW_FIELDS
+    }
+    return RawStore(dtype=meta.get("raw_dtype", "float32"), **arrays)

@@ -72,6 +72,12 @@ class DeltaIndex:
       dead: (capacity,) bool, True where the row was tombstoned.
       n: occupied row count.
       tombstones: set of deleted global ids (cleared by compaction).
+      vectors: (capacity, D) f32 ORIGINAL-space raw vectors of the buffered
+        inserts, allocated lazily on first insert.  Feeds the exact re-rank
+        cascade (delta candidates re-rank through the same kernel as main
+        candidates) and the raw-store update at compaction.  Always in the
+        original space even under an OPQ rotation — only codes/assign live
+        in the rotated space.
     """
 
     codes: np.ndarray
@@ -80,6 +86,7 @@ class DeltaIndex:
     dead: np.ndarray
     n: int = 0
     tombstones: set[int] = dataclasses.field(default_factory=set)
+    vectors: np.ndarray | None = None
 
     @classmethod
     def create(cls, m: int, capacity: int = 4096) -> "DeltaIndex":
@@ -141,6 +148,13 @@ class DeltaIndex:
             [self.vec_ids, np.full(pad, -1, np.int32)]
         )
         self.dead = np.concatenate([self.dead, np.zeros(pad, bool)])
+        if self.vectors is not None:
+            self.vectors = np.concatenate(
+                [
+                    self.vectors,
+                    np.zeros((pad, self.vectors.shape[1]), np.float32),
+                ]
+            )
 
     def insert(
         self,
@@ -148,6 +162,7 @@ class DeltaIndex:
         codebook: np.ndarray,
         ids: np.ndarray,
         vectors: np.ndarray,
+        rotation: np.ndarray | None = None,
     ) -> int:
         """Encode + append a batch of new vectors; returns rows appended.
 
@@ -156,6 +171,11 @@ class DeltaIndex:
         eat the new row).  The encode runs on inputs padded to a power-of-two
         batch bucket, so interactive insert streams hit a handful of
         compiled shapes instead of one per batch size.
+
+        `vectors` are ORIGINAL-space; with an OPQ `rotation` they are
+        rotated before assignment/encoding (centroids/codebooks live in the
+        rotated space) while the raw copy kept for the re-rank cascade
+        stays unrotated.
         """
         ids = np.atleast_1d(np.asarray(ids, np.int32))
         vectors = np.asarray(vectors, np.float32)
@@ -172,12 +192,18 @@ class DeltaIndex:
                 f"ids {sorted(clash)[:8]} were deleted earlier; re-inserting "
                 "a tombstoned id is unsupported until after a compaction"
             )
+        if self.vectors is None:
+            self.vectors = np.zeros(
+                (self.capacity, vectors.shape[1]), np.float32
+            )
         self._grow(self.n + b)
         # pad the encode batch to a pow2 bucket (stable jit shapes), slice off
         bpad = _pow2(b)
         vpad = np.concatenate(
             [vectors, np.broadcast_to(vectors[:1], (bpad - b, vectors.shape[1]))]
         )
+        if rotation is not None:
+            vpad = vpad @ rotation
         assign_pad = assign_clusters(centroids, vpad)
         codes = encode_vectors(codebook, centroids, vpad, assign_pad)[:b]
         assign = assign_pad[:b]
@@ -186,6 +212,7 @@ class DeltaIndex:
         self.assign[s : s + b] = assign
         self.vec_ids[s : s + b] = ids
         self.dead[s : s + b] = False
+        self.vectors[s : s + b] = vectors
         self.n += b
         return b
 
@@ -427,6 +454,7 @@ def compact_index(
         codes=all_codes[order],
         vec_ids=all_ids[order],
         offsets=offsets,
+        rotation=index.rotation,
     ).validate()
 
     removed = np.zeros(index.n_clusters, np.int64)

@@ -17,7 +17,7 @@ import numpy as np
 
 from repro.core.kmeans import kmeans, _pairwise_sq_l2
 from repro.core.lut import build_lut
-from repro.core.pq import pq_encode, train_pq
+from repro.core.pq import pq_encode, train_opq, train_pq
 from repro.core.search import adc_scan, masked_topk_smallest
 
 
@@ -35,13 +35,19 @@ class IVFPQIndex:
     compaction.
 
     Attributes:
-      centroids: (C, D) coarse centroids.
+      centroids: (C, D) coarse centroids.  With an OPQ rotation these (and
+        the codes) live in the ROTATED space.
       codebook: (M, 256, d_sub) PQ codebooks (of residuals).
       codes: (N, M) uint8, rows sorted by cluster id.
       vec_ids: (N,) int32 global vector ids, same order as codes (for a
         freshly built index these are positions into the build input; the
         mutation layer appends new ids past that range).
       offsets: (C + 1,) int64 CSR offsets into codes/vec_ids.
+      rotation: optional (D, D) orthonormal OPQ rotation (see
+        `core.pq.train_opq`).  When set, queries must be rotated with
+        `rotate()` before comparing against centroids or building LUTs;
+        anything in the original space (raw vectors, exact re-rank,
+        brute-force ground truth) stays unrotated — L2 is R-invariant.
     """
 
     centroids: np.ndarray
@@ -49,6 +55,7 @@ class IVFPQIndex:
     codes: np.ndarray
     vec_ids: np.ndarray
     offsets: np.ndarray
+    rotation: np.ndarray | None = None
 
     @property
     def n_clusters(self) -> int:
@@ -64,6 +71,17 @@ class IVFPQIndex:
 
     def cluster_sizes(self) -> np.ndarray:
         return np.diff(self.offsets)
+
+    def rotate(self, vectors: np.ndarray) -> np.ndarray:
+        """Map original-space vectors into this index's coding space.
+
+        Identity when no OPQ rotation was trained; otherwise `v @ R`.
+        Every query entry point (flat search, engine scheduling, delta
+        scans) routes through this before touching centroids or codes.
+        """
+        if self.rotation is None:
+            return vectors
+        return np.asarray(vectors, np.float32) @ self.rotation
 
     def cluster_codes(self, c: int) -> np.ndarray:
         return self.codes[self.offsets[c] : self.offsets[c + 1]]
@@ -150,6 +168,7 @@ def encode_index(
     xs: np.ndarray,
     vec_ids: np.ndarray | None = None,
     assign: np.ndarray | None = None,
+    rotation: np.ndarray | None = None,
 ) -> IVFPQIndex:
     """Assemble an IVFPQIndex from *already trained* centroids + codebooks.
 
@@ -164,6 +183,9 @@ def encode_index(
       assign: optional precomputed (N,) cluster assignment (must equal
         `assign_clusters(centroids, xs)`; `build_index` passes the one it
         already computed so the full dataset is assigned exactly once).
+      rotation: optional OPQ rotation to RECORD on the index.  `centroids`
+        and `xs` must already be rotated — this function never applies it
+        (keeping the compaction bit-identity contract rotation-agnostic).
     """
     centroids = np.asarray(centroids, np.float32)
     codebook = np.asarray(codebook, np.float32)
@@ -184,6 +206,7 @@ def encode_index(
         codes=codes[order],
         vec_ids=np.asarray(vec_ids, np.int32)[order],
         offsets=offsets,
+        rotation=rotation,
     ).validate()
 
 
@@ -195,8 +218,20 @@ def build_index(
     kmeans_iters: int = 25,
     pq_iters: int = 20,
     train_subsample: int | None = None,
+    opq_iters: int = 0,
 ) -> IVFPQIndex:
-    """Offline phase: IVF + PQ.  Host-side (numpy) bookkeeping, JAX compute."""
+    """Offline phase: IVF + PQ.  Host-side (numpy) bookkeeping, JAX compute.
+
+    Args:
+      n_clusters: coarse IVF cluster count C.
+      m: PQ subspace count (D % m == 0).
+      train_subsample: optional row cap for k-means/PQ training (the full
+        dataset is still assigned + encoded).
+      opq_iters: > 0 trains an OPQ-style whole-space rotation on the
+        training residuals (`core.pq.train_opq`) before PQ; centroids and
+        codes are then stored in the rotated space and the rotation is
+        recorded on the index for query-time use (`IVFPQIndex.rotate`).
+    """
     xs = np.asarray(xs, np.float32)
     n = xs.shape[0]
     k_ivf, k_pq = jax.random.split(key)
@@ -215,6 +250,17 @@ def build_index(
         res_train = train - centroids[assign[sel]]
     else:
         res_train = xs - centroids[assign]
+    if opq_iters > 0:
+        # whole-space rotation: (x - c)R == xR - cR, so rotating centroids
+        # and data once rotates every residual; the original-space cluster
+        # assignment carries over (R preserves distances)
+        rotation, codebook = train_opq(
+            k_pq, res_train, m, pq_iters=pq_iters, opq_iters=opq_iters
+        )
+        return encode_index(
+            centroids @ rotation, codebook, xs @ rotation,
+            assign=assign, rotation=rotation,
+        )
     codebook = np.asarray(train_pq(k_pq, jnp.asarray(res_train), m, iters=pq_iters))
 
     return encode_index(centroids, codebook, xs, assign=assign)
@@ -244,8 +290,10 @@ def search(
     """Flat (single-device) IVFPQ search -- the CPU-Faiss-style baseline.
 
     Returns (dists (Q, k), ids (Q, k)) of approximate nearest neighbours.
+    ADC (quantized) distances; queries are rotated on entry when the index
+    carries an OPQ rotation.
     """
-    queries = jnp.asarray(queries, jnp.float32)
+    queries = jnp.asarray(index.rotate(np.asarray(queries, np.float32)))
     cids, qmc = filter_clusters(jnp.asarray(index.centroids), queries, nprobe)
     cids_np = np.asarray(cids)
     codebook = jnp.asarray(index.codebook)

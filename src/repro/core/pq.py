@@ -11,6 +11,7 @@ import functools
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.core.kmeans import kmeans, _pairwise_sq_l2
 
@@ -41,6 +42,47 @@ def train_pq(
         return cb
 
     return jax.vmap(train_one)(keys, sub)  # (M, 256, dsub)
+
+
+def train_opq(
+    key: jax.Array,
+    residuals: jax.Array | np.ndarray,
+    m: int,
+    pq_iters: int = 20,
+    opq_iters: int = 5,
+) -> tuple[np.ndarray, np.ndarray]:
+    """OPQ-style whole-space rotation + PQ codebooks (alternating descent).
+
+    Learns an orthonormal R that aligns the residual distribution with the
+    subspace split before quantization (the classic Optimized Product
+    Quantization non-parametric iteration):
+
+      repeat opq_iters times:
+        1. train PQ codebooks on the rotated residuals X·R;
+        2. decode Y = decode(encode(X·R));
+        3. Procrustes update: R = U·Vᵀ from SVD(Xᵀ·Y), the orthonormal
+           minimizer of ||X·R − Y||_F.
+
+    Rotation is applied to the WHOLE space, so (x − c)·R = x·R − c·R: the
+    caller rotates centroids and data once and every downstream residual
+    is automatically rotated.  Squared L2 is invariant under R, so ADC
+    distances in the rotated space estimate the same true distances — only
+    the quantization error shrinks.
+
+    Returns (rotation (D, D) f32, codebook (M, 256, d_sub) f32).
+    """
+    residuals = np.asarray(residuals, np.float32)
+    d = residuals.shape[1]
+    r_mat = np.eye(d, dtype=np.float32)
+    for _ in range(max(int(opq_iters), 1)):
+        rot = jnp.asarray(residuals @ r_mat)
+        codebook = train_pq(key, rot, m, iters=pq_iters)
+        y = np.asarray(pq_decode(codebook, pq_encode(codebook, rot)))
+        u, _, vt = np.linalg.svd(residuals.T @ y)
+        r_mat = np.ascontiguousarray((u @ vt).astype(np.float32))
+    # final codebooks re-trained against the final rotation
+    codebook = train_pq(key, jnp.asarray(residuals @ r_mat), m, iters=pq_iters)
+    return r_mat, np.asarray(codebook)
 
 
 @jax.jit

@@ -11,6 +11,7 @@ API (all return the same values as the matching ref.py oracle):
   adc_topk_tiles(tables, codes, ...)  flat tile work queue, shared codes
   build_luts(codebook, qmc)           stage-(b) LUT construction
   build_ext_luts(luts, cols, codes)   fused [LUT | combo sums | 0] tables
+  rerank_dists(queries, cand)         exact f32 re-rank distances (cascade)
 """
 
 from __future__ import annotations
@@ -23,6 +24,7 @@ import jax.numpy as jnp
 from repro.kernels import adc_scan as _scan
 from repro.kernels import adc_topk as _topk
 from repro.kernels import lut_build as _lut
+from repro.kernels import rerank as _rerank
 
 NCODES = 256
 LANE = 128  # TPU lane width: pad tables/blocks to multiples of this
@@ -332,6 +334,32 @@ def adc_topk_tiles(
     if with_stats:
         return vals, idx, stats
     return vals, idx
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def rerank_dists(
+    queries: jax.Array, cand: jax.Array, *, interpret: bool | None = None
+) -> jax.Array:
+    """Exact re-rank distances: (Q, D) x (Q, K, D) -> (Q, K) f32 sq-L2.
+
+    Second cascade stage: `cand` holds the raw vectors of the ADC scan's
+    overfetched candidates, gathered by candidate id (rows of invalid
+    candidates may hold arbitrary finite data -- callers mask their
+    distances out afterwards, see retrieval.search.sharded_rerank).  The
+    candidate axis K is padded to a LANE multiple for the kernel and
+    sliced back, so any pow2 candidate bucket maps onto an aligned block.
+    Storage dtype may be f32 or bf16; sums are always f32.
+    """
+    if interpret is None:
+        interpret = _interpret_default()
+    k = cand.shape[1]
+    kpad = _round_up(k, LANE) - k
+    if kpad:
+        cand = jnp.pad(cand, ((0, 0), (0, kpad), (0, 0)))
+    out = _rerank.rerank_dists_kernel(
+        queries.astype(jnp.float32), cand, interpret=interpret
+    )
+    return out[:, :k]
 
 
 @functools.partial(jax.jit, static_argnames=("interpret",))

@@ -52,6 +52,20 @@ def adc_topk_flat_ref(
     return -neg, idx.astype(jnp.int32)
 
 
+def rerank_dists_ref(queries: jax.Array, cand: jax.Array) -> jax.Array:
+    """(Q, D) x (Q, K, D) -> (Q, K) exact f32 squared-L2 distances.
+
+    Mirrors `rerank.rerank_dists_kernel`'s contract (f32 widening, one sum
+    over the trailing coordinate axis); tests assert allclose like every
+    other kernel here.  The cascade's *bit*-identity contract is pinned
+    against the kernel itself (`ops.rerank_dists` on the same candidate
+    shape), because XLA reduces different array shapes in different f32
+    orders even for the same math.
+    """
+    diff = cand.astype(jnp.float32) - queries.astype(jnp.float32)[:, None, :]
+    return jnp.sum(diff * diff, axis=-1)
+
+
 def lut_build_ref(codebook: jax.Array, qmc: jax.Array) -> jax.Array:
     """(M, 256, dsub) x (Q, M, dsub) -> (Q, M, 256) squared-L2 LUTs."""
     diff = qmc[:, :, None, :] - codebook[None, :, :, :]

@@ -40,6 +40,17 @@ def main():
         "--compact-occupancy", type=float, default=0.75,
         help="delta-buffer fill fraction that triggers auto-compaction",
     )
+    ap.add_argument(
+        "--rerank", choices=["off", "exact"], default="off",
+        help="exact re-rank cascade: ADC overfetches k' candidates, a "
+             "full-precision pass against the raw-vector shard re-scores "
+             "them before the final top-k",
+    )
+    ap.add_argument(
+        "--k-overfetch", type=int, default=0,
+        help="ADC candidates per query fed to the re-rank stage "
+             "(0 = 4*k, pow2-bucketed)",
+    )
     args = ap.parse_args()
 
     import jax
@@ -112,6 +123,7 @@ def main():
             # the mutable path requires plain (non-co-occ) shards
             use_cooc=not churn, n_combos=rcfg.n_combos, block_n=rcfg.block_n,
             mutable=churn,
+            rerank=args.rerank, k_overfetch=args.k_overfetch,
         )
         # serve through the pipelined engine: host planning of batch i+1
         # overlaps device execution of batch i, and each batch's per-device
@@ -177,6 +189,16 @@ def main():
                 "warm_bound_queries": st.warm_bound_queries,
             },
         }
+        if args.rerank != "off":
+            report["retrieval_stats"]["rerank"] = {
+                "mode": args.rerank,
+                "k_prime": eng.k_prime(rcfg.k),
+                "reranked_queries": st.reranked_queries,
+                "rerank_candidates": st.rerank_candidates,
+                "raw_mb_per_device": round(
+                    eng.raw.bytes_per_device() / 2**20, 2
+                ),
+            }
         if churn:
             report["retrieval_stats"]["mutation"] = {
                 "inserts": st.inserts,

@@ -1,10 +1,14 @@
 """Distributed MemANNS retrieval: cluster shards across the device mesh.
 
   layout.py -- pack an IVFPQIndex + Placement (+ optional co-occ encoding)
-               into per-device, block-aligned storage arrays
+               into per-device, block-aligned storage arrays; RawStore is
+               the per-device full-precision shard behind the exact
+               re-rank cascade
   search.py -- the shard_map online path: on-device LUT build, fused
                ADC+top-k scan (padded per-pair windows or the flat tile
-               work queue), local per-query merge, one all-gather
+               work queue), local per-query merge, one all-gather;
+               sharded_rerank re-scores ADC candidates exactly against
+               the RawStore
   engine.py -- MemANNSEngine: end-to-end build + query API (the paper's
                whole system behind one object); execute_plan is split into
                an async dispatch_plan (InFlightSearch handle) + collect
@@ -20,7 +24,14 @@
 
 from repro.core.delta import DeltaIndex
 from repro.retrieval.engine import MemANNSEngine, SearchPlan, round_capacity
-from repro.retrieval.layout import DeviceShards, build_shards, update_shards
+from repro.retrieval.layout import (
+    DeviceShards,
+    RawStore,
+    build_raw_store,
+    build_shards,
+    update_raw_store,
+    update_shards,
+)
 from repro.retrieval.mutation import CompactionReport
 from repro.retrieval.search import InFlightSearch
 from repro.retrieval.serving import ServingEngine, ServingStats
@@ -31,6 +42,9 @@ __all__ = [
     "InFlightSearch",
     "round_capacity",
     "DeviceShards",
+    "RawStore",
+    "build_raw_store",
+    "update_raw_store",
     "build_shards",
     "update_shards",
     "DeltaIndex",

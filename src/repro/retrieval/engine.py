@@ -33,8 +33,18 @@ from repro.core.scheduling import (
     subspace_code_norms,
     warm_start_bounds,
 )
-from repro.retrieval.layout import DeviceShards, build_shards
-from repro.retrieval.search import DPU_AXIS, InFlightSearch, sharded_search
+from repro.retrieval.layout import (
+    DeviceShards,
+    RawStore,
+    build_raw_store,
+    build_shards,
+)
+from repro.retrieval.search import (
+    DPU_AXIS,
+    InFlightSearch,
+    sharded_rerank,
+    sharded_search,
+)
 
 
 def make_dpu_mesh(devices=None) -> jax.sharding.Mesh:
@@ -103,6 +113,35 @@ class SearchPlan:
 
 @dataclasses.dataclass
 class MemANNSEngine:
+    """End-to-end engine state + the host half of the online path.
+
+    Knobs (all also reachable through `build(...)`):
+      path: ADC scan addressing variant — "gather" (per-row LUT gathers) or
+        "flat" (direct-address extended LUTs; required by co-occ shards).
+      scan: device scan variant — "tiles" (flat queue of real code tiles,
+        work ∝ probed rows) or "windows" (every pair padded to the max
+        cluster window).  Bit-identical outputs; see docs/ARCHITECTURE.md.
+      prune: early-pruning v2 — sound per-pair lower bounds + warm-start
+        query bounds let the kernel skip whole tiles exactly.  `False`
+        plans the unpruned reference scan (same executable, ±inf bounds).
+      rerank: "off" returns ADC (quantized) distances; "exact" runs the
+        two-stage cascade — the ADC scan overfetches `k_prime(k)`
+        candidates, then the Pallas re-rank kernel recomputes exact f32
+        distances against the raw-vector shard and the final top-k is
+        re-selected (requires `raw`; see `dispatch_rerank`).
+      k_overfetch: candidate count k' fed to the re-rank stage; 0 = auto
+        (4·k).  Rounded up to a pow2 bucket (floor k) either way, so
+        serving warms one executable per (k, bucket) pair.
+      interpret: force Pallas interpret mode (None = auto: interpret
+        everywhere except real TPU backends).
+
+    `raw` is the per-device raw-vector shard backing the cascade (built by
+    `build(store_raw=True)` or attached via `attach_raw_store`); `delta` is
+    the DeltaIndex buffer once mutation is enabled.  `_dev_arrays` /
+    `_raw_arrays` cache the sharded device copies of the packed arrays —
+    invalidated by compaction when shapes or contents change.
+    """
+
     index: IVFPQIndex
     placement: Placement
     shards: DeviceShards
@@ -110,10 +149,14 @@ class MemANNSEngine:
     path: str = "gather"
     scan: str = "tiles"  # device scan variant: "tiles" | "windows"
     prune: bool = True   # early-pruning v2 bounds (exact; False = reference)
+    rerank: str = "off"  # exact re-rank cascade: "off" | "exact"
+    k_overfetch: int = 0  # cascade candidate count k' (0 = auto: 4k)
     interpret: bool | None = None
     freqs: np.ndarray | None = None   # f_i estimate (kept for re-placement)
     delta: "object | None" = None     # DeltaIndex once mutation is enabled
+    raw: RawStore | None = None       # raw-vector shard (rerank="exact")
     _dev_arrays: tuple | None = None
+    _raw_arrays: tuple | None = None
     _code_norms: np.ndarray | None = None  # (M,) cached codebook max norms
 
     @classmethod
@@ -135,6 +178,11 @@ class MemANNSEngine:
         path: str = "gather",
         scan: str = "tiles",
         prune: bool = True,
+        rerank: str = "off",
+        k_overfetch: int = 0,
+        store_raw: bool | None = None,
+        raw_dtype: str = "float32",
+        opq_iters: int = 0,
         interpret: bool | None = None,
         mutable: bool = False,
         delta_capacity: int = 4096,
@@ -147,7 +195,18 @@ class MemANNSEngine:
         allocated up front and the shard packing reserves growth slack
         (`cap_slack`/`slot_slack`/`window_slack`, defaulting to 50% rows /
         4 slots / 2 window blocks) so incremental compactions keep every
-        compiled shape stable under moderate churn."""
+        compiled shape stable under moderate churn.
+
+        `rerank="exact"` enables the full-precision re-rank cascade and
+        (unless `store_raw=False`) packs the build vectors into a
+        per-device raw shard — `raw_dtype` picks its on-device precision
+        ("float32" | "bfloat16").  `opq_iters > 0` learns an OPQ-style
+        rotation before PQ training (alternating encode / Procrustes
+        steps), lifting the ADC candidate quality feeding the cascade;
+        centroids and codes then live in the rotated space, queries are
+        rotated on entry, and the raw shard (and therefore the exact
+        re-rank) stays in the original space — squared L2 is rotation
+        invariant, so the cascade contract is unchanged."""
         # unsupported combinations fail before any expensive work (the
         # k-means build + Algorithm-1 placement below can take minutes)
         if mutable and use_cooc:
@@ -155,10 +214,13 @@ class MemANNSEngine:
                 "mutable=True requires use_cooc=False (co-occ shards are "
                 "immutable; see retrieval.layout.update_shards)"
             )
+        if rerank not in ("off", "exact"):
+            raise ValueError(f"rerank must be 'off' or 'exact', got {rerank!r}")
         mesh = mesh or make_dpu_mesh()
         ndev = math.prod(mesh.devices.shape)
         index = build_index(
-            key, xs, n_clusters, m, kmeans_iters=kmeans_iters, pq_iters=pq_iters
+            key, xs, n_clusters, m, kmeans_iters=kmeans_iters,
+            pq_iters=pq_iters, opq_iters=opq_iters,
         )
         # f_i from the historical query log (paper §4.1's predictor)
         if history_queries is not None and len(history_queries):
@@ -189,6 +251,14 @@ class MemANNSEngine:
                 (2 if window_slack is None else window_slack) if mutable else 0
             ),
         )
+        if store_raw is None:
+            store_raw = rerank == "exact"
+        raw = None
+        if store_raw:
+            raw = build_raw_store(
+                index, placement, xs, dtype=raw_dtype,
+                cap_slack=0.5 if mutable else 0.0,
+            )
         eng = cls(
             index=index,
             placement=placement,
@@ -197,8 +267,11 @@ class MemANNSEngine:
             path=path,
             scan=scan,
             prune=prune,
+            rerank=rerank,
+            k_overfetch=k_overfetch,
             interpret=interpret,
             freqs=freqs,
+            raw=raw,
         )
         if mutable:
             from repro.retrieval.mutation import ensure_delta
@@ -264,6 +337,34 @@ class MemANNSEngine:
         )
         return self._dev_arrays
 
+    def k_prime(self, k: int) -> int:
+        """Cascade candidate count k' for a final top-`k` (pow2-bucketed).
+
+        `k_overfetch` when set (clamped to >= k), else 4·k; rounded up to a
+        power-of-two bucket with floor k so the serving layer warms exactly
+        one re-rank executable per (k, bucket)."""
+        want = self.k_overfetch if self.k_overfetch > 0 else 4 * k
+        return round_capacity(max(want, k), floor=max(k, 1))
+
+    def attach_raw_store(
+        self,
+        xs: np.ndarray,
+        xs_ids: np.ndarray | None = None,
+        dtype: str = "float32",
+    ):
+        """Build + attach the raw-vector shard for an existing engine.
+
+        `xs` are ORIGINAL-space vectors; `xs_ids[i]` is the global id of
+        row i (defaults to 0..N-1, the fresh-build layout where
+        `index.vec_ids` are positions into the build input).  Every id in
+        `index.vec_ids` must be covered."""
+        self.raw = build_raw_store(
+            self.index, self.placement, xs, xs_ids=xs_ids, dtype=dtype,
+            cap_slack=0.5 if self.delta is not None else 0.0,
+        )
+        self._raw_arrays = None
+        return self.raw
+
     def schedule_batch(
         self,
         queries: np.ndarray,
@@ -275,10 +376,16 @@ class MemANNSEngine:
         `load_carry` is the optional (ndev,) carried-load bias (see
         `schedule_queries`); the serving layer threads its EWMA of
         per-device scanned rows through here.
+
+        With an OPQ rotation the queries are rotated here — centroids and
+        PQ codes live in the rotated space, so everything downstream of
+        this point (residuals, LUTs, ADC scan) is rotated too.  The exact
+        re-rank path is NOT: `dispatch_rerank` takes original-space
+        queries against the original-space raw shard.
         """
         probed, qmc = filter_clusters(
             jnp.asarray(self.index.centroids),
-            jnp.asarray(queries, jnp.float32),
+            jnp.asarray(self.index.rotate(queries), jnp.float32),
             nprobe,
         )
         probed = np.asarray(probed)
@@ -489,6 +596,54 @@ class MemANNSEngine:
             query_bound=query_bound,
         )
 
+    def _raw_device_put(self):
+        """Shard the raw-vector store over the mesh once, cache on device.
+
+        The storage cast (f32 host copy -> `raw.dtype` device copy) happens
+        here, so a bf16 store ships half the bytes."""
+        if self._raw_arrays is not None:
+            return self._raw_arrays
+        if self.raw is None:
+            raise ValueError(
+                "rerank='exact' needs a raw-vector store: build with "
+                "store_raw=True (default when rerank='exact') or call "
+                "attach_raw_store(xs)"
+            )
+        spec_dev, spec_rep = self._sharding_specs()
+        r = self.raw
+        vecs = r.vectors
+        if r.dtype == "bfloat16":
+            vecs = vecs.astype(jnp.bfloat16)
+        self._raw_arrays = jax.device_put(
+            (vecs, r.id_dev, r.id_row), (spec_dev, spec_rep, spec_rep)
+        )
+        return self._raw_arrays
+
+    def dispatch_rerank(
+        self, handle: InFlightSearch, queries: np.ndarray, k_out: int
+    ) -> InFlightSearch:
+        """Chain the exact re-rank stage onto an in-flight ADC search.
+
+        Stays asynchronous: `handle.out_i` (the overfetched ADC candidate
+        ids) feeds `sharded_rerank` without a host round-trip, and the
+        returned handle's outputs are the re-ranked (exact-f32, tie-stable)
+        top-`k_out`.  `queries` must be the original-space queries — the
+        raw shard is never rotated (see `schedule_batch`).
+        """
+        raw_dev = self._raw_device_put()
+        _, spec_rep = self._sharding_specs()
+        q = jax.device_put(np.asarray(queries, np.float32), spec_rep)
+        # the ADC kernels pad past-the-end lanes with (+inf, <junk id>);
+        # harmless under ADC ordering (inf sorts last) but the re-rank
+        # re-scores by exact distance, so junk ids must be masked out or
+        # they resurrect as duplicates of real candidates
+        cand = jnp.where(jnp.isfinite(handle.out_d), handle.out_i, -1)
+        out_d, out_i = sharded_rerank(
+            *raw_dev, q, cand,
+            mesh=self.mesh, k_out=k_out, interpret=self.interpret,
+        )
+        return dataclasses.replace(handle, out_d=out_d, out_i=out_i)
+
     def collect(
         self, handle: InFlightSearch
     ) -> tuple[np.ndarray, np.ndarray]:
@@ -528,6 +683,10 @@ class MemANNSEngine:
         With an active mutation layer (buffered inserts or tombstones) the
         main-path results are overfetched/filtered and merged with the
         delta-buffer top-k; otherwise this is the plain immutable path.
+        With `rerank="exact"` both paths run the cascade: the ADC scan
+        overfetches `k_prime(k)` candidates and the re-rank stage
+        re-selects the top-k by exact f32 distance (distances returned are
+        then exact, not quantized).
         """
         if self.mutation_active:
             from repro.retrieval.mutation import mutable_search
@@ -536,4 +695,9 @@ class MemANNSEngine:
                 self, queries, nprobe, k, pairs_per_dev=pairs_per_dev
             )
         plan = self.plan_batch(queries, nprobe, pairs_per_dev=pairs_per_dev)
+        if self.rerank == "exact":
+            kp = self.k_prime(k)
+            handle = self.dispatch_plan(plan, kp)
+            handle = self.dispatch_rerank(handle, queries, k)
+            return self.collect(handle)
         return self.execute_plan(plan, k)

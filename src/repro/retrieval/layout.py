@@ -14,6 +14,7 @@ The final zero slot is the sentinel every padding address points at.
 from __future__ import annotations
 
 import dataclasses
+import math
 
 import numpy as np
 
@@ -225,6 +226,227 @@ def build_shards(
         block_n=block_n,
         window=window,
     )
+
+
+# ---------------------------------------------------------------------- #
+# raw-vector shard (exact re-rank cascade)
+# ---------------------------------------------------------------------- #
+
+
+def _pow2(n: int, floor: int = 8) -> int:
+    return max(floor, 1 << math.ceil(math.log2(max(n, 1))))
+
+
+@dataclasses.dataclass
+class RawStore:
+    """Per-device raw-vector shard backing the exact re-rank cascade.
+
+    Unlike the PQ code shards (where hot clusters are *replicated* across
+    devices), every vector has exactly one **home device** -- the first
+    replica holder of its cluster -- so a cross-device sum over per-device
+    partial distances reconstructs each candidate's exact distance with a
+    single non-zero contribution (bit-exact regardless of reduction order;
+    see `retrieval.search.sharded_rerank`).
+
+    The id maps are dense (indexed by global vector id) and replicated on
+    every device; `vectors` is sharded over the 'dpu' mesh axis.  Both the
+    per-device row capacity and the id-map length are power-of-two buckets,
+    so moderate churn (compactions appending new rows) keeps every compiled
+    re-rank executable's input shapes -- and therefore the serving layer's
+    zero-steady-state-recompile contract -- stable.
+
+    Attributes:
+      vectors: (ndev, rcap, D) f32 raw vectors, row-packed per home device.
+        Host storage is always f32; `dtype` selects the on-device precision.
+      used: (ndev,) int64 occupied rows per device (append cursor).
+      id_dev: (ids_cap,) int32 home device per global id, -1 = absent
+        (never stored, or deleted -- deleted ids leak their row until the
+        next full rebuild, an accepted slack/size trade).
+      id_row: (ids_cap,) int32 row of each id within its home device shard.
+      dtype: "float32" (default) or "bfloat16" -- the device-side storage
+        precision.  Distances are f32 sums either way; bf16 trades exactness
+        *to the original vector* for half the HBM footprint while staying
+        exact to the stored (rounded) vector.
+    """
+
+    vectors: np.ndarray
+    used: np.ndarray
+    id_dev: np.ndarray
+    id_row: np.ndarray
+    dtype: str = "float32"
+
+    @property
+    def ndev(self) -> int:
+        return self.vectors.shape[0]
+
+    @property
+    def row_capacity(self) -> int:
+        return self.vectors.shape[1]
+
+    @property
+    def dim(self) -> int:
+        return self.vectors.shape[2]
+
+    @property
+    def ids_capacity(self) -> int:
+        return self.id_dev.shape[0]
+
+    def bytes_per_device(self) -> int:
+        itemsize = 2 if self.dtype == "bfloat16" else 4
+        return int(self.row_capacity * self.dim * itemsize)
+
+    def shape_key(self) -> tuple:
+        """The pieces of this store that key a compiled re-rank executable."""
+        return (self.vectors.shape, self.ids_capacity, self.dtype)
+
+
+def build_raw_store(
+    index: IVFPQIndex,
+    placement: Placement,
+    xs: np.ndarray,
+    xs_ids: np.ndarray | None = None,
+    dtype: str = "float32",
+    cap_slack: float = 0.0,
+) -> RawStore:
+    """Pack raw vectors by home device (first replica of each cluster).
+
+    Args:
+      xs: (N, D) raw vectors in any order.
+      xs_ids: (N,) global id of each xs row; defaults to 0..N-1 (the fresh
+        `MemANNSEngine.build` layout, where `index.vec_ids` are positions
+        into the build input).
+      cap_slack: extra per-device row-capacity fraction before the pow2
+        rounding, headroom for compaction appends (mirrors the code shards'
+        `cap_slack`).
+
+    Every id in `index.vec_ids` must appear in `xs_ids`.
+    """
+    if dtype not in ("float32", "bfloat16"):
+        raise ValueError(f"unsupported raw-store dtype {dtype!r}")
+    xs = np.asarray(xs, np.float32)
+    ndev = len(placement.dev_clusters)
+    c_n = index.n_clusters
+    if xs_ids is None:
+        xs_ids = np.arange(xs.shape[0], dtype=np.int64)
+    else:
+        xs_ids = np.asarray(xs_ids, np.int64)
+    order = np.argsort(xs_ids, kind="stable")
+    pos = np.searchsorted(xs_ids[order], index.vec_ids)
+    if (pos >= xs_ids.size).any() or (
+        xs_ids[order][np.clip(pos, 0, xs_ids.size - 1)] != index.vec_ids
+    ).any():
+        raise ValueError("build_raw_store: index ids missing from xs_ids")
+    xs_row = order[pos]  # index row -> xs row
+
+    home = np.full(c_n, 0, np.int64)
+    for c in range(c_n):
+        if placement.replicas[c]:
+            home[c] = placement.replicas[c][0]
+    sizes = index.cluster_sizes()
+    need = np.zeros(ndev, np.int64)
+    np.add.at(need, home, sizes)
+    rcap = _pow2(int(np.ceil(int(need.max(initial=1)) * (1.0 + cap_slack))))
+    ids_cap = _pow2(int(index.vec_ids.max(initial=0)) + 1)
+
+    vectors = np.zeros((ndev, rcap, xs.shape[1]), np.float32)
+    used = np.zeros(ndev, np.int64)
+    id_dev = np.full(ids_cap, -1, np.int32)
+    id_row = np.zeros(ids_cap, np.int32)
+    for c in range(c_n):
+        lo, hi = int(index.offsets[c]), int(index.offsets[c + 1])
+        if hi == lo:
+            continue
+        d = int(home[c])
+        ids = index.vec_ids[lo:hi]
+        n_rows = hi - lo
+        cur = int(used[d])
+        vectors[d, cur : cur + n_rows] = xs[xs_row[lo:hi]]
+        id_dev[ids] = d
+        id_row[ids] = cur + np.arange(n_rows, dtype=np.int32)
+        used[d] = cur + n_rows
+    return RawStore(
+        vectors=vectors, used=used, id_dev=id_dev, id_row=id_row, dtype=dtype
+    )
+
+
+def update_raw_store(
+    store: RawStore,
+    add_ids: np.ndarray,
+    add_vectors: np.ndarray,
+    remove_ids: np.ndarray,
+) -> tuple[RawStore, bool]:
+    """Incremental raw-store update after a compaction.
+
+    Removed ids are unmapped (`id_dev = -1`; their rows leak until a full
+    rebuild -- bounded by churn, not corpus).  New ids append to the least
+    loaded devices.  Capacities grow in pow2 steps only on overflow, so the
+    returned `shapes_changed` flag (any array shape grew, forcing a re-rank
+    recompile) mirrors `update_shards`' contract.
+
+    Returns (updated store, shapes_changed).  The input store is mutated in
+    place except when growth forces a reallocation.
+    """
+    add_ids = np.atleast_1d(np.asarray(add_ids, np.int64))
+    remove_ids = np.atleast_1d(np.asarray(remove_ids, np.int64))
+    add_vectors = np.asarray(add_vectors, np.float32)
+    shapes_changed = False
+
+    if remove_ids.size:
+        inrange = remove_ids[remove_ids < store.ids_capacity]
+        store.id_dev[inrange] = -1
+
+    if add_ids.size == 0:
+        return store, shapes_changed
+
+    max_id = int(add_ids.max())
+    if max_id >= store.ids_capacity:
+        new_cap = _pow2(max_id + 1, floor=store.ids_capacity)
+        pad = new_cap - store.ids_capacity
+        store.id_dev = np.concatenate(
+            [store.id_dev, np.full(pad, -1, np.int32)]
+        )
+        store.id_row = np.concatenate(
+            [store.id_row, np.zeros(pad, np.int32)]
+        )
+        shapes_changed = True
+
+    free = store.row_capacity - store.used
+    if int(free.sum()) < add_ids.size:
+        grow = _pow2(
+            int(store.used.max(initial=0)) + add_ids.size,
+            floor=store.row_capacity,
+        )
+        pad = grow - store.row_capacity
+        store.vectors = np.concatenate(
+            [
+                store.vectors,
+                np.zeros((store.ndev, pad, store.dim), np.float32),
+            ],
+            axis=1,
+        )
+        shapes_changed = True
+
+    # fill devices most-free-first; each gets a contiguous slice of the batch
+    cursor = 0
+    for d in np.argsort(-(store.row_capacity - store.used), kind="stable"):
+        if cursor >= add_ids.size:
+            break
+        take = min(
+            int(store.row_capacity - store.used[d]), add_ids.size - cursor
+        )
+        if take <= 0:
+            continue
+        ids = add_ids[cursor : cursor + take]
+        cur = int(store.used[d])
+        store.vectors[d, cur : cur + take] = add_vectors[
+            cursor : cursor + take
+        ]
+        store.id_dev[ids] = d
+        store.id_row[ids] = cur + np.arange(take, dtype=np.int32)
+        store.used[d] = cur + take
+        cursor += take
+    assert cursor == add_ids.size, "raw-store append overflow after growth"
+    return store, shapes_changed
 
 
 def update_shards(

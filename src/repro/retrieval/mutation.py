@@ -27,6 +27,7 @@ import dataclasses
 import time
 import typing
 
+import jax.numpy as jnp
 import numpy as np
 
 from repro.core.delta import (
@@ -36,7 +37,8 @@ from repro.core.delta import (
     merge_results,
 )
 from repro.core.placement import update_placement
-from repro.retrieval.layout import update_shards
+from repro.kernels import ops
+from repro.retrieval.layout import update_raw_store, update_shards
 
 if typing.TYPE_CHECKING:  # circular at runtime (engine imports this module)
     from repro.retrieval.engine import MemANNSEngine
@@ -75,9 +77,16 @@ def ensure_delta(engine: "MemANNSEngine", capacity: int = 4096) -> DeltaIndex:
 def insert_into(
     engine: "MemANNSEngine", ids: np.ndarray, vectors: np.ndarray
 ) -> int:
-    """PQ-encode + buffer new vectors; visible to the very next search."""
+    """PQ-encode + buffer new vectors; visible to the very next search.
+
+    `vectors` are original-space; the delta rotates them for encoding when
+    the index carries an OPQ rotation and keeps the raw copy for the exact
+    re-rank cascade / raw-store update at compaction."""
     delta = ensure_delta(engine)
-    return delta.insert(engine.index.centroids, engine.index.codebook, ids, vectors)
+    return delta.insert(
+        engine.index.centroids, engine.index.codebook, ids, vectors,
+        rotation=engine.index.rotation,
+    )
 
 
 def delete_from(engine: "MemANNSEngine", ids: np.ndarray) -> int:
@@ -96,16 +105,60 @@ def engine_delta_topk(
     """Delta-buffer top-k under the engine's probe semantics.
 
     `bound` forwards the early-pruning distance cutoff (None = unbounded;
-    see `delta_topk_block` for the exactness contract)."""
+    see `delta_topk_block` for the exactness contract).  Queries are
+    rotated on entry when the index carries an OPQ rotation (the delta's
+    codes/assignments live in the rotated space)."""
     return delta_topk(
         engine.delta,
         engine.index.centroids,
         engine.index.codebook,
-        np.asarray(queries, np.float32),
+        np.asarray(engine.index.rotate(queries), np.float32),
         nprobe,
         k,
         bound=bound,
     )
+
+
+def delta_exact_rerank(
+    delta: DeltaIndex,
+    queries: np.ndarray,
+    delta_d: np.ndarray,
+    delta_i: np.ndarray,
+    interpret: bool | None = None,
+) -> tuple[np.ndarray, np.ndarray]:
+    """Re-rank delta ADC candidates by exact f32 distance (host gather).
+
+    The delta analogue of `sharded_rerank`: candidates surfaced by the
+    delta ADC scan are re-scored against the ORIGINAL-space raw vectors the
+    buffer kept at insert time, through the same Pallas kernel
+    (`ops.rerank_dists`), so merged delta and main candidates carry
+    commensurable exact distances.  Candidates whose id no longer maps to a
+    live buffered row come back as (+inf, -1); selection is the same
+    tie-stable argsort as the sharded stage.
+    """
+    if delta.vectors is None or delta.n == 0:
+        return delta_d, delta_i
+    ids = delta.vec_ids[: delta.n]
+    order = np.argsort(ids, kind="stable")
+    pos = np.searchsorted(ids[order], delta_i)
+    pos = np.clip(pos, 0, ids.size - 1)
+    row = order[pos]
+    found = (delta_i >= 0) & (ids[row] == delta_i)
+    vecs = delta.vectors[np.where(found, row, 0)]       # (Q, kd, D)
+    dists = np.asarray(
+        ops.rerank_dists(
+            jnp.asarray(np.asarray(queries, np.float32)),
+            jnp.asarray(vecs),
+            interpret=interpret,
+        )
+    )
+    dists = np.where(found, dists, np.inf)
+    sel = np.argsort(dists, axis=-1, kind="stable")
+    out_d = np.take_along_axis(dists, sel, axis=-1)
+    out_i = np.where(
+        np.isfinite(out_d), np.take_along_axis(delta_i, sel, axis=-1), -1
+    )
+    return out_d, out_i
 
 
 def delta_prune_bound(
@@ -145,18 +198,53 @@ def mutable_search(
     (+inf, -1) padding -- compacting (which the serving layer does
     automatically on starvation) restores exact results.  With an inactive
     delta this is exactly `engine.search` (same executable, same results).
+
+    With `engine.rerank == "exact"` both sources run the cascade before the
+    merge: the main path overfetches max(k', k + overfetch) candidates and
+    re-ranks ALL of them by exact distance (full reorder, so the downstream
+    tombstone filter still sees a sorted window), and delta candidates are
+    re-scored through the same kernel (`delta_exact_rerank`).  The delta
+    ADC scan then runs UNBOUNDED: the early-pruning cutoff is an ADC-space
+    bound, and a row above it can still win on exact distance, so applying
+    it under the cascade would be unsound.
     """
     delta = engine.delta
     tomb = delta.tombstone_array() if delta is not None else np.zeros(0, np.int64)
-    k_fetch = k + (overfetch if overfetch is not None else k) if tomb.size else k
+    rerank = engine.rerank == "exact"
+    over = k + (overfetch if overfetch is not None else k)
+    if rerank:
+        from repro.retrieval.engine import round_capacity
+
+        kp = engine.k_prime(k)
+        # the tombstone filter eats candidates from the cascade window, so
+        # the overfetch depth must absorb them relative to k' (not k) --
+        # pow2-bucketed with floor kp so the no-tombstone case stays at k'
+        base = kp + tomb.size if tomb.size else kp
+        k_fetch = round_capacity(max(base, over if tomb.size else 0), floor=kp)
+    else:
+        k_fetch = over if tomb.size else k
     plan = engine.plan_batch(queries, nprobe, pairs_per_dev=pairs_per_dev)
-    main_d, main_i = engine.execute_plan(plan, k_fetch)
+    if rerank:
+        handle = engine.dispatch_plan(plan, k_fetch)
+        handle = engine.dispatch_rerank(handle, queries, k_fetch)
+        main_d, main_i = engine.collect(handle)
+    else:
+        main_d, main_i = engine.execute_plan(plan, k_fetch)
     delta_d = delta_i = None
     if delta is not None and delta.live_count > 0:
-        bound = delta_prune_bound(engine, plan, k, k_fetch, tomb.size)
-        delta_d, delta_i = engine_delta_topk(
-            engine, queries, nprobe, k, bound=bound
-        )
+        if rerank:
+            kd = min(k_fetch, delta.capacity)
+            delta_d, delta_i = engine_delta_topk(
+                engine, queries, nprobe, kd, bound=None
+            )
+            delta_d, delta_i = delta_exact_rerank(
+                delta, queries, delta_d, delta_i, interpret=engine.interpret
+            )
+        else:
+            bound = delta_prune_bound(engine, plan, k, k_fetch, tomb.size)
+            delta_d, delta_i = engine_delta_topk(
+                engine, queries, nprobe, k, bound=bound
+            )
     return merge_results(main_d, main_i, delta_d, delta_i, tomb, k)
 
 
@@ -210,6 +298,27 @@ def compact_engine(
     engine.placement = new_placement
     engine.shards = new_shards
     engine._dev_arrays = None  # next dispatch re-ships the packed arrays
+    if engine.raw is not None:
+        # fold the same merge into the raw-vector shard: live delta rows
+        # append (original-space vectors kept at insert time), tombstoned
+        # ids unmap; pow2 growth folds into the shapes_changed signal
+        live = delta.live_mask()[: delta.n]
+        add_ids = delta.vec_ids[: delta.n][live].astype(np.int64)
+        if add_ids.size and delta.vectors is None:
+            raise RuntimeError(
+                "raw store attached but delta kept no vectors; "
+                "inserts must go through insert_into/DeltaIndex.insert"
+            )
+        add_vecs = (
+            delta.vectors[: delta.n][live]
+            if delta.vectors is not None
+            else np.zeros((0, engine.raw.dim), np.float32)
+        )
+        engine.raw, raw_changed = update_raw_store(
+            engine.raw, add_ids, add_vecs, delta.tombstone_array()
+        )
+        engine._raw_arrays = None
+        shapes_changed = shapes_changed or raw_changed
     delta.reset()
     return CompactionReport(
         merged=info.merged,

@@ -209,6 +209,102 @@ def _device_search(
     return out_d, out_i, prune_dev
 
 
+def rerank_static_key(
+    *,
+    ndev: int,
+    n_queries: int,
+    k_cand: int,
+    k_out: int,
+    dim: int,
+    row_capacity: int,
+    ids_capacity: int,
+    dtype: str,
+) -> tuple:
+    """Compilation-cache key of one `sharded_rerank` instance.
+
+    Mirrors `search_static_key`: the serving layer warms one executable per
+    key and asserts steady-state batches never recompile.  `row_capacity` /
+    `ids_capacity` come from `RawStore.shape_key()` -- pow2-bucketed, so
+    moderate churn keeps the key stable."""
+    return ("rerank", ndev, n_queries, k_cand, k_out, dim,
+            row_capacity, ids_capacity, dtype)
+
+
+def _device_rerank(
+    raw,        # (rcap, D) f32/bf16     [device-local]
+    id_dev,     # (ids_cap,) int32       [replicated]
+    id_row,     # (ids_cap,) int32       [replicated]
+    queries,    # (Q, D) f32             [replicated]
+    cand,       # (Q, Kc) int32 global candidate ids  [replicated]
+    *,
+    k_out: int,
+    interpret: bool | None,
+):
+    my = jax.lax.axis_index(DPU_AXIS)
+    n_ids = id_dev.shape[0]
+    cid = jnp.clip(cand, 0, n_ids - 1)
+    owner = id_dev[cid]                                  # (Q, Kc)
+    valid = (cand >= 0) & (owner >= 0)
+    owned = valid & (owner == my)
+    rows = jnp.where(owned, id_row[cid], 0)
+    vecs = raw[rows]                                     # (Q, Kc, D) gather
+    part = ops.rerank_dists(queries, vecs, interpret=interpret)
+    part = jnp.where(owned, part, 0.0)
+    # each (q, c) has exactly ONE owning device, so this f32 psum adds the
+    # true partial to zeros only -- bit-exact in any reduction order
+    dists = jax.lax.psum(part, DPU_AXIS)
+    dists = jnp.where(valid, dists, jnp.inf)
+
+    # tie-aware selection: stable sort by exact distance, ties broken by
+    # ADC candidate position (so the cascade's output is deterministic and
+    # matches the brute-force oracle's stable argsort bit-for-bit)
+    sel = jnp.argsort(dists, axis=-1, stable=True)[:, :k_out]
+    out_d = jnp.take_along_axis(dists, sel, axis=-1)
+    out_i = jnp.take_along_axis(cand, sel, axis=-1)
+    out_i = jnp.where(jnp.isfinite(out_d), out_i, -1)
+    return out_d, out_i
+
+
+@functools.partial(
+    jax.jit, static_argnames=("mesh", "k_out", "interpret")
+)
+def sharded_rerank(
+    raw, id_dev, id_row, queries, cand,
+    *,
+    mesh: jax.sharding.Mesh,
+    k_out: int,
+    interpret: bool | None = None,
+):
+    """Exact re-rank of ADC candidates against the sharded raw-vector store.
+
+    Second cascade stage: `cand` ((Q, Kc) int32) holds the global ids the
+    overfetched ADC scan surfaced (−1 = absent).  Each device gathers the
+    candidates whose home it is from its `raw` shard ((ndev, rcap, D)),
+    computes exact f32 squared-L2 partials with the Pallas re-rank kernel,
+    and a psum over the 'dpu' axis reassembles full distances (bit-exact:
+    one non-zero contributor per element).  Selection is a stable argsort,
+    ties broken by candidate position, so the output top-`k_out` is
+    bit-identical to a brute-force fp32 re-rank of the same candidate set.
+
+    Candidates that are −1 or unmapped in `id_dev` come back as
+    (+inf, −1) and sort last.  Returns (out_d (Q, k_out), out_i (Q, k_out)),
+    both replicated.
+    """
+    spec_dev = jax.sharding.PartitionSpec(DPU_AXIS)
+    spec_rep = jax.sharding.PartitionSpec()
+    fn = functools.partial(_device_rerank, k_out=k_out, interpret=interpret)
+
+    def per_device(raw, id_dev, id_row, queries, cand):
+        return fn(raw[0], id_dev, id_row, queries, cand)
+
+    return _shard_map(
+        per_device,
+        mesh=mesh,
+        in_specs=(spec_dev, spec_rep, spec_rep, spec_rep, spec_rep),
+        out_specs=(spec_rep, spec_rep),
+    )(raw, id_dev, id_row, queries, cand)
+
+
 @functools.partial(
     jax.jit,
     static_argnames=(

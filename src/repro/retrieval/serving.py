@@ -51,16 +51,22 @@ import time
 import numpy as np
 
 from repro.core.delta import merge_results
+from repro.kernels import ops
 from repro.retrieval.engine import MemANNSEngine, SearchPlan, round_capacity
 from repro.retrieval.mutation import (
     compact_engine,
     delete_from,
+    delta_exact_rerank,
     delta_prune_bound,
     engine_delta_topk,
     ensure_delta,
     insert_into,
 )
-from repro.retrieval.search import InFlightSearch, search_static_key
+from repro.retrieval.search import (
+    InFlightSearch,
+    rerank_static_key,
+    search_static_key,
+)
 
 
 # per-batch latency samples retained for the percentile estimators; a
@@ -71,33 +77,79 @@ LATENCY_WINDOW = 4096
 
 @dataclasses.dataclass
 class ServingStats:
-    """Counters accumulated across `ServingEngine` batches."""
+    """Counters accumulated across `ServingEngine` batches.
+
+    This is the single place every field is documented; the serving layer,
+    `benchmarks/bench_qps.py` / `bench_pipeline.py` / `bench_mutation.py`,
+    and `launch/serve.py` all report subsets of these.
+
+    Throughput / pipeline:
+      batches: micro-batches collected.
+      queries: real (unpadded) queries served.
+      compiles: searches that hit a non-warmed (cold) executable shape —
+        the zero-steady-state-recompile contract is `compiles == 0` after
+        `warmup()` for any in-config traffic.  Covers the main scan, the
+        delta scan, and the re-rank stage (each has its own cache key).
+      host_s: host-side planning seconds (cluster filter + Algorithm 2 +
+        densify + plan-time delta scans).
+      device_s: dispatch + blocked-collect seconds (incl. transfers).
+      overlap_s: host planning seconds spent while a batch was in flight —
+        planning hidden behind device work by the pipeline.
+      latencies_s: per-micro-batch plan→collect latency samples, last
+        `LATENCY_WINDOW` batches (feeds `p50_s`/`p99_s`).
+      bucket_hits: {pairs_per_dev bucket: times dispatched} histogram.
+
+    Scan / early-pruning telemetry:
+      rows_scanned: total code rows visited by collected batches.
+      tiles_dispatched: non-empty code tiles handed to the kernels.
+      tiles_skipped: tile bodies the pruning-bound check skipped whole.
+      rows_pruned: valid rows inside those skipped tiles.
+      warm_bound_queries: real queries dispatched with a finite warm-start
+        bound (the bound-availability gauge).
+      prune_fracs: per-batch skipped/dispatched tile fraction samples,
+        windowed like `latencies_s` (feeds `prune_percentile`).
+
+    Re-rank cascade (rerank="exact" only):
+      reranked_queries: real queries whose results went through the exact
+        re-rank stage.
+      rerank_candidates: total overfetched candidates re-scored at full
+        precision (reranked_queries × the serving k' bucket).
+
+    Mutation (mutable serving only):
+      inserts: vectors appended to the delta buffer.
+      deletes: ids tombstoned.
+      compactions: delta→main merges triggered (auto or explicit).
+      starved_batches: batches where tombstones ate some query's whole
+        overfetch window (results truncated once; triggers compaction).
+      delta_occupancy: delta buffer fill fraction (gauge, last mutation).
+      tombstones: live tombstone count (gauge, last mutation).
+      compaction_s: per-compaction latency seconds (feeds
+        `compaction_mean_s`).
+    """
 
     batches: int = 0
     queries: int = 0
-    compiles: int = 0      # searches that hit a non-warmed (cold) shape
-    host_s: float = 0.0    # cluster filter + Algorithm 2 + densify
-    device_s: float = 0.0  # dispatch + blocked collect (incl. transfers)
-    overlap_s: float = 0.0  # host planning done while a batch was in flight
-    rows_scanned: int = 0   # total code rows visited by collected batches
-    # --- early-pruning telemetry (bound-driven whole-tile skips) ---
-    tiles_dispatched: int = 0  # non-empty code tiles handed to the kernels
-    tiles_skipped: int = 0     # tile bodies the bound check skipped
-    rows_pruned: int = 0       # valid rows inside those skipped tiles
-    warm_bound_queries: int = 0  # queries dispatched with a finite warm start
-    # --- mutation counters (mutable serving only) ---
-    inserts: int = 0        # vectors appended to the delta buffer
-    deletes: int = 0        # ids tombstoned
-    compactions: int = 0    # delta -> main merges triggered
-    starved_batches: int = 0  # batches where tombstones ate a full overfetch
-    delta_occupancy: float = 0.0  # buffer fill fraction (gauge)
-    tombstones: int = 0     # live tombstone count (gauge)
+    compiles: int = 0
+    host_s: float = 0.0
+    device_s: float = 0.0
+    overlap_s: float = 0.0
+    rows_scanned: int = 0
+    tiles_dispatched: int = 0
+    tiles_skipped: int = 0
+    rows_pruned: int = 0
+    warm_bound_queries: int = 0
+    reranked_queries: int = 0
+    rerank_candidates: int = 0
+    inserts: int = 0
+    deletes: int = 0
+    compactions: int = 0
+    starved_batches: int = 0
+    delta_occupancy: float = 0.0
+    tombstones: int = 0
     compaction_s: list[float] = dataclasses.field(default_factory=list)
     latencies_s: collections.deque = dataclasses.field(
         default_factory=lambda: collections.deque(maxlen=LATENCY_WINDOW)
     )
-    # per-batch prune effectiveness samples (skipped / dispatched tiles),
-    # windowed like the latency samples so both report the same traffic
     prune_fracs: collections.deque = dataclasses.field(
         default_factory=lambda: collections.deque(maxlen=LATENCY_WINDOW)
     )
@@ -179,6 +231,13 @@ class ServingEngine:
         compaction re-places the cluster via Algorithm 1.
       delta_capacity: initial delta-buffer rows (pow2-bucketed; growth
         beyond a warmed bucket is an honest cold compile).
+
+    The re-rank cascade is configured on the ENGINE (`rerank="exact"` +
+    `k_overfetch`), not here: serving reads `engine.rerank` and serves
+    the cascade through one fixed fetch bucket (`_k_fetch`) so mutation
+    state never shifts executable shapes; `warmup()` then chains the
+    re-rank executable (and, mutable, the host delta re-rank kernel) into
+    the warmed set, keeping `stats.compiles == 0` in steady state.
     """
 
     def __init__(
@@ -253,12 +312,51 @@ class ServingEngine:
     def _delta_key(self) -> tuple:
         """Compile-cache key of the jitted delta search for this config."""
         d = self.engine.delta
-        return ("delta", self.micro_batch, d.capacity, self.nprobe, self.k)
+        return (
+            "delta", self.micro_batch, d.capacity, self.nprobe,
+            self._delta_k(), self.engine.rerank,
+        )
+
+    def _delta_k(self) -> int:
+        """Rows fetched from the delta scan per query (the jitted k)."""
+        if self.engine.rerank == "exact":
+            d = self.engine.delta
+            cap = d.capacity if d is not None else self._k_fetch()
+            return min(self._k_fetch(), cap)
+        return self.k
+
+    def _rerank_key(self, k_cand: int, k_out: int) -> tuple:
+        """Compile-cache key of the re-rank executable for this config."""
+        r = self.engine.raw
+        return rerank_static_key(
+            ndev=self.engine.shards.ndev,
+            n_queries=self.micro_batch,
+            k_cand=k_cand,
+            k_out=k_out,
+            dim=r.dim,
+            row_capacity=r.row_capacity,
+            ids_capacity=r.ids_capacity,
+            dtype=r.dtype,
+        )
 
     def _k_fetch(self) -> int:
-        """Main-path fetch size: overfetched while tombstones exist so the
-        collect-time filter can absorb up to `overfetch` dead rows per
-        query (starvation beyond that triggers a compaction; see search)."""
+        """Main-path fetch size for this serving config.
+
+        Plain path: `k`, widened to `k + overfetch` while tombstones exist
+        so the collect-time filter can absorb up to `overfetch` dead rows
+        per query (starvation beyond that triggers a compaction; see
+        search).
+
+        Cascade path (rerank="exact"): ONE fixed pow2 bucket for the whole
+        stream — `k'` when immutable, `round_capacity(k' + overfetch)`
+        when mutable (tombstone headroom included up front) — so mutation
+        state never shifts the executable shape mid-stream and the
+        compiles==0 contract holds under churn."""
+        if self.engine.rerank == "exact":
+            kp = self.engine.k_prime(self.k)
+            if self.mutable:
+                return round_capacity(kp + self.overfetch, floor=kp)
+            return kp
         d = self.engine.delta
         if d is not None and d.tombstone_count > 0:
             return self.k + self.overfetch
@@ -340,9 +438,21 @@ class ServingEngine:
         tile-count drift either.
         """
         buckets = sorted(buckets or self.default_buckets())
-        # the mutable path additionally needs the overfetched executables
-        # (tombstone filtering fetches k + overfetch) and the delta search
-        ks = [self.k] + ([self.k + self.overfetch] if self.mutable else [])
+        rerank = self.engine.rerank == "exact"
+        dim = self.engine.index.centroids.shape[1]
+        if rerank:
+            # the cascade serves one fixed fetch bucket for the whole
+            # stream (see _k_fetch), so exactly one (scan k', rerank) pair
+            # needs warming per plan bucket
+            ks = [self._k_fetch()]
+            k_out = self._k_fetch() if self.mutable else self.k
+            dummy_q = np.zeros((self.micro_batch, dim), np.float32)
+        else:
+            # the mutable path additionally needs the overfetched
+            # executables (tombstone filtering fetches k + overfetch)
+            ks = [self.k] + (
+                [self.k + self.overfetch] if self.mutable else []
+            )
         for b in buckets:
             tile_caps = (
                 self.tile_buckets(b) if self.engine.scan == "tiles" else [0]
@@ -350,7 +460,15 @@ class ServingEngine:
             for t in tile_caps:
                 plan = self._dummy_plan(b, t)
                 for kf in ks:
-                    self.engine.execute_plan(plan, kf)
+                    if rerank:
+                        handle = self.engine.dispatch_plan(plan, kf)
+                        handle = self.engine.dispatch_rerank(
+                            handle, dummy_q, k_out
+                        )
+                        self.engine.collect(handle)
+                        self._warm.add(self._rerank_key(kf, k_out))
+                    else:
+                        self.engine.execute_plan(plan, kf)
                     self._warm.add(self._key(plan, kf))
         # warm the host path too (filter_clusters jit for this batch shape);
         # auto capacity, so a degenerate dummy schedule can never overflow
@@ -365,12 +483,21 @@ class ServingEngine:
     def _warm_delta(self) -> None:
         """Compile the delta search for the current capacity bucket."""
         dim = self.engine.index.centroids.shape[1]
+        kd = self._delta_k()
         engine_delta_topk(
             self.engine,
             np.zeros((self.micro_batch, dim), np.float32),
             self.nprobe,
-            self.k,
+            kd,
         )
+        if self.engine.rerank == "exact":
+            # the delta cascade re-ranks on the host kernel at a fixed
+            # (micro_batch, kd, dim) shape — warm that executable too
+            ops.rerank_dists(
+                np.zeros((self.micro_batch, dim), np.float32),
+                np.zeros((self.micro_batch, kd, dim), np.float32),
+                interpret=self.engine.interpret,
+            )
         self._warm.add(self._delta_key())
 
     # ------------------------------------------------------------------ #
@@ -415,6 +542,18 @@ class ServingEngine:
         if key not in self._warm:  # capacity grew past the warmed bucket
             self.stats.compiles += 1
             self._warm.add(key)
+        if self.engine.rerank == "exact":
+            # cascade: the ADC prune bound lives in ADC space and a row
+            # above it can still win on exact distance, so the delta scan
+            # runs unbounded; candidates are re-ranked on raw delta rows
+            kd = self._delta_k()
+            dd, di = engine_delta_topk(
+                self.engine, padded, self.nprobe, kd, bound=None
+            )
+            dd, di = delta_exact_rerank(
+                delta, padded, dd, di, interpret=self.engine.interpret
+            )
+            return dd, di, tomb
         bound = delta_prune_bound(
             self.engine, plan, self.k, k_fetch, tomb.size
         )
@@ -424,14 +563,19 @@ class ServingEngine:
         return dd, di, tomb
 
     def _dispatch_micro_batch(
-        self, plan: SearchPlan, k_fetch: int | None = None
+        self,
+        plan: SearchPlan,
+        k_fetch: int | None = None,
+        queries: np.ndarray | None = None,
     ) -> InFlightSearch:
         """Dispatch a planned micro-batch; update warm/compile + load state.
 
         The load EWMA folds in this plan's host-computed row counts *now*
         (not at collect) so the carry is identical at every pipeline depth.
         `k_fetch` defaults to the serving k; the mutable path overfetches
-        while tombstones exist.
+        while tombstones exist.  With rerank="exact", `queries` (the padded
+        micro-batch) must be passed and the exact re-rank stage is chained
+        onto the dispatched scan before the handle returns.
         """
         if k_fetch is None:
             k_fetch = self.k
@@ -440,6 +584,15 @@ class ServingEngine:
             self.stats.compiles += 1
             self._warm.add(key)
         handle = self.engine.dispatch_plan(plan, k_fetch)
+        if self.engine.rerank == "exact":
+            # immutable: cut to k here; mutable: keep the full fetch window
+            # so the collect-time tombstone filter has rows to absorb
+            k_out = k_fetch if self.mutable else self.k
+            rkey = self._rerank_key(k_fetch, k_out)
+            if rkey not in self._warm:
+                self.stats.compiles += 1
+                self._warm.add(rkey)
+            handle = self.engine.dispatch_rerank(handle, queries, k_out)
         if self.load_feedback:
             self._load_ewma = (
                 self.load_alpha * handle.dev_rows.astype(np.float64)
@@ -487,6 +640,9 @@ class ServingEngine:
             self.stats.warm_bound_queries += int(
                 np.isfinite(handle.query_bound[:q_n]).sum()
             )
+        if self.engine.rerank == "exact":
+            self.stats.reranked_queries += q_n
+            self.stats.rerank_candidates += q_n * self._k_fetch()
         if mut is not None:
             dd, di, tomb = mut
             d, i = merge_results(d, i, dd, di, tomb, self.k)
@@ -524,7 +680,7 @@ class ServingEngine:
             outs_i.append(i)
 
         mutating = self.engine.mutation_active
-        k_fetch = self._k_fetch() if mutating else self.k
+        k_fetch = self._k_fetch()
         for s in range(0, queries.shape[0], self.micro_batch):
             chunk = queries[s : s + self.micro_batch]
             t0 = time.perf_counter()
@@ -539,7 +695,7 @@ class ServingEngine:
             self.stats.host_s += t1 - t0
             if inflight:  # host planning hidden behind in-flight device work
                 self.stats.overlap_s += t1 - t0
-            handle = self._dispatch_micro_batch(plan, k_fetch)
+            handle = self._dispatch_micro_batch(plan, k_fetch, padded)
             t2 = time.perf_counter()
             self.stats.device_s += t2 - t1
             inflight.append((handle, chunk.shape[0], t0, mut))

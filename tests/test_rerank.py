@@ -1,0 +1,243 @@
+"""Exact re-rank cascade: PQ -> full-precision, the cascade contract wall.
+
+What is pinned here:
+
+  * cascade exactness: the engine's fused rerank path is BIT-IDENTICAL to
+    a host fp32 re-rank of the same overfetched ADC candidate set through
+    the same kernel shape, ties broken by ADC candidate position;
+  * recall@10 strictly improves on the PQ-only scan at a fixed seed (the
+    whole point of spending k' exact distance evaluations per query);
+  * serving records ZERO steady-state recompiles over a 200-query ragged
+    stream with rerank=exact, on both device scan variants (one fixed
+    fetch bucket, pow2 shapes);
+  * mutable churn twin: after interleaved inserts/deletes + compaction,
+    search is bit-identical to a from-scratch rebuild over the survivors
+    when the overfetch window covers every probed row (the candidate sets
+    then provably coincide);
+  * OPQ rotation: orthonormal, composes with the cascade (raw store and
+    re-rank stay in the ORIGINAL space), checkpoint round-trips rotation,
+    delta raw vectors and the RawStore.
+"""
+
+import dataclasses
+
+import numpy as np
+import jax
+import pytest
+
+from repro.checkpoint import load_index, load_raw_store, save_index
+from repro.core.index import brute_force, encode_index, recall_at_k
+from repro.core.placement import place_clusters
+from repro.kernels import ops
+from repro.retrieval import MemANNSEngine, ServingEngine
+from repro.retrieval.layout import build_shards
+
+NPROBE = 8
+K = 10
+N0 = 12000  # clustered_data corpus rows (ids 0..N0-1)
+
+
+@pytest.fixture(scope="module")
+def rr_engine(clustered_data):
+    xs, centers, qs, hist = clustered_data
+    return MemANNSEngine.build(
+        jax.random.PRNGKey(0), xs, n_clusters=32, m=8,
+        history_queries=hist, use_cooc=False, n_combos=32,
+        block_n=256, kmeans_iters=8, pq_iters=6,
+        rerank="exact", k_overfetch=128,
+    )
+
+
+def host_cascade(eng, xs, qs, nprobe, k):
+    """Brute-force fp32 re-rank of the engine's own ADC candidate set.
+
+    Same kernel (`ops.rerank_dists`) at the same (Q, k', D) shape as the
+    sharded path -> identical f32 reduction order -> identical bits; the
+    selection is a stable argsort, ties broken by ADC candidate position.
+    """
+    kp = eng.k_prime(k)
+    adc_d, adc_i = eng.collect(eng.dispatch_plan(eng.plan_batch(qs, nprobe), kp))
+    # ADC kernels pad past-the-end lanes with (+inf, junk-id): mask them
+    # exactly as dispatch_rerank does before re-scoring
+    cand = np.where(np.isfinite(adc_d), adc_i, -1)
+    vecs = xs[np.clip(cand, 0, None)].astype(np.float32)
+    exact = np.asarray(ops.rerank_dists(qs, vecs))
+    exact = np.where(cand >= 0, exact, np.inf)
+    sel = np.argsort(exact, axis=-1, kind="stable")[:, :k]
+    out_d = np.take_along_axis(exact, sel, axis=-1)
+    out_i = np.take_along_axis(cand, sel, axis=-1)
+    return out_d, np.where(np.isfinite(out_d), out_i, -1)
+
+
+def test_cascade_exactness(rr_engine, clustered_data):
+    xs, _, qs, _ = clustered_data
+    ref_d, ref_i = host_cascade(rr_engine, xs, qs, NPROBE, K)
+    got_d, got_i = rr_engine.search(qs, nprobe=NPROBE, k=K)
+    np.testing.assert_array_equal(got_i, ref_i)
+    np.testing.assert_array_equal(got_d, ref_d)
+
+
+def test_recall_strict_improvement(rr_engine, clustered_data):
+    xs, _, qs, _ = clustered_data
+    _, gt = brute_force(xs, qs, K)
+    eng_off = dataclasses.replace(rr_engine, rerank="off")
+    _, i_off = eng_off.search(qs, nprobe=NPROBE, k=K)
+    _, i_on = rr_engine.search(qs, nprobe=NPROBE, k=K)
+    r_off = recall_at_k(i_off, gt)
+    r_on = recall_at_k(i_on, gt)
+    assert r_on > r_off, (r_on, r_off)
+    assert r_on >= 0.9, r_on  # fixed seed: the cascade should be near-exact
+
+
+def test_rerank_respects_overfetch_window(rr_engine, clustered_data):
+    """Every returned id is one of the overfetched ADC candidates: the
+    cascade re-orders the superset, it never introduces new rows."""
+    xs, _, qs, _ = clustered_data
+    kp = rr_engine.k_prime(K)
+    adc_d, adc_i = rr_engine.collect(
+        rr_engine.dispatch_plan(rr_engine.plan_batch(qs, NPROBE), kp)
+    )
+    _, i_on = rr_engine.search(qs, nprobe=NPROBE, k=K)
+    for q in range(qs.shape[0]):
+        allowed = set(adc_i[q][np.isfinite(adc_d[q])].tolist())
+        assert set(i_on[q].tolist()) <= allowed
+
+
+@pytest.mark.parametrize("scan", ["tiles", "windows"])
+def test_serving_zero_recompiles_ragged(rr_engine, clustered_data, scan):
+    xs, centers, _, _ = clustered_data
+    eng = dataclasses.replace(rr_engine, scan=scan)
+    srv = ServingEngine(eng, nprobe=NPROBE, k=K, micro_batch=16)
+    srv.warmup()
+    rng = np.random.default_rng(7)
+    stream = (
+        centers[rng.integers(0, 32, 200)]
+        + rng.normal(0, 1, (200, 32))
+    ).astype(np.float32)
+    # ragged request lengths exercising every pad/split shape
+    lens = [16, 1, 7, 16, 32, 3, 16, 9, 40, 16, 28, 16]
+    assert sum(lens) == 200
+    outs_d, outs_i, pos = [], [], 0
+    for L in lens:
+        d, i = srv.search(stream[pos:pos + L])
+        outs_d.append(d)
+        outs_i.append(i)
+        pos += L
+    sd, si = np.concatenate(outs_d), np.concatenate(outs_i)
+    assert srv.stats.compiles == 0, srv.stats
+    assert srv.stats.queries == 200
+    assert srv.stats.reranked_queries == 200
+    assert srv.stats.rerank_candidates == 200 * srv._k_fetch()
+    ed, ei = eng.search(stream, nprobe=NPROBE, k=K)
+    np.testing.assert_array_equal(si, ei)
+    np.testing.assert_allclose(sd, ed, rtol=1e-5, atol=1e-5)
+
+
+def test_mutable_churn_twin_vs_scratch_rebuild(clustered_data):
+    """Churn + compaction, then bit-identity to a from-scratch rebuild.
+
+    The cascade's output is a function of the ADC-chosen candidate set, so
+    twin equality needs the overfetch window to cover every probed row --
+    then both engines re-rank the SAME (full) probed set and the exact
+    distances decide, independent of ADC layout history.  k_overfetch=2048
+    with nprobe=4 over ~375-row clusters keeps every probed row in-window.
+    """
+    xs, centers, qs, hist = clustered_data
+    eng = MemANNSEngine.build(
+        jax.random.PRNGKey(0), xs, n_clusters=32, m=8,
+        history_queries=hist, use_cooc=False, n_combos=32,
+        block_n=256, kmeans_iters=8, pq_iters=6,
+        rerank="exact", k_overfetch=2048,
+        mutable=True, delta_capacity=2048,
+    )
+    rng = np.random.default_rng(11)
+    from repro.retrieval.mutation import compact_engine, delete_from, insert_into
+
+    new_ids = np.arange(N0, N0 + 120, dtype=np.int32)
+    new_xs = (
+        centers[rng.integers(0, 32, 120)]
+        + rng.normal(0, 1, (120, 32))
+    ).astype(np.float32)
+    insert_into(eng, new_ids, new_xs)
+    dels = rng.choice(N0, 80, replace=False).astype(np.int64)
+    delete_from(eng, dels)
+    # mid-churn: tombstoned ids never surface through the cascade
+    d_mid, i_mid = eng.search(qs[:8], nprobe=4, k=K)
+    assert not np.isin(i_mid, dels).any()
+    compact_engine(eng)
+    got_d, got_i = eng.search(qs[:8], nprobe=4, k=K)
+    assert not np.isin(got_i, dels).any()
+
+    # from-scratch twin over the survivors (same trained centroids/codebook)
+    keep = np.ones(N0, bool)
+    keep[dels] = False
+    xs_surv = np.concatenate([xs[keep], new_xs]).astype(np.float32)
+    ids_surv = np.concatenate([np.arange(N0)[keep], new_ids]).astype(np.int32)
+    idx = encode_index(
+        eng.index.centroids, eng.index.codebook, xs_surv, ids_surv,
+        rotation=eng.index.rotation,
+    )
+    pl = place_clusters(
+        idx.cluster_sizes().astype(np.float64), eng.freqs,
+        eng.shards.ndev, centroids=idx.centroids,
+    )
+    sh = build_shards(idx, pl, use_cooc=False, block_n=eng.shards.block_n)
+    twin = MemANNSEngine(
+        index=idx, placement=pl, shards=sh, mesh=eng.mesh, scan=eng.scan,
+        rerank="exact", k_overfetch=2048,
+    )
+    twin.attach_raw_store(xs_surv, xs_ids=ids_surv)
+    ref_d, ref_i = twin.search(qs[:8], nprobe=4, k=K)
+    np.testing.assert_array_equal(got_i, ref_i)
+    np.testing.assert_array_equal(got_d, ref_d)
+
+
+def test_opq_rotation_composes_with_cascade(clustered_data):
+    xs, _, qs, _ = clustered_data
+    eng = MemANNSEngine.build(
+        jax.random.PRNGKey(0), xs, n_clusters=32, m=8,
+        use_cooc=False, block_n=256, kmeans_iters=6, pq_iters=4,
+        opq_iters=2, rerank="exact", k_overfetch=128,
+    )
+    rot = eng.index.rotation
+    assert rot is not None
+    np.testing.assert_allclose(
+        rot @ rot.T, np.eye(rot.shape[0]), atol=1e-4
+    )
+    # the cascade oracle holds under rotation: candidates come from the
+    # rotated ADC scan, the re-rank runs in the ORIGINAL space
+    ref_d, ref_i = host_cascade(eng, xs, qs, NPROBE, K)
+    got_d, got_i = eng.search(qs, nprobe=NPROBE, k=K)
+    np.testing.assert_array_equal(got_i, ref_i)
+    np.testing.assert_array_equal(got_d, ref_d)
+    _, gt = brute_force(xs, qs, K)
+    assert recall_at_k(got_i, gt) >= 0.9
+
+
+def test_checkpoint_roundtrip_rotation_vectors_raw(tmp_path, clustered_data):
+    xs, centers, _, _ = clustered_data
+    eng = MemANNSEngine.build(
+        jax.random.PRNGKey(0), xs, n_clusters=32, m=8,
+        use_cooc=False, block_n=256, kmeans_iters=4, pq_iters=3,
+        opq_iters=1, rerank="exact", k_overfetch=64,
+        mutable=True, delta_capacity=512,
+    )
+    from repro.retrieval.mutation import insert_into
+
+    ids = np.arange(N0, N0 + 16, dtype=np.int32)
+    vecs = centers[:16].astype(np.float32)
+    insert_into(eng, ids, vecs)
+    path = save_index(
+        str(tmp_path / "ckpt"), eng.index, delta=eng.delta, raw=eng.raw,
+    )
+    idx2, delta2, _ = load_index(path)
+    raw2 = load_raw_store(path)
+    np.testing.assert_array_equal(idx2.rotation, eng.index.rotation)
+    np.testing.assert_array_equal(
+        delta2.vectors[:delta2.n], eng.delta.vectors[:eng.delta.n]
+    )
+    assert raw2 is not None and raw2.dtype == eng.raw.dtype
+    np.testing.assert_array_equal(raw2.vectors, eng.raw.vectors)
+    np.testing.assert_array_equal(raw2.id_dev, eng.raw.id_dev)
+    np.testing.assert_array_equal(raw2.id_row, eng.raw.id_row)
+    np.testing.assert_array_equal(raw2.used, eng.raw.used)

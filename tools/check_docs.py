@@ -1,0 +1,86 @@
+"""Docs link-check: every relative link and file:line code ref must resolve.
+
+``python tools/check_docs.py [paths...]`` — defaults to README.md plus
+every markdown file under docs/.  Exits non-zero listing each broken
+reference, so CI catches docs rot (renamed modules, deleted tests, stale
+line references) the same way it catches failing tests.
+
+Checked:
+  * markdown links/images ``[text](target)`` with a relative target:
+    the target (minus any #fragment) must exist relative to the doc's
+    directory.  http(s)/mailto/anchor-only targets are skipped, as are
+    GitHub web-UI paths (``.../actions/workflows/...`` badges), which
+    have no filesystem counterpart;
+  * inline code refs like ``src/repro/kernels/rerank.py:42``: the file
+    must exist (relative to the repo root or the doc's directory) and
+    contain at least that many lines.
+"""
+
+from __future__ import annotations
+
+import re
+import sys
+from pathlib import Path
+
+ROOT = Path(__file__).resolve().parent.parent
+
+LINK_RE = re.compile(r"!?\[[^\]]*\]\(([^)\s]+)\)")
+CODE_REF_RE = re.compile(
+    r"`([A-Za-z0-9_.\-/]+\.(?:py|md|yml|yaml|toml|json|txt)):(\d+)`"
+)
+SKIP_PREFIXES = ("http://", "https://", "mailto:", "#")
+
+
+def check_file(doc: Path) -> list[str]:
+    errors = []
+    text = doc.read_text()
+    rel = doc.relative_to(ROOT)
+    for m in LINK_RE.finditer(text):
+        target = m.group(1)
+        if target.startswith(SKIP_PREFIXES):
+            continue
+        if "/actions/workflows/" in target:  # GitHub web UI, not a file
+            continue
+        path = target.split("#", 1)[0]
+        if not path:
+            continue
+        resolved = (doc.parent / path).resolve()
+        if not resolved.exists():
+            errors.append(f"{rel}: broken link -> {target}")
+    for m in CODE_REF_RE.finditer(text):
+        path, line = m.group(1), int(m.group(2))
+        for base in (ROOT, doc.parent):
+            candidate = (base / path).resolve()
+            if candidate.is_file():
+                n_lines = len(candidate.read_text().splitlines())
+                if line > n_lines:
+                    errors.append(
+                        f"{rel}: {path}:{line} beyond end of file "
+                        f"({n_lines} lines)"
+                    )
+                break
+        else:
+            errors.append(f"{rel}: code ref -> missing file {path}:{line}")
+    return errors
+
+
+def main(argv: list[str]) -> int:
+    if argv:
+        docs = [Path(a).resolve() for a in argv]
+    else:
+        docs = [ROOT / "README.md", *sorted((ROOT / "docs").glob("*.md"))]
+    errors = []
+    for doc in docs:
+        if not doc.is_file():
+            errors.append(f"missing doc: {doc}")
+            continue
+        errors.extend(check_file(doc))
+    for e in errors:
+        print(f"ERROR: {e}")
+    print(f"checked {len(docs)} docs: "
+          f"{'FAIL' if errors else 'ok'} ({len(errors)} broken refs)")
+    return 1 if errors else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main(sys.argv[1:]))
