@@ -24,7 +24,7 @@ import traceback
 MODULES = [
     ("bench_breakdown", "Fig 1/18 stage breakdown"),
     ("bench_placement", "Fig 4/7 skew + placement balance"),
-    ("bench_cooc", "Fig 10 + Table 1 co-occurrence"),
+    ("bench_cooc", "Fig 10 + Table 1 co-occurrence + churn-stream QPS"),
     ("bench_qps", "Fig 13 QPS vs baseline + pipelined serving"),
     ("bench_scaling", "Fig 14 scaling with #devices"),
     ("bench_read_size", "Fig 9/15 MRAM-read-size analogue"),

@@ -1,17 +1,21 @@
 from repro.checkpoint.store import (
     latest_step,
+    load_engine,
     load_index,
     load_raw_store,
     restore,
     save,
+    save_engine,
     save_index,
 )
 
 __all__ = [
     "latest_step",
+    "load_engine",
     "load_index",
     "load_raw_store",
     "restore",
     "save",
+    "save_engine",
     "save_index",
 ]

@@ -242,6 +242,113 @@ def load_index(path: str):
     return index, delta, meta.get("extra", {})
 
 
+def save_engine(path: str, engine, extra: dict | None = None) -> str:
+    """Checkpoint a full `MemANNSEngine` — unified serving state.
+
+    One `save_index` call persisting the index, the live DeltaIndex
+    (buffered inserts + tombstones), the RawStore, and the engine/shard
+    configuration (scan variant, prune/rerank knobs, co-occ encoding
+    parameters, cluster frequency estimates) needed to rebuild the packed
+    shards on load.  The shards themselves are *not* serialized: they are
+    a deterministic function of (index, placement, config), and
+    `load_engine` re-derives the placement with `place_clusters` — search
+    results are placement-invariant (see tests/test_mutation.py's
+    scratch-rebuild contract), so the restored engine answers queries
+    bit-identically to the saved one.
+    """
+    s = engine.shards
+    cfg = {
+        "block_n": int(s.block_n),
+        "use_cooc": bool(s.n_combos > 0),
+        "n_combos": int(s.n_combos),
+        "combo_len": int(s.combo_addrs.shape[3]) if s.n_combos else 3,
+        "min_length_reduction": float(s.min_length_reduction),
+        "mine_rows": int(s.mine_rows),
+        "path": engine.path,
+        "scan": engine.scan,
+        "prune": bool(engine.prune),
+        "rerank": engine.rerank,
+        "k_overfetch": int(engine.k_overfetch),
+        "mutable": engine.delta is not None,
+        # json float repr is shortest-roundtrip, so freqs restore exactly
+        # and the re-derived placement matches a scratch build's
+        "freqs": None if engine.freqs is None else [
+            float(f) for f in engine.freqs
+        ],
+    }
+    return save_index(
+        path, engine.index, delta=engine.delta, raw=engine.raw,
+        extra={"engine": cfg, **(extra or {})},
+    )
+
+
+def load_engine(path: str, mesh=None, interpret: bool | None = None):
+    """Restore a `save_engine` checkpoint into a ready `MemANNSEngine`.
+
+    The placement is re-derived (Algorithm 1 over the restored sizes and
+    frequency estimates) and the shards repacked with the saved encoding
+    config — including co-occ re-mining, which is deterministic per
+    cluster, so a cooc engine restores to bit-identical codes.  Mutable
+    engines get the same shard growth slack `MemANNSEngine.build` uses.
+    Restoring onto a different device count is the elastic path: results
+    stay bit-identical because search output is placement-invariant.
+    """
+    import math as _math
+
+    from repro.core.placement import place_clusters
+    from repro.retrieval.engine import MemANNSEngine, make_dpu_mesh
+    from repro.retrieval.layout import build_shards
+
+    index, delta, extra = load_index(path)
+    if "engine" not in extra:
+        raise ValueError(
+            f"load_engine: checkpoint at {path!r} has no engine config "
+            "(saved with save_index, not save_engine?)"
+        )
+    cfg = extra["engine"]
+    mesh = mesh or make_dpu_mesh()
+    ndev = _math.prod(mesh.devices.shape)
+    n_clusters = index.n_clusters
+    if cfg.get("freqs") is not None:
+        freqs = np.asarray(cfg["freqs"], np.float64)
+    else:
+        freqs = np.ones(n_clusters) / n_clusters
+    placement = place_clusters(
+        index.cluster_sizes().astype(np.float64), freqs, ndev,
+        centroids=index.centroids,
+    )
+    mutable = bool(cfg.get("mutable")) and delta is not None
+    shards = build_shards(
+        index,
+        placement,
+        use_cooc=cfg["use_cooc"],
+        n_combos=cfg["n_combos"] if cfg["use_cooc"] else 256,
+        combo_len=cfg.get("combo_len", 3),
+        block_n=cfg["block_n"],
+        min_length_reduction=cfg.get("min_length_reduction", 0.0),
+        mine_rows=cfg.get("mine_rows", 50_000),
+        cap_slack=0.5 if mutable else 0.0,
+        slot_slack=4 if mutable else 0,
+        window_slack=2 if mutable else 0,
+    )
+    raw = load_raw_store(path)
+    return MemANNSEngine(
+        index=index,
+        placement=placement,
+        shards=shards,
+        mesh=mesh,
+        path=cfg.get("path", "gather"),
+        scan=cfg.get("scan", "tiles"),
+        prune=cfg.get("prune", True),
+        rerank=cfg.get("rerank", "off"),
+        k_overfetch=cfg.get("k_overfetch", 0),
+        interpret=interpret,
+        freqs=freqs,
+        delta=delta,
+        raw=raw,
+    )
+
+
 def load_raw_store(path: str):
     """Restore the raw-vector re-rank shard saved by `save_index(raw=...)`.
 

@@ -39,6 +39,15 @@ from repro.core.placement import Placement
 # The relative term dominates the ~(dsub + M) * 2^-24 accumulated rounding
 # of the kernels by orders of magnitude; the absolute term covers values
 # near zero.  Bit-identity never depends on tightness, only on direction.
+#
+# The margins cover co-occ re-encoded shards (§4.3) with no change: the
+# flat combo scan adds the SAME M LUT entries per row, just pre-summed in
+# combo groups (`build_ext_lut`) -- a reassociation of identical f32
+# addends, so its rounding error has the same ~(dsub + M) * 2^-24 scale as
+# the plain-order sum the margin already dominates.  Hence one set of
+# bounds serves every encoding, and prune-on == prune-off stays
+# bit-identical within each (tests/test_cooc_props.py pins soundness
+# against the flat scan under randomly re-encoded codebooks).
 _BOUND_REL = 1e-4
 _BOUND_ABS = 1e-6
 

@@ -51,7 +51,14 @@ def main():
         help="ADC candidates per query fed to the re-rank stage "
              "(0 = 4*k, pow2-bucketed)",
     )
+    ap.add_argument(
+        "--cooc", choices=["auto", "on", "off"], default="auto",
+        help="co-occurrence re-encoded shards (§4.3); composes with churn, "
+             "pruning and the re-rank cascade, so auto = on",
+    )
     args = ap.parse_args()
+    if args.k_overfetch and args.rerank == "off":
+        ap.error("--k-overfetch requires --rerank exact")
 
     import jax
     import jax.numpy as jnp
@@ -120,8 +127,8 @@ def main():
         churn = args.churn_insert_rate > 0 or args.churn_delete_rate > 0
         eng = MemANNSEngine.build(
             jax.random.PRNGKey(1), xs, rcfg.n_clusters, rcfg.m,
-            # the mutable path requires plain (non-co-occ) shards
-            use_cooc=not churn, n_combos=rcfg.n_combos, block_n=rcfg.block_n,
+            use_cooc=args.cooc != "off", n_combos=rcfg.n_combos,
+            block_n=rcfg.block_n,
             mutable=churn,
             rerank=args.rerank, k_overfetch=args.k_overfetch,
         )
@@ -172,6 +179,7 @@ def main():
         report["retrieved_ids"] = ids[:, :4].tolist()
         report["retrieval_stats"] = {
             "pipeline_depth": args.pipeline_depth,
+            "cooc": eng.shards.n_combos > 0,
             "compiles": st.compiles,
             "host_fraction": round(st.host_fraction(), 3),
             "overlap_fraction": round(st.overlap_fraction(), 3),

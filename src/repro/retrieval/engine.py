@@ -206,14 +206,17 @@ class MemANNSEngine:
         centroids and codes then live in the rotated space, queries are
         rotated on entry, and the raw shard (and therefore the exact
         re-rank) stays in the original space — squared L2 is rotation
-        invariant, so the cascade contract is unchanged."""
-        # unsupported combinations fail before any expensive work (the
+        invariant, so the cascade contract is unchanged.
+
+        All knobs compose: `use_cooc=True` with `mutable=True` buffers
+        inserts plain-coded in the delta (same jitted assign/encode path)
+        and re-mines/re-encodes only the changed clusters at compaction
+        (`retrieval.layout.update_shards`), keeping every compiled shape
+        stable — the co-occ shard width is reserved at the full plain
+        width when mutable.  See tests/test_feature_matrix.py for the
+        scan × cooc × mutable × prune × rerank equivalence wall."""
+        # unsupported arguments fail before any expensive work (the
         # k-means build + Algorithm-1 placement below can take minutes)
-        if mutable and use_cooc:
-            raise NotImplementedError(
-                "mutable=True requires use_cooc=False (co-occ shards are "
-                "immutable; see retrieval.layout.update_shards)"
-            )
         if rerank not in ("off", "exact"):
             raise ValueError(f"rerank must be 'off' or 'exact', got {rerank!r}")
         mesh = mesh or make_dpu_mesh()

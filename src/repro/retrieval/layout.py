@@ -47,6 +47,11 @@ class DeviceShards:
     n_combos: int
     block_n: int
     window: int              # Lpad: per-pair scan window (block multiple)
+    # co-occ re-encoding knobs, carried so `update_shards` re-mines changed
+    # clusters with EXACTLY the build-time semantics (the compaction ==
+    # scratch-rebuild bit-identity depends on it)
+    min_length_reduction: float = 0.0
+    mine_rows: int = 50_000
 
     @property
     def ndev(self) -> int:
@@ -72,6 +77,79 @@ class DeviceShards:
 
 def _align(x: int, b: int) -> int:
     return (x + b - 1) // b * b
+
+
+def _mine_cluster(
+    codes_c: np.ndarray, c: int, n_combos: int, combo_len: int, mine_rows: int
+) -> tuple[ComboSet, np.ndarray]:
+    """Mine one cluster's combo set, padded up to exactly `n_combos`.
+
+    Seeded by the cluster id, so re-mining a cluster whose rows are
+    bit-identical (e.g. after a compaction that did not touch it, or a
+    from-scratch rebuild over the same corpus) reproduces the exact combo
+    set -- the `update_shards` == `build_shards` equivalence depends on it.
+
+    Returns (padded ComboSet, (n_combos, L) int32 flat combo item addrs).
+    The padding entries repeat column 0, which no non-degenerate row set
+    produces, so they never match and their combo sums read as junk that is
+    never addressed.
+    """
+    combos = mine_combos(
+        codes_c, n_combos=n_combos, combo_len=combo_len,
+        max_rows=mine_rows, seed=c,
+    )
+    k_found = combos.n_combos
+    cols = np.zeros((n_combos, combo_len), np.int32)
+    cods = np.zeros((n_combos, combo_len), np.int32)
+    cols[:k_found] = combos.cols
+    cods[:k_found] = combos.codes
+    padded = ComboSet(cols=cols, codes=cods,
+                      support=np.zeros(n_combos, np.int64))
+    return padded, cols * NCODES + cods
+
+
+def _encode_cluster(
+    codes_c: np.ndarray, padded: ComboSet, min_length_reduction: float
+) -> CoocCodes | None:
+    """Co-occ re-encode one cluster; None means plain fallback (§4.3)."""
+    enc = reencode(codes_c, padded) if len(codes_c) else None
+    if enc is not None and enc.length_reduction() < min_length_reduction:
+        # paper §4.3: fall back to plain encoding for this cluster
+        enc = None
+    return enc
+
+
+def _addr_rows(
+    codes_c: np.ndarray,
+    enc: CoocCodes | None,
+    m: int,
+    width: int,
+    sentinel: int,
+    add_offsets: bool,
+) -> np.ndarray:
+    """Materialize one cluster's stored rows at the given width.
+
+    Co-occ rows are sentinel-padded (or sentinel-trimmed -- trailing
+    columns past each row's length are already sentinel) to `width`; plain
+    rows either stay raw uint8 codes (`add_offsets`) or become direct
+    addresses padded to `width`.
+    """
+    if enc is not None:
+        a = enc.addrs.astype(np.int32)
+        if a.shape[1] < width:
+            pad = np.full((a.shape[0], width - a.shape[1]), sentinel, np.int32)
+            a = np.concatenate([a, pad], axis=1)
+        else:
+            a = a[:, :width]
+        return a
+    if add_offsets:
+        return codes_c.astype(np.int32)  # raw codes; offsets added in-kernel
+    a = np.arange(m, dtype=np.int32)[None, :] * NCODES + codes_c.astype(np.int32)
+    if width > m:
+        a = np.concatenate(
+            [a, np.full((a.shape[0], width - m), sentinel, np.int32)], axis=1
+        )
+    return a
 
 
 def build_shards(
@@ -114,29 +192,24 @@ def build_shards(
         width = 0
         for c in range(c_n):
             codes_c = index.cluster_codes(c)
-            combos = mine_combos(
-                codes_c, n_combos=n_combos, combo_len=combo_len,
-                max_rows=mine_rows, seed=c,
+            padded, flat_combo_addrs = _mine_cluster(
+                codes_c, c, n_combos, combo_len, mine_rows
             )
-            # pad the mined set up to n_combos with never-matching dummies
-            k_found = combos.n_combos
-            cols = np.zeros((n_combos, combo_len), np.int32)
-            cods = np.zeros((n_combos, combo_len), np.int32)
-            cols[:k_found] = combos.cols
-            cods[:k_found] = combos.codes
-            padded = ComboSet(cols=cols, codes=cods,
-                              support=np.zeros(n_combos, np.int64))
-            enc = reencode(codes_c, padded) if len(codes_c) else None
-            if enc is not None and enc.length_reduction() < min_length_reduction:
-                # paper §4.3: fall back to plain encoding for this cluster
-                enc = None
+            enc = _encode_cluster(codes_c, padded, min_length_reduction)
             encodings[c] = enc
-            cluster_combo_addrs[c] = cols * NCODES + cods
+            cluster_combo_addrs[c] = flat_combo_addrs
             if enc is not None:
                 width = max(width, int(enc.lengths.max(initial=0)))
         width = max(width, 1)
         if any(e is None for e in encodings):
             width = m  # plain fallback rows need full width
+        if cap_slack > 0.0 or slot_slack > 0 or window_slack > 0:
+            # mutable headroom: a post-churn re-encoding can need any length
+            # up to m, and a width change invalidates every compiled scan
+            # executable, so the mutable path reserves the full plain width
+            # up front (extra columns hold the sentinel -> add 0.0 in-scan;
+            # results and dtypes are unaffected, only padding bytes grow)
+            width = m
 
     sentinel = m * NCODES + (n_combos if use_cooc else 0)
     # storage dtype: raw uint8 codes in plain mode (kernel reconstructs the
@@ -146,29 +219,23 @@ def build_shards(
     if add_offsets:
         store_dtype = np.uint8
     elif compact_dtype and use_cooc:
-        assert m * NCODES + n_combos + 1 <= 65536
+        if m * NCODES + n_combos + 1 > 65536:
+            raise ValueError(
+                "build_shards: co-occ table size m*256 + n_combos + 1 = "
+                f"{m * NCODES + n_combos + 1} exceeds the uint16 direct-"
+                "address space (§4.3); lower n_combos or m, or pass "
+                "compact_dtype=False"
+            )
         store_dtype = np.uint16
     else:
         store_dtype = np.int32
     for c in range(c_n):
-        codes_c = index.cluster_codes(c)
-        enc = encodings[c]
-        if use_cooc and enc is not None:
-            a = enc.addrs.astype(np.int32)
-            if a.shape[1] < width:
-                pad = np.full((a.shape[0], width - a.shape[1]), sentinel, np.int32)
-                a = np.concatenate([a, pad], axis=1)
-            else:
-                a = a[:, :width]
-        elif add_offsets:
-            a = codes_c.astype(np.int32)  # raw codes; offsets added in-kernel
-        else:
-            a = np.arange(m, dtype=np.int32)[None, :] * NCODES + codes_c.astype(np.int32)
-            if width > m:
-                a = np.concatenate(
-                    [a, np.full((a.shape[0], width - m), sentinel, np.int32)], axis=1
-                )
-        cluster_addrs.append(a)
+        cluster_addrs.append(
+            _addr_rows(
+                index.cluster_codes(c), encodings[c], m, width, sentinel,
+                add_offsets,
+            )
+        )
 
     # ---- per-device packing, block-aligned slots --------------------------
     sizes = index.cluster_sizes()
@@ -225,6 +292,8 @@ def build_shards(
         n_combos=n_combos if use_cooc else 0,
         block_n=block_n,
         window=window,
+        min_length_reduction=min_length_reduction,
+        mine_rows=mine_rows,
     )
 
 
@@ -464,14 +533,22 @@ def update_shards(
     row -- is copied through verbatim, so the delta-rebuild cost scales with
     the churn, not the corpus.
 
-    Array shapes (row capacity, slot count, scan window) are kept whenever
-    the new packing fits, so the jitted `sharded_search` executables stay
-    valid across compactions; they grow (block-aligned / slack-free) only
-    on overflow, which the serving layer then counts as a cold shape.
+    Array shapes (row capacity, slot count, scan window, stored width) are
+    kept whenever the new packing fits, so the jitted `sharded_search`
+    executables stay valid across compactions; they grow (block-aligned /
+    slack-free) only on overflow, which the serving layer then counts as a
+    cold shape.
 
-    Co-occurrence-encoded shards are not yet mutable (`n_combos > 0`
-    raises): re-encoding would require re-mining combos per changed
-    cluster.
+    Co-occurrence-encoded shards (`n_combos > 0`) re-encode incrementally:
+    each *changed* cluster is re-mined and re-encoded with the build-time
+    knobs carried on the shards (`mine_rows`, `min_length_reduction`),
+    seeded by the cluster id -- deterministic given the cluster's rows, so
+    the result is bit-identical to a from-scratch `build_shards` over the
+    compacted index.  Unchanged clusters copy their packed address rows and
+    combo address tables through verbatim (located via `old.local_slot` on
+    any replica holder).  The stored width can only grow, to at most `m`;
+    mutable builds reserve the full plain width up front (`build_shards`
+    slack path), so steady-state churn never changes it.
 
     Args:
       index: the compacted IVFPQIndex.
@@ -484,16 +561,13 @@ def update_shards(
     Returns:
       (new DeviceShards, (A,) int array of repacked device ids).
     """
-    if old.n_combos > 0:
-        raise NotImplementedError(
-            "update_shards: co-occ encoded shards are immutable (re-mining "
-            "combos per changed cluster is not implemented); build with "
-            "use_cooc=False for the mutable path"
-        )
     ndev = old.ndev
     m = index.m
     c_n = index.n_clusters
     block_n = old.block_n
+    use_cooc = old.n_combos > 0
+    n_combos = old.n_combos
+    combo_len = old.combo_addrs.shape[3]
     sizes = index.cluster_sizes()
     changed = np.asarray(changed, bool)
 
@@ -508,6 +582,45 @@ def update_shards(
         ],
         bool,
     )
+
+    # ---- co-occ: per-cluster rows for the affected devices, computed once
+    # and shared by all replicas (changed clusters re-mine exactly like
+    # build_shards; unchanged ones copy their packed rows from any holder)
+    width = old.width if use_cooc else m
+    enc_rows: dict[int, np.ndarray] = {}
+    enc_combos: dict[int, np.ndarray] = {}
+    if use_cooc:
+        for d in np.flatnonzero(affected):
+            for c in placement.dev_clusters[d]:
+                if c in enc_rows:
+                    continue
+                holders = np.flatnonzero(old.local_slot[:, c] >= 0)
+                if not changed[c] and holders.size:
+                    d0 = int(holders[0])
+                    s0 = int(old.local_slot[d0, c])
+                    lo = int(old.slot_start[d0, s0])
+                    nr = int(old.slot_size[d0, s0])
+                    enc_rows[c] = old.codes[d0, lo : lo + nr].astype(np.int32)
+                    enc_combos[c] = np.array(old.combo_addrs[d0, s0])
+                    continue
+                codes_c = index.cluster_codes(c)
+                padded, flat_combo_addrs = _mine_cluster(
+                    codes_c, c, n_combos, combo_len, old.mine_rows
+                )
+                enc = _encode_cluster(
+                    codes_c, padded, old.min_length_reduction
+                )
+                nat_w = (
+                    m if enc is None
+                    else max(int(enc.lengths.max(initial=0)), 1)
+                )
+                rows = _addr_rows(
+                    codes_c, enc, m, nat_w, old.sentinel, add_offsets=False
+                )
+                enc_rows[c] = rows
+                enc_combos[c] = flat_combo_addrs
+                if rows.shape[0]:
+                    width = max(width, rows.shape[1])
 
     # shape requirements of the new packing (affected devices only can
     # force growth; unaffected devices fit by construction)
@@ -526,36 +639,48 @@ def update_shards(
     cap = max(old.codes.shape[1], need_cap)
 
     fill = 0 if old.add_offsets else old.sentinel
-    codes = np.full((ndev, cap, m), fill, old.codes.dtype)
+    codes = np.full((ndev, cap, width), fill, old.codes.dtype)
     vec_ids = np.full((ndev, cap), -1, np.int32)
     slot_start = np.zeros((ndev, s_max), np.int32)
     slot_size = np.zeros((ndev, s_max), np.int32)
     slot_cluster = np.full((ndev, s_max), -1, np.int32)
-    combo_addrs = np.zeros((ndev, s_max, 0, old.combo_addrs.shape[3]), np.int32)
+    combo_addrs = np.zeros(
+        (ndev, s_max, n_combos, combo_len), np.int32
+    )
     local_slot = np.full((ndev, c_n), -1, np.int32)
 
     old_cap = old.codes.shape[1]
     old_smax = old.slot_start.shape[1]
     for d in range(ndev):
         if not affected[d]:
-            codes[d, :old_cap] = old.codes[d]
+            # verbatim copy; any new trailing width columns keep the
+            # sentinel fill (the scan reads them as +0.0)
+            codes[d, :old_cap, : old.width] = old.codes[d]
             vec_ids[d, :old_cap] = old.vec_ids[d]
             slot_start[d, :old_smax] = old.slot_start[d]
             slot_size[d, :old_smax] = old.slot_size[d]
             slot_cluster[d, :old_smax] = old.slot_cluster[d]
+            if use_cooc:
+                combo_addrs[d, :old_smax] = old.combo_addrs[d]
             local_slot[d] = old.local_slot[d]
             continue
         cursor = 0
         for s, c in enumerate(placement.dev_clusters[d]):
-            rows = index.cluster_codes(c)
-            n_rows = rows.shape[0]
-            if old.add_offsets:
-                codes[d, cursor : cursor + n_rows] = rows
+            if use_cooc:
+                rows = enc_rows[c]
+                n_rows = rows.shape[0]
+                codes[d, cursor : cursor + n_rows, : rows.shape[1]] = rows
+                combo_addrs[d, s] = enc_combos[c]
             else:
-                codes[d, cursor : cursor + n_rows] = (
-                    np.arange(m, dtype=np.int32)[None, :] * NCODES
-                    + rows.astype(np.int32)
-                )
+                rows = index.cluster_codes(c)
+                n_rows = rows.shape[0]
+                if old.add_offsets:
+                    codes[d, cursor : cursor + n_rows] = rows
+                else:
+                    codes[d, cursor : cursor + n_rows] = (
+                        np.arange(m, dtype=np.int32)[None, :] * NCODES
+                        + rows.astype(np.int32)
+                    )
             vec_ids[d, cursor : cursor + n_rows] = index.cluster_ids(c)
             slot_start[d, s] = cursor
             slot_size[d, s] = n_rows
@@ -574,9 +699,11 @@ def update_shards(
             combo_addrs=combo_addrs,
             local_slot=local_slot,
             m_subspaces=m,
-            n_combos=0,
+            n_combos=n_combos,
             block_n=block_n,
             window=window,
+            min_length_reduction=old.min_length_reduction,
+            mine_rows=old.mine_rows,
         ),
         np.flatnonzero(affected),
     )

@@ -13,7 +13,13 @@ system of paper Fig. 5:
                      from-scratch re-encode) + `update_placement`
                      (Algorithm 1 re-run for out-of-threshold clusters
                      only) + `update_shards` (only affected device regions
-                     repacked) + a single re-`device_put`
+                     repacked; co-occ shards re-mine/re-encode changed
+                     clusters there, bit-identical to a scratch cooc
+                     build) + a single re-`device_put`
+
+Delta rows always scan plain-coded (direct address = col*256 + code) even
+when the main shards are co-occ encoded -- re-encoding happens only at
+compaction, so the insert path stays one jitted assign/encode executable.
 
 Compaction keeps array shapes whenever the slack reserved at build time
 absorbs the growth, so a serving loop's warmed executables stay hot across

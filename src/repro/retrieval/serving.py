@@ -39,6 +39,14 @@ delta merge compose with the top-k at collect time, and compactions
 auto-trigger on delta occupancy / tombstone thresholds.  `warmup()` warms
 the overfetched executables and the jitted delta search too, so steady
 state never recompiles during churn.
+
+Every engine feature composes here: co-occ encoded shards serve churn like
+plain ones (the compiled-shape key already covers the stored width and
+dtype, and mutable cooc builds reserve the full plain width, so compaction
+re-encoding never changes a warmed shape), pruning and the exact re-rank
+cascade stack on top — `tests/test_feature_matrix.py` pins the full
+scan × cooc × mutable × prune × rerank matrix at zero steady-state
+recompiles.
 """
 
 from __future__ import annotations

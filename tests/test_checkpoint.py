@@ -1,11 +1,13 @@
 """save_index/load_index: IVFPQIndex + DeltaIndex + layout metadata
-roundtrip through the atomic checkpoint directory."""
+roundtrip through the atomic checkpoint directory; save_engine/load_engine
+extend it to the full unified serving state (cooc shards + live delta +
+tombstones + RawStore)."""
 
 import numpy as np
 import jax
 import pytest
 
-from repro.checkpoint import load_index, save_index
+from repro.checkpoint import load_engine, load_index, save_engine, save_index
 from repro.core.delta import DeltaIndex
 from repro.core.index import build_index
 
@@ -101,6 +103,65 @@ def test_load_falls_back_to_old_after_crash(tmp_path, small_index):
     assert not (tmp_path / "ckpt.old").exists()
     _, _, extra = load_index(path)
     assert extra == {"v": 2}
+
+
+@pytest.mark.parametrize("use_cooc", [False, True])
+def test_engine_roundtrip_unified_state(tmp_path, small_index, use_cooc):
+    """The full feature stack checkpoints as one unit: cooc shards + live
+    delta (buffered inserts AND tombstones) + RawStore.  The restored
+    engine's next-query results must be bit-identical to the saved one's
+    -- placement is re-derived on load, which is fine because search
+    results are placement-invariant."""
+    from repro.retrieval import MemANNSEngine
+
+    _, xs, centers = small_index
+    rng = np.random.default_rng(2)
+    eng = MemANNSEngine.build(
+        jax.random.PRNGKey(0), xs, 8, 4, use_cooc=use_cooc, n_combos=16,
+        block_n=256, kmeans_iters=4, pq_iters=3, mutable=True,
+        delta_capacity=64, rerank="exact", k_overfetch=32, store_raw=True,
+    )
+    new_ids = np.arange(500, 530, dtype=np.int32)
+    new_xs = (
+        centers[rng.integers(0, 8, 30)]
+        + rng.normal(0, 1, (30, 16)).astype(np.float32)
+    )
+    eng.insert(new_ids, new_xs)
+    eng.delete(np.asarray([3, 7, 505]))
+    qs = (
+        centers[rng.integers(0, 8, 6)]
+        + rng.normal(0, 1, (6, 16)).astype(np.float32)
+    )
+    d0, i0 = eng.search(qs, nprobe=4, k=5)
+
+    path = save_engine(str(tmp_path / "eng"), eng)
+    got = load_engine(path)
+
+    assert (got.shards.n_combos > 0) == use_cooc
+    assert got.delta is not None and got.delta.n == eng.delta.n
+    assert got.delta.tombstones == eng.delta.tombstones
+    assert got.raw is not None
+    assert (got.scan, got.prune, got.rerank, got.k_overfetch) == (
+        eng.scan, eng.prune, eng.rerank, eng.k_overfetch
+    )
+    d1, i1 = got.search(qs, nprobe=4, k=5)
+    np.testing.assert_array_equal(i0, i1)
+    np.testing.assert_array_equal(d0, d1)
+
+    # mid-churn restore keeps mutating + compacting identically
+    eng.compact()
+    got.compact()
+    d2, i2 = eng.search(qs, nprobe=4, k=5)
+    d3, i3 = got.search(qs, nprobe=4, k=5)
+    np.testing.assert_array_equal(i2, i3)
+    np.testing.assert_array_equal(d2, d3)
+
+
+def test_load_engine_rejects_plain_index_checkpoint(tmp_path, small_index):
+    index, _, _ = small_index
+    path = save_index(str(tmp_path / "ckpt"), index)
+    with pytest.raises(ValueError, match="engine config"):
+        load_engine(path)
 
 
 def test_load_validates(tmp_path, small_index):

@@ -12,8 +12,13 @@ pytest.importorskip("hypothesis")
 
 from hypothesis import given, settings, strategies as st  # noqa: E402
 
-from repro.core.cooc import build_ext_lut, mine_combos, reencode  # noqa: E402
+from repro.core.cooc import NCODES, build_ext_lut, mine_combos, reencode  # noqa: E402
+from repro.core.index import IVFPQIndex  # noqa: E402
+from repro.core.lut import build_lut  # noqa: E402
+from repro.core.placement import place_clusters  # noqa: E402
+from repro.core.scheduling import residual_bounds, subspace_code_norms  # noqa: E402
 from repro.core.search import adc_scan, adc_scan_flat  # noqa: E402
+from repro.retrieval.layout import build_shards, update_shards  # noqa: E402
 
 SETTINGS = dict(max_examples=20, deadline=None)
 
@@ -55,3 +60,178 @@ def test_property_reencode_lengths(seed):
     assert ((8 - enc.lengths) % (combos.combo_len - 1) == 0).all()
     # addresses inside table bounds
     assert int(enc.addrs.max(initial=0)) < enc.table_size
+
+
+@given(
+    n=st.integers(30, 200),
+    m=st.sampled_from([4, 8]),
+    n_combos=st.integers(1, 16),
+    seed=st.integers(0, 10_000),
+)
+@settings(**SETTINGS)
+def test_property_combo_coverage_exactly_once(n, m, n_combos, seed):
+    """Decoding any re-encoded row touches every PQ column exactly once --
+    each address is either the row's own plain (col, code) entry or a combo
+    whose codes the row actually carries; nothing is dropped or doubled."""
+    rng = np.random.default_rng(seed)
+    codes = rng.integers(0, 6, (n, m)).astype(np.uint8)
+    combos = mine_combos(codes, n_combos=n_combos, max_rows=n)
+    enc = reencode(codes, combos)
+    flat_lut = m * NCODES
+    for i in range(n):
+        covered = np.zeros(m, np.int64)
+        for a in enc.addrs[i, : enc.lengths[i]].astype(np.int64):
+            if a < flat_lut:
+                col, code = divmod(int(a), NCODES)
+                assert codes[i, col] == code
+                covered[col] += 1
+            else:
+                s = int(a) - flat_lut
+                assert s < combos.n_combos
+                assert (codes[i, combos.cols[s]] == combos.codes[s]).all()
+                covered[combos.cols[s]] += 1
+        assert (covered == 1).all()
+        # padding past the row's length is all sentinel (reads +0.0)
+        assert (enc.addrs[i, enc.lengths[i] :] == enc.sentinel).all()
+
+
+def _synthetic_index(rng, n, m, c_n, card=6):
+    """Cluster-sorted CSR index with random low-cardinality codes (no
+    training; layout tests only touch codes/offsets/ids)."""
+    assign = np.sort(rng.integers(0, c_n, n))
+    codes = rng.integers(0, card, (n, m)).astype(np.uint8)
+    offsets = np.concatenate(
+        [[0], np.cumsum(np.bincount(assign, minlength=c_n))]
+    ).astype(np.int64)
+    dsub = 2
+    return IVFPQIndex(
+        centroids=rng.normal(0, 1, (c_n, m * dsub)).astype(np.float32),
+        codebook=rng.normal(0, 1, (m, NCODES, dsub)).astype(np.float32),
+        codes=codes,
+        vec_ids=np.arange(n, dtype=np.int32),
+        offsets=offsets,
+    )
+
+
+def _churned_index(rng, idx, card=6):
+    """Simulate insert-then-compact: drop ~15% of rows, append new rows at
+    each cluster's tail (exactly `compact_index`'s survivor-then-insert
+    order).  Returns (new index, changed cluster mask)."""
+    n, m = idx.codes.shape
+    c_n = idx.n_clusters
+    keep = rng.random(n) > 0.15
+    ins_n = int(rng.integers(4, 25))
+    ins_assign = rng.integers(0, c_n, ins_n)
+    ins_codes = rng.integers(0, card, (ins_n, m)).astype(np.uint8)
+    ins_ids = np.arange(n, n + ins_n, dtype=np.int32)
+    parts_codes, parts_ids, counts = [], [], []
+    changed = np.zeros(c_n, bool)
+    for c in range(c_n):
+        lo, hi = int(idx.offsets[c]), int(idx.offsets[c + 1])
+        kc = keep[lo:hi]
+        sel = np.flatnonzero(ins_assign == c)
+        parts_codes += [idx.codes[lo:hi][kc], ins_codes[sel]]
+        parts_ids += [idx.vec_ids[lo:hi][kc], ins_ids[sel]]
+        counts.append(int(kc.sum()) + sel.size)
+        changed[c] = (~kc).any() or sel.size > 0
+    new = IVFPQIndex(
+        centroids=idx.centroids,
+        codebook=idx.codebook,
+        codes=np.concatenate(parts_codes),
+        vec_ids=np.concatenate(parts_ids),
+        offsets=np.concatenate([[0], np.cumsum(counts)]).astype(np.int64),
+    )
+    return new, changed
+
+
+def _slot_rows(sh, d, s, m):
+    """One slot's stored rows, sentinel-padded to the full plain width so
+    shards of different stored widths compare directly."""
+    lo, nr = int(sh.slot_start[d, s]), int(sh.slot_size[d, s])
+    r = sh.codes[d, lo : lo + nr].astype(np.int64)
+    if r.shape[1] < m:
+        pad = np.full((nr, m - r.shape[1]), sh.sentinel, np.int64)
+        r = np.concatenate([r, pad], axis=1)
+    return r
+
+
+@given(
+    n=st.sampled_from([80, 150]),
+    m=st.sampled_from([4, 8]),
+    seed=st.integers(0, 10_000),
+)
+@settings(**SETTINGS)
+def test_property_update_shards_equals_scratch_cooc(n, m, seed):
+    """Tentpole contract: incremental co-occ repack after churn produces
+    bit-identical encoded rows and combo tables to a from-scratch cooc
+    build over the compacted index (re-mining is deterministic per
+    cluster, so only genuinely changed clusters re-encode)."""
+    rng = np.random.default_rng(seed)
+    c_n, n_combos = 4, 8
+    idx0 = _synthetic_index(rng, n, m, c_n)
+    pl = place_clusters(
+        idx0.cluster_sizes().astype(np.float64),
+        np.ones(c_n) / c_n,
+        2,
+        centroids=idx0.centroids,
+    )
+    old = build_shards(idx0, pl, use_cooc=True, n_combos=n_combos, block_n=8)
+    idx1, changed = _churned_index(rng, idx0)
+    upd, repacked = update_shards(idx1, pl, old, changed)
+    ref = build_shards(idx1, pl, use_cooc=True, n_combos=n_combos, block_n=8)
+    assert upd.n_combos == ref.n_combos == n_combos
+    for d in range(2):
+        for s in range(ref.slot_start.shape[1]):
+            c = int(ref.slot_cluster[d, s])
+            if c < 0:
+                continue
+            assert int(upd.slot_cluster[d, s]) == c
+            assert int(upd.slot_size[d, s]) == int(ref.slot_size[d, s])
+            np.testing.assert_array_equal(
+                _slot_rows(upd, d, s, m), _slot_rows(ref, d, s, m)
+            )
+            np.testing.assert_array_equal(
+                upd.combo_addrs[d, s], ref.combo_addrs[d, s]
+            )
+            lo_u, lo_r = int(upd.slot_start[d, s]), int(ref.slot_start[d, s])
+            nr = int(ref.slot_size[d, s])
+            np.testing.assert_array_equal(
+                upd.vec_ids[d, lo_u : lo_u + nr],
+                ref.vec_ids[d, lo_r : lo_r + nr],
+            )
+
+
+@given(
+    m=st.sampled_from([4, 8]),
+    n_combos=st.integers(1, 16),
+    seed=st.integers(0, 10_000),
+)
+@settings(**SETTINGS)
+def test_property_bounds_sound_under_cooc(m, n_combos, seed):
+    """§4.4 bounds stay strictly sound against the §4.3 flat combo scan:
+    for any random codebook, residual and re-encoding, every f32 cooc
+    distance lies within [lb, ub] and lb never exceeds the exact LUT sum
+    (the combo scan only reassociates the same f32 addends, which the
+    bound margins already dominate)."""
+    rng = np.random.default_rng(seed)
+    dsub, n = 4, 150
+    codebook = rng.normal(0, 1, (m, NCODES, dsub)).astype(np.float32)
+    codes = rng.integers(0, 9, (n, m)).astype(np.uint8)
+    combos = mine_combos(codes, n_combos=n_combos, max_rows=n)
+    enc = reencode(codes, combos)
+    resid = rng.normal(0, 2, (m * dsub,)).astype(np.float32)
+    lut = build_lut(jnp.asarray(codebook), jnp.asarray(resid))
+    ext = build_ext_lut(
+        lut, jnp.asarray(combos.cols), jnp.asarray(combos.codes)
+    )
+    d_flat = np.asarray(
+        adc_scan_flat(ext, jnp.asarray(enc.addrs.astype(np.int32)))
+    )
+    lb, ub = residual_bounds(
+        resid[None, None, :], subspace_code_norms(codebook)
+    )
+    lb, ub = float(lb[0, 0]), float(ub[0, 0])
+    assert (d_flat >= lb).all(), "cooc distance fell below the lower bound"
+    assert (d_flat <= ub).all(), "cooc distance exceeded the upper bound"
+    d_plain = np.asarray(adc_scan(lut, jnp.asarray(codes)))
+    assert lb <= float(d_plain.min(initial=np.inf))

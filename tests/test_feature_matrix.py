@@ -1,0 +1,291 @@
+"""The feature-matrix composition wall.
+
+Every cell of ``scan ∈ {tiles, windows} × cooc ∈ {on, off} ×
+mutable ∈ {on, off} × prune ∈ {on, off} × rerank ∈ {off, exact}`` (32
+cells) must produce results bit-identical to its *reference scan*: the
+(windows, prune=off) variant sharing the cell's encoding (cooc), cascade
+(rerank) and corpus state (same delta buffer / mutation stream).  Mutable
+cells additionally run a churn-stream twin through the serving layer --
+inserts + deletes + auto-compaction -- asserting per-step bit-identity at
+zero steady-state recompiles, and that the compacted engine matches a
+from-scratch rebuild over the surviving corpus.
+
+Why references share the cooc setting: the §4.3 flat combo scan adds the
+same f32 LUT entries per row with combo groups pre-summed -- a
+reassociation, so cooc-on vs cooc-off distances agree only to ~1e-4
+(`test_cross_encoding_agreement` pins that), while everything *within* an
+encoding is bit-exact.
+"""
+
+import dataclasses
+import itertools
+
+import jax
+import numpy as np
+import pytest
+
+from repro.core.delta import DeltaIndex
+from repro.core.index import brute_force, encode_index, recall_at_k
+from repro.core.placement import place_clusters
+from repro.retrieval import MemANNSEngine, ServingEngine
+from repro.retrieval.layout import RawStore, build_raw_store, build_shards
+
+NPROBE = 8
+K = 10
+N0 = 12000          # conftest corpus size; insert ids continue from here so
+                    # the raw-store id map never grows (pow2 bucket = 16384)
+DELTA_CAP = 256
+
+SCANS = ("tiles", "windows")
+BOOLS = (False, True)
+RERANKS = ("off", "exact")
+CELLS = list(itertools.product(SCANS, BOOLS, BOOLS, BOOLS, RERANKS))
+assert len(CELLS) == 32
+MUTABLE_CELLS = [c for c in CELLS if c[2]]
+
+
+@pytest.fixture(scope="module")
+def base(clustered_data):
+    """One mutable engine per encoding; cells are dataclass replacements."""
+    xs, centers, qs, hist = clustered_data
+    engines = {}
+    for cooc in BOOLS:
+        engines[cooc] = MemANNSEngine.build(
+            jax.random.PRNGKey(0),
+            xs,
+            n_clusters=32,
+            m=8,
+            history_queries=hist,
+            use_cooc=cooc,
+            n_combos=32,
+            block_n=256,
+            kmeans_iters=8,
+            pq_iters=6,
+            mutable=True,
+            delta_capacity=DELTA_CAP,
+            rerank="off",
+            k_overfetch=64,
+            store_raw=True,
+        )
+    return engines
+
+
+def _copy_raw(raw: RawStore) -> RawStore:
+    # compaction appends to the raw store IN PLACE; every mutable cell
+    # needs its own copy so cells stay independent
+    return RawStore(
+        vectors=raw.vectors.copy(),
+        used=raw.used.copy(),
+        id_dev=raw.id_dev.copy(),
+        id_row=raw.id_row.copy(),
+        dtype=raw.dtype,
+    )
+
+
+def _cell(base, scan, cooc, prune, rerank, *, delta, raw=None):
+    eng = base[cooc]
+    return dataclasses.replace(
+        eng,
+        scan=scan,
+        prune=prune,
+        rerank=rerank,
+        delta=delta,
+        raw=raw if raw is not None else eng.raw,
+    )
+
+
+def _mutations(centers, seed=7, n_ins=48, n_del=16):
+    rng = np.random.default_rng(seed)
+    ids = np.arange(N0, N0 + n_ins, dtype=np.int64)
+    vecs = (
+        centers[rng.integers(0, len(centers), n_ins)]
+        + rng.normal(0, 1.0, (n_ins, centers.shape[1]))
+    ).astype(np.float32)
+    dels = rng.choice(N0, size=n_del, replace=False).astype(np.int64)
+    return ids, vecs, dels
+
+
+# --------------------------------------------------------------------- #
+# the 32-cell wall: every cell == its reference scan, bit for bit
+# --------------------------------------------------------------------- #
+
+
+@pytest.mark.parametrize("scan,cooc,mutable,prune,rerank", CELLS)
+def test_cell_matches_reference(
+    base, clustered_data, scan, cooc, mutable, prune, rerank
+):
+    xs, centers, qs, _ = clustered_data
+    m = base[cooc].index.m
+
+    delta = DeltaIndex.create(m, DELTA_CAP) if mutable else None
+    eng = _cell(base, scan, cooc, prune, rerank, delta=delta)
+    if mutable:
+        ids, vecs, dels = _mutations(centers)
+        assert eng.insert(ids, vecs) == len(ids)
+        assert eng.delete(dels) == len(dels)
+        assert eng.mutation_active
+
+    d, i = eng.search(qs, nprobe=NPROBE, k=K)
+
+    # reference: unpruned windows scan, same encoding / cascade / delta
+    # (searches never mutate the delta, so sharing it is exact)
+    ref = _cell(base, "windows", cooc, False, rerank, delta=delta)
+    d_ref, i_ref = ref.search(qs, nprobe=NPROBE, k=K)
+    np.testing.assert_array_equal(i, i_ref)
+    np.testing.assert_array_equal(d, d_ref)
+
+    if mutable:
+        # tombstoned rows are gone, inserted rows are findable
+        assert not np.isin(i, dels).any()
+        d_new, i_new = eng.search(vecs[:8], nprobe=NPROBE, k=K)
+        assert np.isin(ids[:8], i_new).any(axis=None)
+
+
+def test_cross_encoding_agreement(base, clustered_data):
+    """cooc on/off agree to f32-reassociation tolerance, not bit-exactly."""
+    xs, centers, qs, _ = clustered_data
+    outs = {}
+    for cooc in BOOLS:
+        eng = _cell(base, "windows", cooc, False, "off", delta=None)
+        outs[cooc] = eng.search(qs, nprobe=NPROBE, k=K)
+    np.testing.assert_allclose(outs[True][0], outs[False][0], rtol=2e-4)
+    _, true_ids = brute_force(xs, qs, K)
+    r = {c: recall_at_k(outs[c][1], true_ids) for c in BOOLS}
+    # re-encoding reorders f32 additions, which can flip near-tied rows at
+    # the top-k boundary but must not move recall
+    assert abs(r[True] - r[False]) <= 0.05
+
+
+# --------------------------------------------------------------------- #
+# churn-stream twins: the 16 mutable cells under live serving
+# --------------------------------------------------------------------- #
+
+_ROUNDS = 4
+_INS_PER_ROUND = 40
+_DEL_PER_ROUND = 6
+
+
+def _churn_stream(centers, seed=11):
+    rng = np.random.default_rng(seed)
+    steps = []
+    next_id = N0
+    for _ in range(_ROUNDS):
+        ids = np.arange(next_id, next_id + _INS_PER_ROUND, dtype=np.int64)
+        next_id += _INS_PER_ROUND
+        vecs = (
+            centers[rng.integers(0, len(centers), _INS_PER_ROUND)]
+            + rng.normal(0, 1.0, (_INS_PER_ROUND, centers.shape[1]))
+        ).astype(np.float32)
+        # deletes target original ids only, so the compacted row order is
+        # exactly (surviving originals, inserts in insertion order) -- the
+        # scratch-rebuild comparison below depends on that
+        dels = rng.choice(N0, size=_DEL_PER_ROUND, replace=False).astype(
+            np.int64
+        )
+        steps.append((ids, vecs, dels))
+    return steps
+
+
+def _serving(eng):
+    return ServingEngine(
+        eng,
+        nprobe=NPROBE,
+        k=K,
+        micro_batch=8,
+        mutable=True,
+        compact_occupancy=0.5,
+        delta_capacity=DELTA_CAP,
+    )
+
+
+_scratch_cache: dict = {}
+
+
+def _scratch_engine(base, clustered_data, cooc):
+    """From-scratch rebuild over the final churned corpus (cached: the
+    stream is deterministic, so it is identical for every cell)."""
+    if cooc in _scratch_cache:
+        return _scratch_cache[cooc]
+    xs, centers, _, _ = clustered_data
+    steps = _churn_stream(centers)
+    dead = np.zeros(N0, bool)
+    for _, _, dels in steps:
+        dead[dels] = True
+    xs_live = np.concatenate([xs[~dead]] + [v for _, v, _ in steps])
+    ids_live = np.concatenate(
+        [np.flatnonzero(~dead)] + [i for i, _, _ in steps]
+    )
+    eng0 = base[cooc]
+    idx = encode_index(
+        eng0.index.centroids, eng0.index.codebook, xs_live, ids_live
+    )
+    pl = place_clusters(
+        idx.cluster_sizes().astype(np.float64),
+        eng0.freqs,
+        eng0.shards.ndev,
+        centroids=idx.centroids,
+    )
+    sh = build_shards(
+        idx, pl, use_cooc=cooc, n_combos=32, block_n=eng0.shards.block_n
+    )
+    raw = build_raw_store(idx, pl, xs_live, xs_ids=ids_live)
+    scratch = dataclasses.replace(
+        eng0,
+        index=idx,
+        placement=pl,
+        shards=sh,
+        raw=raw,
+        delta=None,
+        _dev_arrays=None,
+        _raw_arrays=None,
+    )
+    _scratch_cache[cooc] = scratch
+    return scratch
+
+
+@pytest.mark.parametrize("scan,cooc,prune,rerank", [
+    (s, c, p, r) for (s, c, _m, p, r) in MUTABLE_CELLS
+])
+def test_churn_twin_bit_identical_zero_recompiles(
+    base, clustered_data, scan, cooc, prune, rerank
+):
+    xs, centers, qs, _ = clustered_data
+    m = base[cooc].index.m
+    eng = _cell(
+        base, scan, cooc, prune, rerank,
+        delta=DeltaIndex.create(m, DELTA_CAP), raw=_copy_raw(base[cooc].raw),
+    )
+    twin = _cell(
+        base, "windows", cooc, False, rerank,
+        delta=DeltaIndex.create(m, DELTA_CAP), raw=_copy_raw(base[cooc].raw),
+    )
+    srv, srv_ref = _serving(eng), _serving(twin)
+    srv.warmup()
+    srv_ref.warmup()
+    warm = srv.stats.compiles
+
+    for ids, vecs, dels in _churn_stream(centers):
+        srv.insert(ids, vecs)
+        srv_ref.insert(ids, vecs)
+        srv.delete(dels)
+        srv_ref.delete(dels)
+        d, i = srv.search(qs[:16])
+        d_ref, i_ref = srv_ref.search(qs[:16])
+        np.testing.assert_array_equal(i, i_ref)
+        np.testing.assert_array_equal(d, d_ref)
+
+    assert srv.stats.compactions >= 1, "stream must cross a compaction"
+    assert srv.stats.compiles == warm, "steady-state churn recompiled"
+
+    # drain the remaining tombstones, then the compacted engine must match
+    # a from-scratch rebuild over the surviving corpus, bit for bit
+    srv.compact()
+    assert not eng.mutation_active
+    scratch = _scratch_engine(base, clustered_data, cooc)
+    scratch = dataclasses.replace(
+        scratch, scan=scan, prune=prune, rerank=rerank
+    )
+    d, i = eng.search(qs, nprobe=NPROBE, k=K)
+    d_s, i_s = scratch.search(qs, nprobe=NPROBE, k=K)
+    np.testing.assert_array_equal(i, i_s)
+    np.testing.assert_array_equal(d, d_s)

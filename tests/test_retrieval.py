@@ -79,27 +79,29 @@ def test_engine_batch_invariance(engines, clustered_data):
     np.testing.assert_array_equal(i_all, np.concatenate([i1, i2]))
 
 
-def test_mutable_cooc_raises_before_placement(monkeypatch):
-    """mutable + use_cooc is unsupported: the NotImplementedError must fire
-    BEFORE the (expensive) k-means build / Algorithm-1 placement pass, not
-    after a full placement has been burned."""
-    import repro.core.placement as placement_mod
-    import repro.retrieval.engine as engine_mod
-
-    def _boom(*a, **k):  # any placement work means the check came too late
-        raise AssertionError("place_clusters ran before the early check")
-
-    monkeypatch.setattr(placement_mod, "place_clusters", _boom)
-    monkeypatch.setattr(engine_mod, "place_clusters", _boom)
-    monkeypatch.setattr(
-        engine_mod, "build_index",
-        lambda *a, **k: (_ for _ in ()).throw(
-            AssertionError("build_index ran before the early check")
-        ),
+def test_mutable_cooc_composes(clustered_data):
+    """Inversion of the old quarantine test: mutable + use_cooc now
+    composes -- the engine builds, serves inserts/deletes from the
+    plain-coded delta, and keeps the co-occ encoding through compaction
+    (changed clusters are re-mined in `update_shards`)."""
+    xs, centers, qs, _ = clustered_data
+    eng = MemANNSEngine.build(
+        jax.random.PRNGKey(0), xs[:2000], n_clusters=8, m=4,
+        use_cooc=True, n_combos=16, block_n=256,
+        kmeans_iters=4, pq_iters=3, mutable=True, delta_capacity=256,
     )
-    xs = np.zeros((64, 16), np.float32)
-    with pytest.raises(NotImplementedError, match="use_cooc"):
-        MemANNSEngine.build(
-            jax.random.PRNGKey(0), xs, n_clusters=4, m=4,
-            mutable=True, use_cooc=True,
-        )
+    assert eng.shards.n_combos == 16 and eng.delta is not None
+
+    new_ids = np.arange(20000, 20016, dtype=np.int64)
+    eng.insert(new_ids, qs[:16])
+    eng.delete(np.asarray([5, 9]))
+    d1, i1 = eng.search(qs[:16], nprobe=4, k=5)
+    # each query IS an inserted vector -> its own id must surface
+    assert all(new_ids[r] in i1[r] for r in range(16))
+    assert not np.isin(i1, [5, 9]).any()
+
+    rep = eng.compact()
+    assert rep.merged == 16
+    assert eng.shards.n_combos == 16  # compaction kept the cooc encoding
+    d2, i2 = eng.search(qs[:16], nprobe=4, k=5)
+    np.testing.assert_array_equal(i1, i2)
