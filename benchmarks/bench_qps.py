@@ -18,7 +18,7 @@ import time
 import numpy as np
 import jax.numpy as jnp
 
-from benchmarks.common import emit, small_system
+from benchmarks.common import emit, geometry_tag, scan_ideal_bytes, small_system
 from repro.core.index import filter_clusters, search as flat_search
 from repro.core.scheduling import (
     densify_schedule,
@@ -119,11 +119,15 @@ def run():
             qps_mem = _qps(
                 lambda: eng.search(qs, nprobe=nprobe, k=10), len(qs)
             )
+            # ideal probed-code bytes for one batch at this nprobe: the
+            # roofline numerator run.py divides by the measured time
+            ideal = scan_ideal_bytes(eng, eng.plan_batch(qs, nprobe))
             emit(
                 f"fig13_qps_ivf{c}_nprobe{nprobe}",
                 1e6 * len(qs) / qps_mem,
                 f"memanns_qps={qps_mem:.1f};flat_qps={qps_flat:.1f};"
-                f"speedup={qps_mem/qps_flat:.2f}",
+                f"speedup={qps_mem/qps_flat:.2f};"
+                f"ideal_bytes={ideal};{geometry_tag(eng)}",
             )
         # host (schedule + densify) vs device (shard_map step) per batch
         host_s, dev_s = _host_device_split(eng, qs, nprobe=16)
@@ -191,7 +195,8 @@ def run():
         1e6 * len(qs_s) / qps_t,
         f"tiles_qps={qps_t:.1f};windows_qps={qps_w:.1f};"
         f"rows_tiles={rows_t};rows_windows={rows_w};"
-        f"rows_ratio={rows_t / rows_w:.3f}",
+        f"rows_ratio={rows_t / rows_w:.3f};"
+        f"ideal_bytes={scan_ideal_bytes(eng, plan_t)};{geometry_tag(eng)}",
     )
     assert rows_t < rows_w, (
         f"tiles path scanned {rows_t} rows >= windows {rows_w} on a "

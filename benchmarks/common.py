@@ -14,6 +14,10 @@ import numpy as np
 
 ROWS: list[tuple[str, float, str]] = []
 
+# kernel-geometry autotune mode benches construct serving engines with;
+# benchmarks/run.py overrides it from --autotune and stamps it on each row
+AUTOTUNE_MODE = "off"
+
 
 def time_fn(fn, *args, iters: int = 5, warmup: int = 2, **kw) -> float:
     """Median wall-time per call in microseconds (blocking on outputs)."""
@@ -30,6 +34,28 @@ def time_fn(fn, *args, iters: int = 5, warmup: int = 2, **kw) -> float:
 def emit(name: str, us_per_call: float, derived: str = ""):
     ROWS.append((name, us_per_call, derived))
     print(f"{name},{us_per_call:.1f},{derived}", flush=True)
+
+
+def geometry_tag(eng) -> str:
+    """Derived-column fragment recording the kernel geometry a row ran at."""
+    return (
+        f"block_n={eng.shards.block_n};rerank_block={eng.rerank_block};"
+        f"tile_floor={eng.tile_floor}"
+    )
+
+
+def scan_ideal_bytes(eng, plan) -> int:
+    """Ideal HBM bytes for one scan: code bytes the plan actually probes.
+
+    `scanned_rows` is the plan's exact row count (post-pruning rows are
+    *avoided work*, so the unpruned plan rows are the honest traffic
+    bound); each row streams `width * itemsize` code bytes.  LUT reads are
+    excluded (they live in fast memory after the first touch — the paper's
+    WRAM residency argument), so the bound is the pure code-stream floor
+    the roofline fraction divides by.
+    """
+    rows = int(eng.scanned_rows(plan))
+    return rows * eng.shards.width * eng.shards.codes.dtype.itemsize
 
 
 def small_system(n=15000, c=48, m=8, dim=32, use_cooc=False, seed=0):

@@ -11,6 +11,16 @@ file (per-sub-bench QPS / latency / rows-scanned / tiles-skipped and any
 other ``key=value`` pairs from the derived column), MERGING into an existing
 file so CI steps that run different ``--only`` slices accumulate one
 ``BENCH_<pr>.json`` artifact tracking the perf trajectory across PRs.
+
+Every row is stamped with the measurement context (``backend`` /
+``device_kind`` / ``autotune`` mode), and rows that report their ideal
+probed-code bytes (``ideal_bytes=...`` in the derived column) gain a
+``roofline_frac`` column -- (ideal_bytes / HBM bandwidth) / measured
+seconds, peaks resolved per device kind via
+`repro.launch.roofline_report.peaks_for` with the honest ``peaks_source``
+recorded next to it -- so "as fast as the hardware allows" is a number in
+the artifact, not a claim.  `repro.launch.env.setup_env` runs before jax
+initializes (XLA flags and platform defaults; CI's pinned env always wins).
 """
 
 from __future__ import annotations
@@ -34,6 +44,7 @@ MODULES = [
     ("bench_prune", "early-pruning v2: bound-driven tile skips"),
     ("bench_mutation", "insert/delete churn QPS + compaction latency"),
     ("bench_recall_frontier", "recall@k vs QPS: PQ-only vs exact re-rank"),
+    ("bench_autotune", "kernel-geometry sweep vs default + cache reuse"),
 ]
 
 
@@ -51,13 +62,23 @@ def _parse_derived(derived: str) -> dict:
     return out
 
 
-def write_json(path: str, rows, errors: dict | None = None) -> None:
+def write_json(
+    path: str,
+    rows,
+    errors: dict | None = None,
+    meta: dict | None = None,
+) -> None:
     """Merge benchmark rows into `path` (rows keyed by bench name).
 
     `errors` maps module name -> exception string for modules that raised;
     each lands as a ``{"error": ...}`` row so a partial run is visible in
     the artifact instead of silently absent (a module that emitted some
     rows before raising keeps those rows AND gains the error marker).
+
+    `meta` is the measurement context (backend / device_kind / autotune /
+    peaks): stamped onto the document AND onto every row written this
+    call, and used to derive ``roofline_frac`` for rows carrying their
+    ideal byte traffic.
     """
     doc = {"schema": 1, "rows": {}}
     if os.path.exists(path):
@@ -68,11 +89,29 @@ def write_json(path: str, rows, errors: dict | None = None) -> None:
                 doc = prev
         except (OSError, json.JSONDecodeError):
             pass  # unreadable previous artifact: start fresh
+    meta = meta or {}
+    stamp = {
+        k: meta[k]
+        for k in ("backend", "device_kind", "autotune")
+        if k in meta
+    }
+    if meta:
+        doc["meta"] = {**doc.get("meta", {}), **meta}
     for name, us_per_call, derived in rows:
-        doc["rows"][name] = {
+        row = {
             "us_per_call": us_per_call,
             **_parse_derived(derived),
+            **stamp,
         }
+        # roofline fraction: ideal code-stream seconds / measured seconds
+        # (only for rows that report their ideal byte traffic)
+        hbm_bw = meta.get("hbm_bw")
+        if hbm_bw and row.get("ideal_bytes") and us_per_call > 0:
+            row["roofline_frac"] = (
+                row["ideal_bytes"] / hbm_bw / (us_per_call * 1e-6)
+            )
+            row["peaks_source"] = meta.get("peaks_source", "default")
+        doc["rows"][name] = row
     for mod_name, msg in (errors or {}).items():
         doc["rows"][mod_name] = {
             **doc["rows"].get(mod_name, {}), "error": msg,
@@ -96,10 +135,42 @@ def main() -> None:
         help="run every sub-bench even after a failure (still exits "
              "non-zero); the default aborts on the first raise",
     )
+    ap.add_argument(
+        "--autotune", choices=["off", "cache", "sweep"], default="off",
+        help="kernel-geometry autotune mode benches construct serving "
+             "engines with (default off: bench rows measure the build-time "
+             "geometry unless a bench sweeps explicitly); the mode is "
+             "stamped onto every emitted row",
+    )
     args = ap.parse_args()
+    # env defaults must land before `benchmarks.common` imports jax
+    from repro.launch.env import describe_env, setup_env
+
+    setup_env()
+
     from benchmarks import common
 
+    common.AUTOTUNE_MODE = args.autotune
+    from repro.launch.roofline_report import peaks_for
+
+    env = describe_env()
+    peak_flops, hbm_bw, peaks_source = peaks_for(env["device_kind"])
+    meta = {
+        "backend": env["backend"],
+        "device_kind": env["device_kind"],
+        "n_devices": env["n_devices"],
+        "autotune": args.autotune,
+        "peak_flops": peak_flops,
+        "hbm_bw": hbm_bw,
+        "peaks_source": peaks_source,
+    }
+
     print("name,us_per_call,derived")
+    print(
+        f"# backend={env['backend']} device_kind={env['device_kind']} "
+        f"n_devices={env['n_devices']} autotune={args.autotune} "
+        f"peaks={peaks_source}"
+    )
     failures: dict[str, str] = {}
     for mod_name, desc in MODULES:
         if args.only and args.only not in mod_name:
@@ -115,16 +186,16 @@ def main() -> None:
                 # record whatever completed before the raise + the error
                 # marker, so partial runs are visible in the artifact
                 if args.json:
-                    write_json(args.json, common.ROWS, failures)
+                    write_json(args.json, common.ROWS, failures, meta)
                 print(f"# FAILED: {mod_name} (fail-fast; use --keep-going "
                       f"to run the rest)")
                 sys.exit(1)
         if args.json:
             # incremental merge after every module: a later hard crash
             # (OOM, SIGKILL) cannot drop rows already measured
-            write_json(args.json, common.ROWS, failures)
+            write_json(args.json, common.ROWS, failures, meta)
     if args.json:
-        write_json(args.json, common.ROWS, failures)
+        write_json(args.json, common.ROWS, failures, meta)
         print(f"# wrote {len(common.ROWS)} rows to {args.json}")
     if failures:
         print(f"# FAILED: {sorted(failures)}")

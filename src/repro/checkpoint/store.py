@@ -269,6 +269,8 @@ def save_engine(path: str, engine, extra: dict | None = None) -> str:
         "prune": bool(engine.prune),
         "rerank": engine.rerank,
         "k_overfetch": int(engine.k_overfetch),
+        "rerank_block": int(engine.rerank_block),
+        "tile_floor": int(engine.tile_floor),
         "mutable": engine.delta is not None,
         # json float repr is shortest-roundtrip, so freqs restore exactly
         # and the re-derived placement matches a scratch build's
@@ -297,7 +299,7 @@ def load_engine(path: str, mesh=None, interpret: bool | None = None):
 
     from repro.core.placement import place_clusters
     from repro.retrieval.engine import MemANNSEngine, make_dpu_mesh
-    from repro.retrieval.layout import build_shards
+    from repro.retrieval.layout import build_shards, default_slack
 
     index, delta, extra = load_index(path)
     if "engine" not in extra:
@@ -318,6 +320,9 @@ def load_engine(path: str, mesh=None, interpret: bool | None = None):
         centroids=index.centroids,
     )
     mutable = bool(cfg.get("mutable")) and delta is not None
+    cap_slack, slot_slack, window_slack = default_slack(
+        cfg["block_n"], mutable
+    )
     shards = build_shards(
         index,
         placement,
@@ -327,9 +332,9 @@ def load_engine(path: str, mesh=None, interpret: bool | None = None):
         block_n=cfg["block_n"],
         min_length_reduction=cfg.get("min_length_reduction", 0.0),
         mine_rows=cfg.get("mine_rows", 50_000),
-        cap_slack=0.5 if mutable else 0.0,
-        slot_slack=4 if mutable else 0,
-        window_slack=2 if mutable else 0,
+        cap_slack=cap_slack,
+        slot_slack=slot_slack,
+        window_slack=window_slack,
     )
     raw = load_raw_store(path)
     return MemANNSEngine(
@@ -342,6 +347,8 @@ def load_engine(path: str, mesh=None, interpret: bool | None = None):
         prune=cfg.get("prune", True),
         rerank=cfg.get("rerank", "off"),
         k_overfetch=cfg.get("k_overfetch", 0),
+        rerank_block=cfg.get("rerank_block", 0),
+        tile_floor=cfg.get("tile_floor", 0),
         interpret=interpret,
         freqs=freqs,
         delta=delta,

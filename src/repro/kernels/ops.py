@@ -336,9 +336,13 @@ def adc_topk_tiles(
     return vals, idx
 
 
-@functools.partial(jax.jit, static_argnames=("interpret",))
+@functools.partial(jax.jit, static_argnames=("block_k", "interpret"))
 def rerank_dists(
-    queries: jax.Array, cand: jax.Array, *, interpret: bool | None = None
+    queries: jax.Array,
+    cand: jax.Array,
+    *,
+    block_k: int = 0,
+    interpret: bool | None = None,
 ) -> jax.Array:
     """Exact re-rank distances: (Q, D) x (Q, K, D) -> (Q, K) f32 sq-L2.
 
@@ -346,18 +350,22 @@ def rerank_dists(
     overfetched candidates, gathered by candidate id (rows of invalid
     candidates may hold arbitrary finite data -- callers mask their
     distances out afterwards, see retrieval.search.sharded_rerank).  The
-    candidate axis K is padded to a LANE multiple for the kernel and
-    sliced back, so any pow2 candidate bucket maps onto an aligned block.
-    Storage dtype may be f32 or bf16; sums are always f32.
+    candidate axis K is padded to a `block_k` multiple (default LANE) for
+    the kernel and sliced back, so any pow2 candidate bucket maps onto an
+    aligned block; `block_k` is the candidate-block width per grid step
+    (the autotuned re-rank geometry knob -- results are bit-identical at
+    every value, see rerank_dists_kernel).  Storage dtype may be f32 or
+    bf16; sums are always f32.
     """
     if interpret is None:
         interpret = _interpret_default()
+    bk = block_k or LANE
     k = cand.shape[1]
-    kpad = _round_up(k, LANE) - k
+    kpad = _round_up(k, bk) - k
     if kpad:
         cand = jnp.pad(cand, ((0, 0), (0, kpad), (0, 0)))
     out = _rerank.rerank_dists_kernel(
-        queries.astype(jnp.float32), cand, interpret=interpret
+        queries.astype(jnp.float32), cand, block_k=bk, interpret=interpret
     )
     return out[:, :k]
 

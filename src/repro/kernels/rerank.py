@@ -38,31 +38,47 @@ from jax.experimental import pallas as pl
 
 def _rerank_dists_block(q_ref, cand_ref, out_ref):
     q = q_ref[...].astype(jnp.float32)          # (1, D)
-    cand = cand_ref[0].astype(jnp.float32)      # (K, D)
-    diff = cand - q                             # broadcast over K candidates
+    cand = cand_ref[0].astype(jnp.float32)      # (Kb, D)
+    diff = cand - q                             # broadcast over Kb candidates
     out_ref[...] = jnp.sum(diff * diff, axis=-1)[None]
 
 
-@functools.partial(jax.jit, static_argnames=("interpret",))
+@functools.partial(jax.jit, static_argnames=("block_k", "interpret"))
 def rerank_dists_kernel(
-    queries: jax.Array, cand: jax.Array, *, interpret: bool = False
+    queries: jax.Array,
+    cand: jax.Array,
+    *,
+    block_k: int = 0,
+    interpret: bool = False,
 ) -> jax.Array:
     """(Q, D) queries x (Q, K, D) gathered candidates -> (Q, K) f32 sq-L2.
 
     `cand` may be f32 or bf16 (the raw-shard storage dtype); coordinates are
     widened to f32 before the subtract, so the result is the exact f32
     squared distance to the *stored* vector.
+
+    `block_k` splits the candidate axis into (K / block_k) grid steps of
+    `block_k` candidates each (0 = one step over the whole axis; K must be
+    a `block_k` multiple -- ops.rerank_dists pads it).  Every output
+    element's reduction reads only its own (q, k, :) slice, so the result
+    is bit-identical at every block_k: the knob trades VMEM block footprint
+    against grid-step overhead and is safe for the autotuner to sweep.
     """
     q, d = queries.shape
     k = cand.shape[1]
+    bk = block_k or k
+    if k % bk:
+        raise ValueError(
+            f"rerank_dists_kernel: K={k} not a multiple of block_k={bk}"
+        )
     return pl.pallas_call(
         _rerank_dists_block,
-        grid=(q,),
+        grid=(q, k // bk),
         in_specs=[
-            pl.BlockSpec((1, d), lambda qi: (qi, 0)),
-            pl.BlockSpec((1, k, d), lambda qi: (qi, 0, 0)),
+            pl.BlockSpec((1, d), lambda qi, ki: (qi, 0)),
+            pl.BlockSpec((1, bk, d), lambda qi, ki: (qi, ki, 0)),
         ],
-        out_specs=pl.BlockSpec((1, k), lambda qi: (qi, 0)),
+        out_specs=pl.BlockSpec((1, bk), lambda qi, ki: (qi, ki)),
         out_shape=jax.ShapeDtypeStruct((q, k), jnp.float32),
         interpret=interpret,
     )(queries, cand)

@@ -35,8 +35,12 @@ from repro.optim import AdamWConfig, init_opt_state
 from repro.training.trainer import make_train_step
 
 # --- TPU v5e hardware constants (task spec) --------------------------------
-PEAK_FLOPS = 197e12          # bf16 / chip
-HBM_BW = 819e9               # bytes/s / chip
+# the analytic cost model is pinned to the task-spec chip so dryrun numbers
+# stay comparable across machines; measured reporting resolves real peaks
+# per device kind via repro.launch.roofline_report.peaks_for
+from repro.launch.roofline_report import DEFAULT_PEAKS
+
+PEAK_FLOPS, HBM_BW = DEFAULT_PEAKS  # bf16 FLOP/s, HBM bytes/s / chip
 ICI_BW = 50e9                # bytes/s / link / chip
 
 _COLLECTIVE_RE = re.compile(

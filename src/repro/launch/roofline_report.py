@@ -7,6 +7,15 @@ Roofline-fraction definition (the §Perf score):
   retrieval     : (ideal uint8 probed-code bytes / HBM bw) / bound_s
 The "what moves it" column is derived from which term dominates and the
 cell's useful-work ratio.
+
+The peaks are per-backend, not constants: `peaks_for` resolves
+(peak FLOP/s, HBM bytes/s) from the detected `device_kind` via `PEAKS`,
+falling back to the v5e-class default, and every report records a
+`peaks_source` ("table:<kind>" | "default" | "override") so a fraction
+computed against a guessed peak is never mistaken for a measured one.
+`--peak-flops` / `--hbm-bw` override both (e.g. for hardware not in the
+table); `benchmarks/run.py` uses the same resolver to stamp
+roofline-fraction columns onto bench rows that report ideal bytes.
 """
 
 from __future__ import annotations
@@ -16,8 +25,49 @@ import glob
 import json
 import os
 
-PEAK_FLOPS = 197e12
-HBM_BW = 819e9
+# datasheet peaks keyed by a substring of jax's device_kind; dense-f32/bf16
+# peak FLOP/s and HBM bandwidth in bytes/s
+PEAKS: dict[str, tuple[float, float]] = {
+    "TPU v4": (275e12, 1.2e12),
+    "TPU v5 lite": (197e12, 819e9),
+    "TPU v5e": (197e12, 819e9),
+    "TPU v5p": (459e12, 2.8e12),
+    "TPU v6 lite": (918e12, 1.6e12),
+    "TPU v6e": (918e12, 1.6e12),
+    "A100": (312e12, 2.0e12),
+    "H100": (989e12, 3.35e12),
+}
+# historical default (v5e-class) -- keeps old reports comparable when the
+# device kind is unknown (e.g. the CPU fake-device mesh)
+DEFAULT_PEAKS = (197e12, 819e9)
+
+
+def peaks_for(
+    device_kind: str | None = None,
+    peak_flops: float | None = None,
+    hbm_bw: float | None = None,
+) -> tuple[float, float, str]:
+    """(peak FLOP/s, HBM bytes/s, source) for a device kind + overrides.
+
+    Explicit overrides win and mark the source "override"; otherwise the
+    longest-matching `PEAKS` key contained in `device_kind` supplies the
+    pair ("table:<key>"), else `DEFAULT_PEAKS` ("default").
+    """
+    flops, bw = DEFAULT_PEAKS
+    source = "default"
+    if device_kind:
+        best = ""
+        for key in PEAKS:
+            if key.lower() in device_kind.lower() and len(key) > len(best):
+                best = key
+        if best:
+            flops, bw = PEAKS[best]
+            source = f"table:{best}"
+    if peak_flops is not None or hbm_bw is not None:
+        flops = peak_flops if peak_flops is not None else flops
+        bw = hbm_bw if hbm_bw is not None else bw
+        source = "override"
+    return flops, bw, source
 
 
 def advice(cell: dict) -> str:
@@ -34,15 +84,18 @@ def advice(cell: dict) -> str:
     return "MXU-align tile shapes; raise arithmetic intensity per HBM byte"
 
 
-def fraction(cell: dict) -> float | None:
+def fraction(
+    cell: dict, peaks: tuple[float, float] = DEFAULT_PEAKS
+) -> float | None:
+    peak_flops, hbm_bw = peaks
     b = cell.get("bound_s")
     if not b:
         return None
     if "model_flops_per_chip" in cell:
-        ideal = cell["model_flops_per_chip"] / PEAK_FLOPS
+        ideal = cell["model_flops_per_chip"] / peak_flops
         return ideal / b
     if "useful_code_bytes_per_chip" in cell:
-        ideal = cell["useful_code_bytes_per_chip"] / HBM_BW
+        ideal = cell["useful_code_bytes_per_chip"] / hbm_bw
         return ideal / b
     return None
 
@@ -67,7 +120,9 @@ def fmt(x, nd=3):
     return str(x)
 
 
-def markdown_table(cells: list[dict]) -> str:
+def markdown_table(
+    cells: list[dict], peaks: tuple[float, float] = DEFAULT_PEAKS
+) -> str:
     hdr = (
         "| arch | shape | mesh | compute_s | memory_s | collective_s | "
         "dominant | model GF/chip | useful ratio | roofline frac | next move |\n"
@@ -88,7 +143,7 @@ def markdown_table(cells: list[dict]) -> str:
                 + " - | " * 7 + f"{status[:60]} |"
             )
             continue
-        fr = fraction(c)
+        fr = fraction(c, peaks)
         mf = c.get("model_flops_per_chip")
         rows.append(
             "| "
@@ -107,9 +162,11 @@ def markdown_table(cells: list[dict]) -> str:
     return hdr + "\n".join(rows) + "\n"
 
 
-def pick_hillclimb(cells: list[dict]) -> dict:
+def pick_hillclimb(
+    cells: list[dict], peaks: tuple[float, float] = DEFAULT_PEAKS
+) -> dict:
     ok = [c for c in cells if c.get("status") == "ok" and c["mesh"].startswith("pod")]
-    with_fr = [(fraction(c), c) for c in ok]
+    with_fr = [(fraction(c, peaks), c) for c in ok]
     with_fr = [(f, c) for f, c in with_fr if f]
     worst = min(with_fr, key=lambda t: t[0], default=(None, None))[1]
     coll = max(
@@ -132,11 +189,47 @@ def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--in", dest="dirname", default="results/dryrun")
     ap.add_argument("--out", default=None)
+    ap.add_argument(
+        "--device-kind", default=None,
+        help="resolve peaks from this device kind (default: detect via jax; "
+        "offline aggregation of another machine's results should pass the "
+        "kind those results were measured on)",
+    )
+    ap.add_argument(
+        "--peak-flops", type=float, default=None,
+        help="override peak FLOP/s (marks peaks_source=override)",
+    )
+    ap.add_argument(
+        "--hbm-bw", type=float, default=None,
+        help="override HBM bandwidth in bytes/s (marks peaks_source=override)",
+    )
     args = ap.parse_args()
+    kind = args.device_kind
+    if kind is None and (args.peak_flops is None or args.hbm_bw is None):
+        try:  # aggregation also runs where jax can't initialize -- degrade
+            import jax
+
+            kind = jax.devices()[0].device_kind
+        except Exception:
+            kind = None
+    flops, bw, source = peaks_for(kind, args.peak_flops, args.hbm_bw)
+    peaks = (flops, bw)
     cells = load(args.dirname)
-    md = markdown_table(cells)
+    md = markdown_table(cells, peaks)
     print(md)
-    print("\nhillclimb candidates:", json.dumps(pick_hillclimb(cells), indent=1))
+    print(
+        "peaks:",
+        json.dumps(
+            {
+                "device_kind": kind, "peak_flops": flops, "hbm_bw": bw,
+                "peaks_source": source,
+            }
+        ),
+    )
+    print(
+        "\nhillclimb candidates:",
+        json.dumps(pick_hillclimb(cells, peaks), indent=1),
+    )
     if args.out:
         with open(args.out, "w") as f:
             f.write(md)

@@ -56,9 +56,22 @@ def main():
         help="co-occurrence re-encoded shards (§4.3); composes with churn, "
              "pruning and the re-rank cascade, so auto = on",
     )
+    ap.add_argument(
+        "--autotune", choices=["off", "cache", "sweep"], default="cache",
+        help="kernel-geometry autotuning at warmup: 'cache' applies the "
+             "persisted measured geometry (or the in-repo backend default), "
+             "'sweep' measures a candidate grid first and persists the "
+             "winner, 'off' serves the build-time geometry untouched",
+    )
     args = ap.parse_args()
     if args.k_overfetch and args.rerank == "off":
         ap.error("--k-overfetch requires --rerank exact")
+
+    # env defaults (XLA flags, allocator, platform) must land before the
+    # first jax import initializes a backend
+    from repro.launch.env import setup_env
+
+    setup_env()
 
     import jax
     import jax.numpy as jnp
@@ -144,6 +157,7 @@ def main():
             pipeline_depth=args.pipeline_depth,
             mutable=churn,
             compact_occupancy=args.compact_occupancy,
+            autotune=args.autotune,
         )
         srv.warmup()
         # query with the (pooled) last hidden state proxy: last logits proj
@@ -177,9 +191,21 @@ def main():
         st = srv.stats
         report["retrieval_s"] = round(time.time() - t0, 3)
         report["retrieved_ids"] = ids[:, :4].tolist()
+        at = srv.autotune_report or {}
         report["retrieval_stats"] = {
             "pipeline_depth": args.pipeline_depth,
             "cooc": eng.shards.n_combos > 0,
+            "backend": jax.default_backend(),
+            "device_kind": jax.devices()[0].device_kind,
+            # tuned kernel geometry actually serving this process, plus
+            # where it came from (cache hit / sweep / defaults / untouched)
+            "autotune": {
+                "mode": args.autotune,
+                "source": at.get("source", "off"),
+                "swept": at.get("swept", 0),
+                "retiled": bool(at.get("retiled", False)),
+                "geometry": srv.tuned_geometry(),
+            },
             "compiles": st.compiles,
             "host_fraction": round(st.host_fraction(), 3),
             "overlap_fraction": round(st.overlap_fraction(), 3),

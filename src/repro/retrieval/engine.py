@@ -38,6 +38,7 @@ from repro.retrieval.layout import (
     RawStore,
     build_raw_store,
     build_shards,
+    default_slack,
 )
 from repro.retrieval.search import (
     DPU_AXIS,
@@ -132,8 +133,20 @@ class MemANNSEngine:
       k_overfetch: candidate count k' fed to the re-rank stage; 0 = auto
         (4·k).  Rounded up to a pow2 bucket (floor k) either way, so
         serving warms one executable per (k, bucket) pair.
+      rerank_block: re-rank kernel candidate-block width per grid step
+        (0 = the kernel default, LANE).  Tuned geometry knob — results are
+        bit-identical at every value (see kernels.rerank).
+      tile_floor: minimum tiles-per-device capacity for auto-sized tile
+        queues (0 = pairs_per_dev).  A larger floor trades padding
+        (dummy tiles) for fewer distinct warmed tile buckets; clamped to
+        the reachable `tile_buckets` ladder so warmup coverage holds.
       interpret: force Pallas interpret mode (None = auto: interpret
         everywhere except real TPU backends).
+
+    The tuned-geometry surface (`block_n` via `retile`, `rerank_block`,
+    `tile_floor`) is applied as a unit by `apply_geometry`; `geometry()`
+    reports the current values.  `core.autotune` sweeps candidates and
+    the serving layer applies the winner at warmup.
 
     `raw` is the per-device raw-vector shard backing the cascade (built by
     `build(store_raw=True)` or attached via `attach_raw_store`); `delta` is
@@ -151,6 +164,8 @@ class MemANNSEngine:
     prune: bool = True   # early-pruning v2 bounds (exact; False = reference)
     rerank: str = "off"  # exact re-rank cascade: "off" | "exact"
     k_overfetch: int = 0  # cascade candidate count k' (0 = auto: 4k)
+    rerank_block: int = 0  # re-rank candidate-block width (0 = kernel default)
+    tile_floor: int = 0   # min tiles_per_dev capacity (0 = pairs_per_dev)
     interpret: bool | None = None
     freqs: np.ndarray | None = None   # f_i estimate (kept for re-placement)
     delta: "object | None" = None     # DeltaIndex once mutation is enabled
@@ -180,6 +195,8 @@ class MemANNSEngine:
         prune: bool = True,
         rerank: str = "off",
         k_overfetch: int = 0,
+        rerank_block: int = 0,
+        tile_floor: int = 0,
         store_raw: bool | None = None,
         raw_dtype: str = "float32",
         opq_iters: int = 0,
@@ -241,6 +258,9 @@ class MemANNSEngine:
             ndev,
             centroids=index.centroids,
         )
+        # layout slack derives from the chosen block_n (layout.default_slack)
+        # so a tuned tile height keeps the same row headroom under churn
+        d_cap, d_slot, d_win = default_slack(block_n, mutable)
         shards = build_shards(
             index,
             placement,
@@ -248,10 +268,10 @@ class MemANNSEngine:
             n_combos=n_combos,
             block_n=block_n,
             min_length_reduction=min_length_reduction,
-            cap_slack=(0.5 if cap_slack is None else cap_slack) if mutable else 0.0,
-            slot_slack=(4 if slot_slack is None else slot_slack) if mutable else 0,
+            cap_slack=(d_cap if cap_slack is None else cap_slack) if mutable else 0.0,
+            slot_slack=(d_slot if slot_slack is None else slot_slack) if mutable else 0,
             window_slack=(
-                (2 if window_slack is None else window_slack) if mutable else 0
+                (d_win if window_slack is None else window_slack) if mutable else 0
             ),
         )
         if store_raw is None:
@@ -272,6 +292,8 @@ class MemANNSEngine:
             prune=prune,
             rerank=rerank,
             k_overfetch=k_overfetch,
+            rerank_block=rerank_block,
+            tile_floor=tile_floor,
             interpret=interpret,
             freqs=freqs,
             raw=raw,
@@ -348,6 +370,71 @@ class MemANNSEngine:
         one re-rank executable per (k, bucket)."""
         want = self.k_overfetch if self.k_overfetch > 0 else 4 * k
         return round_capacity(max(want, k), floor=max(k, 1))
+
+    # ---------------------- tuned kernel geometry ---------------------- #
+
+    def geometry(self):
+        """Current `core.autotune.KernelGeometry` of this engine."""
+        from repro.core.autotune import KernelGeometry
+
+        return KernelGeometry(
+            block_n=self.shards.block_n,
+            rerank_block=self.rerank_block,
+            tile_floor=self.tile_floor,
+        )
+
+    def apply_geometry(self, geo) -> bool:
+        """Apply a tuned `KernelGeometry` (autotuner output) as a unit.
+
+        Sets `rerank_block`/`tile_floor` and, when the tile height
+        differs from the built shards, retiles the packed layout (see
+        `retile`).  `block_n=0` means "keep the build-time tile height"
+        (the honest in-repo default for unmeasured backends).  Results
+        are bit-identical before/after by construction — geometry is
+        data layout, never selection order.  Returns True when the
+        shards were retiled (callers holding device copies or warm sets
+        should treat that as a cold start).
+        """
+        self.rerank_block = int(getattr(geo, "rerank_block", 0) or 0)
+        self.tile_floor = int(getattr(geo, "tile_floor", 0) or 0)
+        block_n = int(getattr(geo, "block_n", 0) or 0)
+        if block_n and block_n != self.shards.block_n:
+            self.retile(block_n)
+            return True
+        return False
+
+    def retile(self, block_n: int) -> None:
+        """Repack the device shards at a new tile height `block_n`.
+
+        The shards are a deterministic function of (index, placement,
+        build knobs): cluster slots re-align to the new block_n and the
+        co-occ re-mining (when enabled) is seeded by cluster id, so the
+        rebuilt encodings are identical and search results are
+        bit-identical across tile heights — the per-tile merge's tie
+        order is independent of where tile boundaries fall (see
+        kernels.adc_topk) and the pruning skips are results-preserving.
+        Mutable layout slack is re-derived for the new block_n
+        (`layout.default_slack`); the delta buffer and raw store are
+        untouched; the cached device copy of the packed arrays is
+        dropped (shapes changed).
+        """
+        s = self.shards
+        cap_s, slot_s, win_s = default_slack(block_n, self.delta is not None)
+        self.shards = build_shards(
+            self.index,
+            self.placement,
+            use_cooc=s.n_combos > 0,
+            n_combos=s.n_combos if s.n_combos > 0 else 256,
+            combo_len=s.combo_addrs.shape[3] if s.n_combos > 0 else 3,
+            block_n=block_n,
+            min_length_reduction=s.min_length_reduction,
+            mine_rows=s.mine_rows,
+            compact_dtype=s.codes.dtype != np.int32,
+            cap_slack=cap_s,
+            slot_slack=slot_s,
+            window_slack=win_s,
+        )
+        self._dev_arrays = None
 
     def attach_raw_store(
         self,
@@ -475,9 +562,19 @@ class MemANNSEngine:
                 max_tiles = int(
                     count_tiles(pair_valid, nv, s.block_n).max(initial=0)
                 )
-                tiles_per_dev = round_capacity(
-                    max_tiles, floor=pairs_per_dev
-                )
+                floor = pairs_per_dev
+                if self.tile_floor > 0:
+                    # tuned floor, clamped to the reachable tile-bucket
+                    # ladder (pairs_per_dev * 2^i up to pow2(window/block))
+                    # so serving warmup still covers every capacity
+                    wb2 = 1 << math.ceil(
+                        math.log2(max(s.window // s.block_n, 1))
+                    )
+                    floor = min(
+                        round_capacity(self.tile_floor, floor=pairs_per_dev),
+                        pairs_per_dev * wb2,
+                    )
+                tiles_per_dev = round_capacity(max_tiles, floor=floor)
             tiles_cap = tiles_per_dev
             tile_pair, tile_block, tile_row0 = emit_tiles(
                 pair_slot, pair_valid, s.slot_start, s.slot_size,
@@ -643,7 +740,8 @@ class MemANNSEngine:
         cand = jnp.where(jnp.isfinite(handle.out_d), handle.out_i, -1)
         out_d, out_i = sharded_rerank(
             *raw_dev, q, cand,
-            mesh=self.mesh, k_out=k_out, interpret=self.interpret,
+            mesh=self.mesh, k_out=k_out, block_k=self.rerank_block,
+            interpret=self.interpret,
         )
         return dataclasses.replace(handle, out_d=out_d, out_i=out_i)
 

@@ -79,6 +79,33 @@ def _align(x: int, b: int) -> int:
     return (x + b - 1) // b * b
 
 
+# minimum row headroom the mutable window slack must cover regardless of
+# the tuned tile height: a retile to a small block_n keeps at least this
+# many spare rows per pair window, so compactions after moderate churn
+# still fit the warmed shapes
+WINDOW_SLACK_ROWS = 512
+
+
+def default_slack(block_n: int, mutable: bool) -> tuple[float, int, int]:
+    """(cap_slack, slot_slack, window_slack) derived from the tile height.
+
+    The layout slack is a function of the CHOSEN `block_n`, not a fixed
+    block count: `window_slack` is measured in blocks, so a tuned geometry
+    with a smaller tile height would otherwise silently shrink the row
+    headroom that keeps compiled shapes stable under churn.  Immutable
+    builds take no slack (exact packing); mutable builds reserve 50% row
+    capacity, 4 spare cluster slots, and at least 2 blocks /
+    `WINDOW_SLACK_ROWS` rows of window headroom — whichever is more blocks
+    at this `block_n`.  `MemANNSEngine.build`, `retile`, and
+    `checkpoint.store.load_engine` all derive their slack here, so a
+    rebuilt shard layout matches the original at any tuned geometry.
+    """
+    if not mutable:
+        return 0.0, 0, 0
+    window_blocks = max(2, -(-WINDOW_SLACK_ROWS // max(block_n, 1)))
+    return 0.5, 4, window_blocks
+
+
 def _mine_cluster(
     codes_c: np.ndarray, c: int, n_combos: int, combo_len: int, mine_rows: int
 ) -> tuple[ComboSet, np.ndarray]:

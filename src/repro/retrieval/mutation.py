@@ -131,6 +131,7 @@ def delta_exact_rerank(
     delta_d: np.ndarray,
     delta_i: np.ndarray,
     interpret: bool | None = None,
+    block_k: int = 0,
 ) -> tuple[np.ndarray, np.ndarray]:
     """Re-rank delta ADC candidates by exact f32 distance (host gather).
 
@@ -155,6 +156,7 @@ def delta_exact_rerank(
         ops.rerank_dists(
             jnp.asarray(np.asarray(queries, np.float32)),
             jnp.asarray(vecs),
+            block_k=block_k,
             interpret=interpret,
         )
     )
@@ -244,7 +246,8 @@ def mutable_search(
                 engine, queries, nprobe, kd, bound=None
             )
             delta_d, delta_i = delta_exact_rerank(
-                delta, queries, delta_d, delta_i, interpret=engine.interpret
+                delta, queries, delta_d, delta_i,
+                interpret=engine.interpret, block_k=engine.rerank_block,
             )
         else:
             bound = delta_prune_bound(engine, plan, k, k_fetch, tomb.size)

@@ -219,15 +219,17 @@ def rerank_static_key(
     row_capacity: int,
     ids_capacity: int,
     dtype: str,
+    block_k: int = 0,
 ) -> tuple:
     """Compilation-cache key of one `sharded_rerank` instance.
 
     Mirrors `search_static_key`: the serving layer warms one executable per
     key and asserts steady-state batches never recompile.  `row_capacity` /
     `ids_capacity` come from `RawStore.shape_key()` -- pow2-bucketed, so
-    moderate churn keeps the key stable."""
+    moderate churn keeps the key stable.  `block_k` is the tuned re-rank
+    candidate-block width (0 = the kernel default)."""
     return ("rerank", ndev, n_queries, k_cand, k_out, dim,
-            row_capacity, ids_capacity, dtype)
+            row_capacity, ids_capacity, dtype, block_k)
 
 
 def _device_rerank(
@@ -238,6 +240,7 @@ def _device_rerank(
     cand,       # (Q, Kc) int32 global candidate ids  [replicated]
     *,
     k_out: int,
+    block_k: int,
     interpret: bool | None,
 ):
     my = jax.lax.axis_index(DPU_AXIS)
@@ -248,7 +251,9 @@ def _device_rerank(
     owned = valid & (owner == my)
     rows = jnp.where(owned, id_row[cid], 0)
     vecs = raw[rows]                                     # (Q, Kc, D) gather
-    part = ops.rerank_dists(queries, vecs, interpret=interpret)
+    part = ops.rerank_dists(
+        queries, vecs, block_k=block_k, interpret=interpret
+    )
     part = jnp.where(owned, part, 0.0)
     # each (q, c) has exactly ONE owning device, so this f32 psum adds the
     # true partial to zeros only -- bit-exact in any reduction order
@@ -266,13 +271,14 @@ def _device_rerank(
 
 
 @functools.partial(
-    jax.jit, static_argnames=("mesh", "k_out", "interpret")
+    jax.jit, static_argnames=("mesh", "k_out", "block_k", "interpret")
 )
 def sharded_rerank(
     raw, id_dev, id_row, queries, cand,
     *,
     mesh: jax.sharding.Mesh,
     k_out: int,
+    block_k: int = 0,
     interpret: bool | None = None,
 ):
     """Exact re-rank of ADC candidates against the sharded raw-vector store.
@@ -287,12 +293,16 @@ def sharded_rerank(
     bit-identical to a brute-force fp32 re-rank of the same candidate set.
 
     Candidates that are −1 or unmapped in `id_dev` come back as
-    (+inf, −1) and sort last.  Returns (out_d (Q, k_out), out_i (Q, k_out)),
-    both replicated.
+    (+inf, −1) and sort last.  `block_k` is the tuned candidate-block
+    width handed to the re-rank kernel (0 = default; bit-identical at
+    every value).  Returns (out_d (Q, k_out), out_i (Q, k_out)), both
+    replicated.
     """
     spec_dev = jax.sharding.PartitionSpec(DPU_AXIS)
     spec_rep = jax.sharding.PartitionSpec()
-    fn = functools.partial(_device_rerank, k_out=k_out, interpret=interpret)
+    fn = functools.partial(
+        _device_rerank, k_out=k_out, block_k=block_k, interpret=interpret
+    )
 
     def per_device(raw, id_dev, id_row, queries, cand):
         return fn(raw[0], id_dev, id_row, queries, cand)

@@ -239,6 +239,18 @@ class ServingEngine:
         compaction re-places the cluster via Algorithm 1.
       delta_capacity: initial delta-buffer rows (pow2-bucketed; growth
         beyond a warmed bucket is an honest cold compile).
+      autotune: kernel-geometry autotuning mode, resolved once at
+        `warmup()` (see `repro.core.autotune`): "off" serves the engine's
+        build-time geometry untouched; "cache" (default) applies the
+        cached measured geometry for this (backend, shard shape, k) if one
+        exists, else the in-repo per-backend default; "sweep" measures a
+        candidate grid on synthetic shards first and persists the winner,
+        so later processes hit the cache.  Applying a different `block_n`
+        retiles the shards (bit-identical results by construction); the
+        warm set is computed AFTER the geometry lands, so tuned serving
+        keeps the zero-steady-state-recompile contract.
+      autotune_cache_dir: override the autotune cache directory
+        (default `~/.cache/repro`); tests and CI point this at a tmpdir.
 
     The re-rank cascade is configured on the ENGINE (`rerank="exact"` +
     `k_overfetch`), not here: serving reads `engine.rerank` and serves
@@ -265,7 +277,13 @@ class ServingEngine:
         overfetch: int | None = None,
         replace_threshold: float = 0.25,
         delta_capacity: int = 4096,
+        autotune: str = "cache",
+        autotune_cache_dir: str | None = None,
     ):
+        if autotune not in ("off", "cache", "sweep"):
+            raise ValueError(
+                f"autotune must be 'off', 'cache' or 'sweep', got {autotune!r}"
+            )
         self.engine = engine
         self.nprobe = int(nprobe)
         self.k = int(k)
@@ -278,6 +296,9 @@ class ServingEngine:
         self.compact_occupancy = float(compact_occupancy)
         self.overfetch = int(overfetch) if overfetch is not None else int(k)
         self.replace_threshold = float(replace_threshold)
+        self.autotune = autotune
+        self.autotune_cache_dir = autotune_cache_dir
+        self.autotune_report: dict | None = None
         self.stats = ServingStats()
         self._warm: set[tuple] = set()
         self._pending: list[np.ndarray] = []
@@ -345,6 +366,7 @@ class ServingEngine:
             row_capacity=r.row_capacity,
             ids_capacity=r.ids_capacity,
             dtype=r.dtype,
+            block_k=self.engine.rerank_block,
         )
 
     def _k_fetch(self) -> int:
@@ -434,6 +456,36 @@ class ServingEngine:
             tiles_per_dev=tiles_per_dev,
         )
 
+    def apply_autotune(self) -> dict:
+        """Resolve + apply the tuned kernel geometry (once; see `autotune`).
+
+        Called by `warmup()` before any executable is warmed, so warm keys
+        are computed against the post-retile shard geometry.  Idempotent:
+        the first call resolves via `repro.core.autotune.autotune_engine`
+        and applies the pick (`MemANNSEngine.apply_geometry` — retiles on a
+        block_n change, bit-identical results); later calls return the
+        stored report.
+        """
+        if self.autotune_report is not None:
+            return self.autotune_report
+        from repro.core.autotune import autotune_engine
+
+        geo, report = autotune_engine(
+            self.engine,
+            self.k,
+            mode=self.autotune,
+            cache_dir=self.autotune_cache_dir,
+        )
+        if geo is not None:
+            report["retiled"] = self.engine.apply_geometry(geo)
+        report["applied"] = self.tuned_geometry()
+        self.autotune_report = report
+        return report
+
+    def tuned_geometry(self) -> dict:
+        """The engine's effective kernel geometry (for stats/bench rows)."""
+        return self.engine.geometry().as_dict()
+
     def warmup(self, buckets: list[int] | None = None) -> list[int]:
         """Compile `sharded_search` for every bucket with a dummy batch.
 
@@ -444,7 +496,12 @@ class ServingEngine:
         scan path each pair bucket is warmed at every reachable tile
         capacity (`tile_buckets`), so steady state never recompiles on
         tile-count drift either.
+
+        The kernel-geometry autotune resolves FIRST (`apply_autotune`):
+        any retile lands before the executables compile, so the warmed
+        shapes are the tuned shapes.
         """
+        self.apply_autotune()
         buckets = sorted(buckets or self.default_buckets())
         rerank = self.engine.rerank == "exact"
         dim = self.engine.index.centroids.shape[1]
@@ -504,6 +561,7 @@ class ServingEngine:
             ops.rerank_dists(
                 np.zeros((self.micro_batch, dim), np.float32),
                 np.zeros((self.micro_batch, kd, dim), np.float32),
+                block_k=self.engine.rerank_block,
                 interpret=self.engine.interpret,
             )
         self._warm.add(self._delta_key())
@@ -559,7 +617,9 @@ class ServingEngine:
                 self.engine, padded, self.nprobe, kd, bound=None
             )
             dd, di = delta_exact_rerank(
-                delta, padded, dd, di, interpret=self.engine.interpret
+                delta, padded, dd, di,
+                interpret=self.engine.interpret,
+                block_k=self.engine.rerank_block,
             )
             return dd, di, tomb
         bound = delta_prune_bound(

@@ -1,0 +1,251 @@
+"""Kernel-geometry autotuning: invariance wall, cache lifecycle, serving.
+
+Three contracts (see repro/core/autotune.py):
+
+  * geometry invariance -- the tuned knobs (`block_n` retile,
+    `rerank_block`, `tile_floor`) are pure performance parameters: every
+    cell of scan x prune x rerank returns bit-identical (d, i) at every
+    geometry, because tile boundaries never change which rows are scanned
+    or how ties break (one stable argsort per pair merge) and the re-rank
+    kernel computes each (q, candidate) element independently of its block;
+  * cache lifecycle -- sweeps persist to a versioned JSON cache that
+    round-trips, ignores stale versions instead of misapplying them, and
+    turns every later resolve into a 0-candidate cache hit;
+  * serving -- `ServingEngine(autotune=...)` applies the geometry BEFORE
+    warmup computes the warm set, so tuned serving still runs at zero
+    steady-state recompiles.
+"""
+
+import dataclasses
+import itertools
+import json
+import os
+
+import jax
+import numpy as np
+import pytest
+
+from repro.core.autotune import (
+    CACHE_VERSION,
+    KernelGeometry,
+    autotune_engine,
+    cache_path,
+    engine_key,
+    load_cache,
+    load_defaults,
+    save_cache,
+)
+from repro.retrieval import MemANNSEngine, ServingEngine
+
+NPROBE = 8
+K = 10
+
+SCANS = ("tiles", "windows")
+BOOLS = (False, True)
+RERANKS = ("off", "exact")
+
+# block_n=256 is the build default; the wall re-checks every cell after
+# retiling down (finer tiles, more boundaries) and up (coarser, boundary
+# positions move); rerank cells additionally get a non-default rerank_block
+GEOMETRIES = (
+    KernelGeometry(block_n=128, rerank_block=64),
+    KernelGeometry(block_n=512, rerank_block=256),
+)
+
+
+@pytest.fixture(scope="module")
+def base(clustered_data):
+    xs, centers, qs, hist = clustered_data
+    eng = MemANNSEngine.build(
+        jax.random.PRNGKey(0),
+        xs,
+        n_clusters=32,
+        m=8,
+        history_queries=hist,
+        use_cooc=True,
+        n_combos=32,
+        block_n=256,
+        kmeans_iters=8,
+        pq_iters=6,
+        rerank="off",
+        k_overfetch=64,
+        store_raw=True,
+    )
+    return eng, qs
+
+
+def _cells(eng):
+    for scan, prune, rerank in itertools.product(SCANS, BOOLS, RERANKS):
+        yield (scan, prune, rerank), dataclasses.replace(
+            eng, scan=scan, prune=prune, rerank=rerank
+        )
+
+
+def test_geometry_invariance_wall(base):
+    """Every scan x prune x rerank cell is bit-identical at every geometry."""
+    eng, qs = base
+    ref = {
+        key: cell.search(qs, nprobe=NPROBE, k=K)
+        for key, cell in _cells(eng)
+    }
+    assert eng.shards.block_n == 256
+    for geo in GEOMETRIES:
+        retiled = eng.apply_geometry(geo)
+        assert retiled and eng.shards.block_n == geo.block_n
+        assert eng.rerank_block == geo.rerank_block
+        for key, cell in _cells(eng):
+            d, i = cell.search(qs, nprobe=NPROBE, k=K)
+            d0, i0 = ref[key]
+            np.testing.assert_array_equal(
+                np.asarray(i), np.asarray(i0),
+                err_msg=f"ids drifted at geometry {geo} cell {key}",
+            )
+            np.testing.assert_array_equal(
+                np.asarray(d), np.asarray(d0),
+                err_msg=f"dists drifted at geometry {geo} cell {key}",
+            )
+    # restore the build geometry for later module tests
+    eng.apply_geometry(KernelGeometry(block_n=256, rerank_block=0))
+
+
+def test_tile_floor_invariance(base):
+    """A raised tile-capacity floor pads with dummy tiles, never results."""
+    eng, qs = base
+    d0, i0 = eng.search(qs, nprobe=NPROBE, k=K)
+    eng.apply_geometry(KernelGeometry(tile_floor=4096))
+    try:
+        d1, i1 = eng.search(qs, nprobe=NPROBE, k=K)
+    finally:
+        eng.apply_geometry(KernelGeometry(tile_floor=0))
+    np.testing.assert_array_equal(np.asarray(i0), np.asarray(i1))
+    np.testing.assert_array_equal(np.asarray(d0), np.asarray(d1))
+
+
+def test_block_n_zero_inherits(base):
+    """block_n=0 is the inherit sentinel: no retile, knobs still applied."""
+    eng, _ = base
+    before = eng.shards
+    assert not eng.apply_geometry(KernelGeometry(block_n=0, rerank_block=128))
+    assert eng.shards is before
+    assert eng.rerank_block == 128
+    eng.apply_geometry(KernelGeometry(rerank_block=0))
+
+
+def test_cache_roundtrip(tmp_path):
+    entries = {
+        "cpu|w8x1addr|m8|cap4096|k16|rerank-off": {
+            "block_n": 512, "rerank_block": 128, "tile_floor": 0,
+        }
+    }
+    path = save_cache("cpu", entries, str(tmp_path))
+    assert os.path.basename(path) == f"autotune-cpu-v{CACHE_VERSION}.json"
+    assert load_cache("cpu", str(tmp_path)) == entries
+    # merge keeps existing keys
+    save_cache("cpu", {"other|key": {"block_n": 128}}, str(tmp_path))
+    merged = load_cache("cpu", str(tmp_path))
+    assert set(merged) == set(entries) | {"other|key"}
+    geo = KernelGeometry.from_dict(merged[next(iter(entries))])
+    assert geo == KernelGeometry(block_n=512, rerank_block=128)
+
+
+def test_stale_version_invalidated(tmp_path):
+    """A cache document from another build version is ignored, not applied."""
+    save_cache("cpu", {"k": {"block_n": 512}}, str(tmp_path))
+    p = cache_path("cpu", str(tmp_path))
+    doc = json.load(open(p))
+    doc["version"] = CACHE_VERSION - 1
+    json.dump(doc, open(p, "w"))
+    assert load_cache("cpu", str(tmp_path)) == {}
+    # corrupt files degrade to empty too
+    with open(p, "w") as f:
+        f.write("{not json")
+    assert load_cache("cpu", str(tmp_path)) == {}
+
+
+def test_defaults_are_inherit_on_cpu():
+    """The in-repo cpu default must be the no-op sentinel (honest: the
+    interpret-mode cpu path was never measured, so it inherits)."""
+    geo = load_defaults("cpu")
+    assert geo is not None and geo.block_n == 0
+
+
+def test_sweep_persists_then_cache_hits(base, tmp_path):
+    eng, _ = base
+    geo, rep = autotune_engine(
+        eng, K, mode="sweep", cache_dir=str(tmp_path),
+        block_ns=(128, 256), rerank_blocks=(128,),
+    )
+    assert rep["source"] == "sweep" and rep["swept"] > 0
+    assert geo is not None and geo.block_n in (128, 256)
+    key = engine_key(eng, K)
+    assert key in load_cache("cpu", str(tmp_path))
+    # second resolve: 0 candidates swept, identical pick, in every mode
+    for mode in ("sweep", "cache"):
+        geo2, rep2 = autotune_engine(
+            eng, K, mode=mode, cache_dir=str(tmp_path)
+        )
+        assert rep2["source"] == "cache" and rep2["swept"] == 0
+        assert geo2 == geo
+
+
+def test_autotune_off_returns_nothing(base):
+    eng, _ = base
+    geo, rep = autotune_engine(eng, K, mode="off")
+    assert geo is None and rep["source"] == "off" and rep["swept"] == 0
+
+
+def test_serving_warm_from_cache_zero_compiles(base, tmp_path):
+    """A cached non-default geometry retiles at warmup and then serves at
+    zero steady-state recompiles -- the warm set is computed post-retile."""
+    eng, qs = base
+    srv_ref = ServingEngine(
+        eng, nprobe=NPROBE, k=K, micro_batch=8, autotune="off"
+    )
+    srv_ref.warmup()
+    d0, i0 = srv_ref.search(qs)
+    # seed the cache with a measured-style entry picking a NON-default
+    # geometry, then serve through it
+    save_cache(
+        "cpu",
+        {engine_key(eng, K): {"block_n": 128, "rerank_block": 0}},
+        str(tmp_path),
+    )
+    srv = ServingEngine(
+        eng, nprobe=NPROBE, k=K, micro_batch=8,
+        autotune="cache", autotune_cache_dir=str(tmp_path),
+    )
+    srv.warmup()
+    try:
+        rep = srv.autotune_report
+        assert rep["source"] == "cache" and rep["retiled"]
+        assert srv.tuned_geometry()["block_n"] == 128
+        d1, i1 = srv.search(qs)
+        np.testing.assert_array_equal(i0, i1)
+        np.testing.assert_array_equal(d0, d1)
+        assert srv.stats.compiles == 0
+    finally:
+        eng.apply_geometry(KernelGeometry(block_n=256, rerank_block=0))
+
+
+def test_serving_default_mode_is_noop_on_cpu(base, tmp_path):
+    """autotune='cache' with an empty cache resolves the cpu default
+    (inherit) and must not retile or change behavior."""
+    eng, qs = base
+    srv = ServingEngine(
+        eng, nprobe=NPROBE, k=K, micro_batch=8,
+        autotune_cache_dir=str(tmp_path),
+    )
+    srv.warmup()
+    rep = srv.autotune_report
+    assert rep["source"] == "defaults" and not rep.get("retiled")
+    assert eng.shards.block_n == 256
+    srv.search(qs)
+    assert srv.stats.compiles == 0
+
+
+def test_serving_rejects_bad_mode(base):
+    eng, _ = base
+    with pytest.raises(ValueError):
+        ServingEngine(eng, nprobe=NPROBE, k=K, autotune="always")
+    with pytest.raises(ValueError):
+        autotune_engine(eng, K, mode="always")
