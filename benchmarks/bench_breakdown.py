@@ -3,7 +3,13 @@
 Stages: (a) cluster filtering, (b) LUT construction, (c) distance
 calculation, (d) top-k identification -- timed separately on the jnp path at
 two scales to show the bottleneck shifting to the distance calculation as N
-grows (the paper's motivating observation)."""
+grows (the paper's motivating observation).
+
+`run_serving_phases` is the measured, end-to-end counterpart: the serving
+layer's own per-phase timers (`upanns_phase_seconds`: plan / delta /
+dispatch / dispatch_wait / collect_wait) over a live pipelined stream, so
+the breakdown row comes from the same instrumentation production serving
+exposes instead of a stage-by-stage re-timing."""
 
 from __future__ import annotations
 
@@ -11,7 +17,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from benchmarks.common import emit, time_fn
+from benchmarks.common import emit, serving_obs, small_system, time_fn
 from repro.core.index import build_index, filter_clusters
 from repro.core.lut import build_lut
 from repro.core.search import adc_scan, topk_smallest
@@ -56,6 +62,36 @@ def run():
             f"topk%={100*t_topk*nprobe/total:.0f}"
         )
         emit(f"fig1_breakdown_n{n}", per_query, derived)
+
+    run_serving_phases()
+
+
+def run_serving_phases():
+    """Measured per-phase breakdown of live pipelined serving (Fig 18's
+    end-to-end analogue, from the serving layer's own phase histograms)."""
+    from repro.retrieval import PHASES, ServingEngine
+
+    xs, stream, eng = small_system(n=15000, c=64)
+    qs = stream.queries(128, seed=3)
+    srv = ServingEngine(eng, nprobe=8, k=10, micro_batch=32,
+                        pipeline_depth=1)
+    srv.warmup()
+    srv.search(qs)  # steady state (EWMA warm, jit warm)
+    srv.search(qs)
+    st = srv.stats
+    assert st.compiles == 0, st
+    totals = {p: st.phase_seconds(p) for p in PHASES}
+    span = sum(totals.values())
+    derived = ";".join(
+        f"{p}%={100 * t / max(span, 1e-12):.0f}" for p, t in totals.items()
+    )
+    emit(
+        "fig18_serving_phase_breakdown_ivf64_nprobe8",
+        1e6 * span / max(st.batches, 1),
+        f"{derived};p50_ms={1e3 * st.p50_s():.2f};"
+        f"p999_ms={1e3 * st.p999_s():.2f}",
+        stats=serving_obs(srv),
+    )
 
 
 if __name__ == "__main__":

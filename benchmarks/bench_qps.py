@@ -18,7 +18,13 @@ import time
 import numpy as np
 import jax.numpy as jnp
 
-from benchmarks.common import emit, geometry_tag, scan_ideal_bytes, small_system
+from benchmarks.common import (
+    emit,
+    geometry_tag,
+    scan_ideal_bytes,
+    serving_obs,
+    small_system,
+)
 from repro.core.index import filter_clusters, search as flat_search
 from repro.core.scheduling import (
     densify_schedule,
@@ -104,8 +110,67 @@ def run_pipeline(depths=(0, 1)):
             1e6 * len(qs) / qps,
             f"qps={qps:.1f};host_frac={st.host_fraction():.3f};"
             f"overlap_frac={st.overlap_fraction():.3f};"
-            f"p50_ms={1e3 * st.p50_s():.2f};p99_ms={1e3 * st.p99_s():.2f}",
+            f"p50_ms={1e3 * st.p50_s():.2f};p99_ms={1e3 * st.p99_s():.2f};"
+            f"p999_ms={1e3 * st.p999_s():.2f};"
+            f"dispatch_wait_s={st.dispatch_wait_s:.4f};"
+            f"collect_wait_s={st.collect_wait_s:.4f}",
+            stats=serving_obs(srv),
         )
+
+
+def run_obs_overhead():
+    """Observability cost: QPS with metrics + sampled tracing on vs off.
+
+    Interleaved min-of-N timing over the same engine and stream; the
+    engine's tracer is toggled between runs so the off side pays truly
+    nothing.  Asserted < 3% overhead — the budget docs/OBSERVABILITY.md
+    promises.
+    """
+    from repro.obs.trace import NULL_TRACER, Tracer
+    from repro.retrieval import ServingEngine
+
+    xs, stream, eng = small_system(n=15000, c=64)
+    qs = stream.queries(256, seed=9)
+    tracer = Tracer(sample=0.25)
+    srv_on = ServingEngine(
+        eng, nprobe=8, k=10, micro_batch=32, pipeline_depth=1, tracer=tracer
+    )
+    srv_off = ServingEngine(
+        eng, nprobe=8, k=10, micro_batch=32, pipeline_depth=1, metrics=False
+    )
+    srv_on.warmup()
+    srv_off.warmup()
+    _, ids_on = srv_on.search(qs)
+    eng.tracer = NULL_TRACER
+    _, ids_off = srv_off.search(qs)
+    np.testing.assert_array_equal(
+        ids_on, ids_off, err_msg="observability perturbed serving results"
+    )
+    t_on, t_off = np.inf, np.inf
+    for _ in range(7):  # interleaved best-of-N: drift hits both sides
+        eng.tracer = NULL_TRACER
+        t0 = time.perf_counter()
+        srv_off.search(qs)
+        t_off = min(t_off, time.perf_counter() - t0)
+        eng.tracer = tracer
+        t0 = time.perf_counter()
+        srv_on.search(qs)
+        t_on = min(t_on, time.perf_counter() - t0)
+    overhead = t_on / t_off - 1.0
+    qps_on, qps_off = len(qs) / t_on, len(qs) / t_off
+    assert srv_on.stats.compiles == 0 and srv_off.stats.compiles == 0
+    assert overhead < 0.03, (
+        f"metrics+tracing cost {100 * overhead:.2f}% QPS (budget 3%): "
+        f"on={qps_on:.1f} off={qps_off:.1f}"
+    )
+    emit(
+        "qps_obs_overhead_ivf64_nprobe8",
+        1e6 * t_on / len(qs),
+        f"qps_obs_on={qps_on:.1f};qps_obs_off={qps_off:.1f};"
+        f"overhead_frac={max(overhead, 0.0):.4f};trace_sample=0.25;"
+        f"batches_recorded={tracer.batches_recorded}",
+        stats=serving_obs(srv_on),
+    )
 
 
 def run():
@@ -206,6 +271,9 @@ def run():
     # --- pipelined vs serial serving (host planning hidden behind device) ---
     run_pipeline()
 
+    # --- observability cost: metrics + sampled tracing on vs off ------------
+    run_obs_overhead()
+
 
 if __name__ == "__main__":
     ap = argparse.ArgumentParser()
@@ -214,8 +282,15 @@ if __name__ == "__main__":
         help="run only the serving-pipeline axis at this depth "
              "(results always checked against a serial reference)",
     )
+    ap.add_argument(
+        "--obs", action="store_true",
+        help="run only the observability-overhead row (metrics + sampled "
+             "tracing on vs off, asserted < 3%%)",
+    )
     args = ap.parse_args()
     if args.pipeline is not None:
         run_pipeline((args.pipeline,))
+    elif args.obs:
+        run_obs_overhead()
     else:
         run()

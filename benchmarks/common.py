@@ -12,7 +12,10 @@ import time
 import jax
 import numpy as np
 
-ROWS: list[tuple[str, float, str]] = []
+# (name, us_per_call, derived[, stats]) — stats is an optional JSON-able
+# dict (e.g. a metrics-registry snapshot / per-phase breakdown) attached
+# to the row in the BENCH_<pr>.json artifact but not printed in the CSV
+ROWS: list[tuple] = []
 
 # kernel-geometry autotune mode benches construct serving engines with;
 # benchmarks/run.py overrides it from --autotune and stamps it on each row
@@ -31,9 +34,27 @@ def time_fn(fn, *args, iters: int = 5, warmup: int = 2, **kw) -> float:
     return float(np.median(ts))
 
 
-def emit(name: str, us_per_call: float, derived: str = ""):
-    ROWS.append((name, us_per_call, derived))
+def emit(name: str, us_per_call: float, derived: str = "",
+         stats: dict | None = None):
+    """Record one bench row.  `stats` (optional) is a JSON-able dict —
+    typically `ServingStats.snapshot()` plus a per-phase breakdown — that
+    rides into the BENCH_<pr>.json artifact as the row's ``metrics`` field
+    (CSV output is unchanged)."""
+    ROWS.append((name, us_per_call, derived) + ((stats,) if stats else ()))
     print(f"{name},{us_per_call:.1f},{derived}", flush=True)
+
+
+def serving_obs(srv) -> dict:
+    """The standard observability stamp for a serving bench row: the full
+    metrics snapshot + the per-phase wall-time breakdown."""
+    from repro.retrieval import PHASES
+
+    st = srv.stats
+    return {
+        "snapshot": st.snapshot(),
+        "phase_seconds": {p: st.phase_seconds(p) for p in PHASES},
+        "p999_ms": 1e3 * st.p999_s(),
+    }
 
 
 def geometry_tag(eng) -> str:

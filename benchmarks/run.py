@@ -97,12 +97,16 @@ def write_json(
     }
     if meta:
         doc["meta"] = {**doc.get("meta", {}), **meta}
-    for name, us_per_call, derived in rows:
+    for name, us_per_call, derived, *extra in rows:
         row = {
             "us_per_call": us_per_call,
             **_parse_derived(derived),
             **stamp,
         }
+        if extra and extra[0]:
+            # observability stamp (metrics snapshot + per-phase wall-time
+            # breakdown) attached via benchmarks.common.emit(stats=...)
+            row["metrics"] = extra[0]
         # roofline fraction: ideal code-stream seconds / measured seconds
         # (only for rows that report their ideal byte traffic)
         hbm_bw = meta.get("hbm_bw")

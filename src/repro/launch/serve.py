@@ -63,7 +63,31 @@ def main():
              "'sweep' measures a candidate grid first and persists the "
              "winner, 'off' serves the build-time geometry untouched",
     )
+    ap.add_argument(
+        "--metrics-port", type=int, default=None,
+        help="serve live observability over HTTP on this port (0 = any "
+             "free port): /metrics (Prometheus), /metrics.json, /traces "
+             "(Chrome trace JSON), /healthz.  Requires --retrieval",
+    )
+    ap.add_argument(
+        "--metrics-linger", type=float, default=0.0,
+        help="keep the process (and the /metrics endpoint) alive this many "
+             "seconds after the report prints, so scrapers can connect",
+    )
+    ap.add_argument(
+        "--trace-out", default=None,
+        help="write the span ring as Chrome trace-event JSON here "
+             "(load into https://ui.perfetto.dev).  Requires --retrieval",
+    )
+    ap.add_argument(
+        "--trace-sample", type=float, default=1.0,
+        help="fraction of micro-batches traced (deterministic accumulator "
+             "sampling; 1.0 = every batch)",
+    )
     args = ap.parse_args()
+    obs_on = args.metrics_port is not None or args.trace_out is not None
+    if obs_on and not args.retrieval:
+        ap.error("--metrics-port/--trace-out require --retrieval")
     if args.k_overfetch and args.rerank == "off":
         ap.error("--k-overfetch requires --rerank exact")
 
@@ -129,7 +153,10 @@ def main():
     if args.retrieval:
         from repro.configs.memanns import SIFT1B, reduced_retrieval
         from repro.data import make_clustered_vectors
-        from repro.retrieval import MemANNSEngine, ServingEngine
+        from repro.obs.trace import Tracer
+        from repro.retrieval import MemANNSEngine, ServingEngine, PHASES
+
+        tracer = Tracer(sample=args.trace_sample) if obs_on else None
 
         rcfg = reduced_retrieval(
             SIFT1B, n_vectors=args.retrieval_vectors, dim=cfg.d_model
@@ -158,7 +185,18 @@ def main():
             mutable=churn,
             compact_occupancy=args.compact_occupancy,
             autotune=args.autotune,
+            tracer=tracer,
         )
+        obs_server = None
+        if args.metrics_port is not None:
+            from repro.obs.http import ObsServer
+
+            obs_server = ObsServer(
+                srv.stats.registry, tracer, port=args.metrics_port
+            )
+            port = obs_server.start()
+            print(json.dumps({"metrics_endpoint":
+                              f"http://127.0.0.1:{port}/metrics"}))
         srv.warmup()
         # query with the (pooled) last hidden state proxy: last logits proj
         qvecs = np.asarray(
@@ -211,6 +249,14 @@ def main():
             "overlap_fraction": round(st.overlap_fraction(), 3),
             "p50_ms": round(1e3 * st.p50_s(), 2),
             "p99_ms": round(1e3 * st.p99_s(), 2),
+            "p999_ms": round(1e3 * st.p999_s(), 2),
+            # per-phase wall-time split of the batch lifecycle; dispatch
+            # wait vs collect wait is the honest pipelined-latency
+            # attribution (queueing behind earlier batches vs own device
+            # time)
+            "phase_seconds": {
+                p: round(st.phase_seconds(p), 4) for p in PHASES
+            },
             "rows_scanned": st.rows_scanned,
             "load_carry": [round(x, 1) for x in srv.load_carry().tolist()],
             # early-pruning effectiveness: bound-driven whole-tile skips
@@ -244,6 +290,15 @@ def main():
             }
 
     print(json.dumps(report, indent=1))
+
+    if args.retrieval and args.trace_out is not None:
+        tracer.write_chrome(args.trace_out)
+        print(json.dumps({"trace_out": args.trace_out,
+                          "spans": len(tracer.roots())}))
+    if args.retrieval and args.metrics_port is not None:
+        if args.metrics_linger > 0:
+            time.sleep(args.metrics_linger)
+        obs_server.stop()
 
 
 if __name__ == "__main__":

@@ -34,9 +34,10 @@ from repro.retrieval.layout import (
 )
 from repro.retrieval.mutation import CompactionReport
 from repro.retrieval.search import InFlightSearch
-from repro.retrieval.serving import ServingEngine, ServingStats
+from repro.retrieval.serving import PHASES, ServingEngine, ServingStats
 
 __all__ = [
+    "PHASES",
     "MemANNSEngine",
     "SearchPlan",
     "InFlightSearch",

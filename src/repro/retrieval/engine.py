@@ -18,6 +18,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core.index import IVFPQIndex, build_index, filter_clusters
+from repro.obs.trace import NULL_TRACER
 from repro.core.placement import (
     Placement,
     estimate_frequencies,
@@ -170,6 +171,13 @@ class MemANNSEngine:
     freqs: np.ndarray | None = None   # f_i estimate (kept for re-placement)
     delta: "object | None" = None     # DeltaIndex once mutation is enabled
     raw: RawStore | None = None       # raw-vector shard (rerank="exact")
+    # span tracer for engine-level sub-phases (schedule/densify/emit_tiles,
+    # rerank_dispatch, compaction internals).  Engine spans are child-only
+    # (root=False): they record when nested under a sampled serving batch
+    # span and evaporate otherwise, so a shared engine never pollutes
+    # another ServingEngine's trace ring.  ServingEngine(tracer=...)
+    # installs its tracer here.
+    tracer: "object" = NULL_TRACER
     _dev_arrays: tuple | None = None
     _raw_arrays: tuple | None = None
     _code_norms: np.ndarray | None = None  # (M,) cached codebook max norms
@@ -522,9 +530,11 @@ class MemANNSEngine:
         q_n = queries.shape[0]
         ndev = self.shards.ndev
         prune = self.prune if prune is None else prune
-        schedule, probed, qmc = self.schedule_batch(
-            queries, nprobe, load_carry=load_carry
-        )
+        tr = self.tracer
+        with tr.span("schedule", root=False):
+            schedule, probed, qmc = self.schedule_batch(
+                queries, nprobe, load_carry=load_carry
+            )
 
         max_pairs = int(schedule.counts_per_dev().max(initial=0))
         if pairs_per_dev is None:
@@ -533,25 +543,28 @@ class MemANNSEngine:
 
         # densify the index arrays (raises on capacity overflow), then
         # scatter the per-pair residuals with the same packing coordinates
-        pair_q, pair_slot, pair_valid = densify_schedule(
-            schedule, self.shards.local_slot, pairs_per_dev
-        )
-        order, d_sorted, pos = schedule.device_positions()
-        pq, pc = schedule.pair_q[order], schedule.pair_c[order]
-        # column of each pair's cluster within its probed row (qmc lookup)
-        cols = np.argmax(probed[pq] == pc[:, None], axis=1)
-        qmc_pairs = np.zeros((ndev, pairs_per_dev, queries.shape[1]), np.float32)
-        qmc_pairs[d_sorted, pos] = qmc[pq, cols]
+        with tr.span("densify", root=False):
+            pair_q, pair_slot, pair_valid = densify_schedule(
+                schedule, self.shards.local_slot, pairs_per_dev
+            )
+            order, d_sorted, pos = schedule.device_positions()
+            pq, pc = schedule.pair_q[order], schedule.pair_c[order]
+            # column of each pair's cluster within its probed row (qmc lookup)
+            cols = np.argmax(probed[pq] == pc[:, None], axis=1)
+            qmc_pairs = np.zeros(
+                (ndev, pairs_per_dev, queries.shape[1]), np.float32
+            )
+            qmc_pairs[d_sorted, pos] = qmc[pq, cols]
 
-        pair_lb = probed_ub = probed_sizes = None
-        if prune:
-            lb, ub = residual_bounds(qmc, self.code_norms())
-            # densify-padding pairs get +inf: their (empty) tile bodies are
-            # skipped for free and their (inf, -1) outputs are unchanged
-            pair_lb = np.full((ndev, pairs_per_dev), np.inf, np.float32)
-            pair_lb[d_sorted, pos] = lb[pq, cols]
-            probed_ub = ub
-            probed_sizes = self.index.cluster_sizes()[probed]
+            pair_lb = probed_ub = probed_sizes = None
+            if prune:
+                lb, ub = residual_bounds(qmc, self.code_norms())
+                # densify-padding pairs get +inf: their (empty) tile bodies
+                # are skipped for free and their (inf, -1) outputs unchanged
+                pair_lb = np.full((ndev, pairs_per_dev), np.inf, np.float32)
+                pair_lb[d_sorted, pos] = lb[pq, cols]
+                probed_ub = ub
+                probed_sizes = self.index.cluster_sizes()[probed]
 
         tile_pair = tile_block = tile_row0 = None
         tiles_cap = 0
@@ -576,11 +589,12 @@ class MemANNSEngine:
                     )
                 tiles_per_dev = round_capacity(max_tiles, floor=floor)
             tiles_cap = tiles_per_dev
-            tile_pair, tile_block, tile_row0 = emit_tiles(
-                pair_slot, pair_valid, s.slot_start, s.slot_size,
-                s.block_n, tiles_per_dev,
-                pair_key=pair_lb if prune else None,
-            )
+            with tr.span("emit_tiles", root=False):
+                tile_pair, tile_block, tile_row0 = emit_tiles(
+                    pair_slot, pair_valid, s.slot_start, s.slot_size,
+                    s.block_n, tiles_per_dev,
+                    pair_key=pair_lb if prune else None,
+                )
         return SearchPlan(
             qmc_pairs=qmc_pairs,
             pair_q=pair_q,
@@ -730,19 +744,20 @@ class MemANNSEngine:
         top-`k_out`.  `queries` must be the original-space queries — the
         raw shard is never rotated (see `schedule_batch`).
         """
-        raw_dev = self._raw_device_put()
-        _, spec_rep = self._sharding_specs()
-        q = jax.device_put(np.asarray(queries, np.float32), spec_rep)
-        # the ADC kernels pad past-the-end lanes with (+inf, <junk id>);
-        # harmless under ADC ordering (inf sorts last) but the re-rank
-        # re-scores by exact distance, so junk ids must be masked out or
-        # they resurrect as duplicates of real candidates
-        cand = jnp.where(jnp.isfinite(handle.out_d), handle.out_i, -1)
-        out_d, out_i = sharded_rerank(
-            *raw_dev, q, cand,
-            mesh=self.mesh, k_out=k_out, block_k=self.rerank_block,
-            interpret=self.interpret,
-        )
+        with self.tracer.span("rerank_dispatch", root=False, k_out=k_out):
+            raw_dev = self._raw_device_put()
+            _, spec_rep = self._sharding_specs()
+            q = jax.device_put(np.asarray(queries, np.float32), spec_rep)
+            # the ADC kernels pad past-the-end lanes with (+inf, <junk id>);
+            # harmless under ADC ordering (inf sorts last) but the re-rank
+            # re-scores by exact distance, so junk ids must be masked out or
+            # they resurrect as duplicates of real candidates
+            cand = jnp.where(jnp.isfinite(handle.out_d), handle.out_i, -1)
+            out_d, out_i = sharded_rerank(
+                *raw_dev, q, cand,
+                mesh=self.mesh, k_out=k_out, block_k=self.rerank_block,
+                interpret=self.interpret,
+            )
         return dataclasses.replace(handle, out_d=out_d, out_i=out_i)
 
     def collect(

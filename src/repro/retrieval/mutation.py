@@ -273,7 +273,9 @@ def compact_engine(
     if delta is None or not delta.active:
         return CompactionReport(0, 0, 0, 0, 0, False, 0.0)
 
-    new_index, info = compact_index(engine.index, delta)
+    tr = engine.tracer  # child-only spans: record under a compaction span
+    with tr.span("compact_index", root=False):
+        new_index, info = compact_index(engine.index, delta)
     grew = np.abs(info.new_sizes - info.old_sizes)
     replace = info.content_changed & (
         grew > replace_threshold * np.maximum(info.old_sizes, 1)
@@ -283,21 +285,23 @@ def compact_engine(
         if engine.freqs is not None
         else np.ones(new_index.n_clusters) / new_index.n_clusters
     )
-    new_placement = update_placement(
-        engine.placement,
-        new_index.cluster_sizes().astype(np.float64),
-        freqs,
-        replace,
-        centroids=new_index.centroids,
-    )
+    with tr.span("update_placement", root=False):
+        new_placement = update_placement(
+            engine.placement,
+            new_index.cluster_sizes().astype(np.float64),
+            freqs,
+            replace,
+            centroids=new_index.centroids,
+        )
     old_shapes = (
         engine.shards.codes.shape,
         engine.shards.slot_start.shape,
         engine.shards.window,
     )
-    new_shards, rewritten = update_shards(
-        new_index, new_placement, engine.shards, info.content_changed
-    )
+    with tr.span("update_shards", root=False):
+        new_shards, rewritten = update_shards(
+            new_index, new_placement, engine.shards, info.content_changed
+        )
     shapes_changed = old_shapes != (
         new_shards.codes.shape,
         new_shards.slot_start.shape,
@@ -323,9 +327,10 @@ def compact_engine(
             if delta.vectors is not None
             else np.zeros((0, engine.raw.dim), np.float32)
         )
-        engine.raw, raw_changed = update_raw_store(
-            engine.raw, add_ids, add_vecs, delta.tombstone_array()
-        )
+        with tr.span("update_raw_store", root=False):
+            engine.raw, raw_changed = update_raw_store(
+                engine.raw, add_ids, add_vecs, delta.tombstone_array()
+            )
         engine._raw_arrays = None
         shapes_changed = shapes_changed or raw_changed
     delta.reset()

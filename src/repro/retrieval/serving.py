@@ -60,6 +60,8 @@ import numpy as np
 
 from repro.core.delta import merge_results
 from repro.kernels import ops
+from repro.obs.metrics import NULL_REGISTRY, MetricsRegistry
+from repro.obs.trace import NULL_SPAN, NULL_TRACER
 from repro.retrieval.engine import MemANNSEngine, SearchPlan, round_capacity
 from repro.retrieval.mutation import (
     compact_engine,
@@ -82,6 +84,14 @@ from repro.retrieval.search import (
 # still reflect recent traffic
 LATENCY_WINDOW = 4096
 
+# per-batch lifecycle phases the serving layer times (the `phase` label
+# of `upanns_phase_seconds`; eagerly registered so exposition is
+# deterministic).  `plan` and `delta` are host work, `dispatch` is the
+# async enqueue, `dispatch_wait` is the time a dispatched batch sat
+# behind earlier in-flight batches before collect began, `collect_wait`
+# is the blocked collect itself (residual device execution + transfer).
+PHASES = ("plan", "delta", "dispatch", "dispatch_wait", "collect_wait")
+
 
 @dataclasses.dataclass
 class ServingStats:
@@ -103,9 +113,26 @@ class ServingStats:
       device_s: dispatch + blocked-collect seconds (incl. transfers).
       overlap_s: host planning seconds spent while a batch was in flight —
         planning hidden behind device work by the pipeline.
+      dispatch_wait_s: seconds dispatched batches spent queued behind
+        earlier in-flight batches before their collect began (pipeline
+        depth >= 1 only; part of the end-to-end latency that is NOT this
+        batch's own host or device time).
+      collect_wait_s: seconds spent blocked inside collect (residual
+        device execution + result transfer) — the honest device-side
+        component of per-batch latency under pipelining.
       latencies_s: per-micro-batch plan→collect latency samples, last
-        `LATENCY_WINDOW` batches (feeds `p50_s`/`p99_s`).
+        `LATENCY_WINDOW` batches.  DEPRECATED as a percentile source (the
+        log-bucketed `upanns_batch_latency_seconds` histogram in
+        `registry` feeds `p50_s`/`p99_s`/`p999_s` now); kept one release
+        for callers that read the raw window.
       bucket_hits: {pairs_per_dev bucket: times dispatched} histogram.
+      registry: the `repro.obs.metrics.MetricsRegistry` every counter
+        above is mirrored into (machine-readable: Prometheus text via
+        `render_prometheus`, JSON via `snapshot`).  Pass
+        `repro.obs.metrics.NULL_REGISTRY` (or construct the serving layer
+        with `metrics=False`) to disable.  The full metric catalog lives
+        in docs/OBSERVABILITY.md and is drift-checked by
+        tools/check_metrics.py.
 
     Scan / early-pruning telemetry:
       rows_scanned: total code rows visited by collected batches.
@@ -141,6 +168,8 @@ class ServingStats:
     host_s: float = 0.0
     device_s: float = 0.0
     overlap_s: float = 0.0
+    dispatch_wait_s: float = 0.0
+    collect_wait_s: float = 0.0
     rows_scanned: int = 0
     tiles_dispatched: int = 0
     tiles_skipped: int = 0
@@ -162,6 +191,136 @@ class ServingStats:
         default_factory=lambda: collections.deque(maxlen=LATENCY_WINDOW)
     )
     bucket_hits: dict[int, int] = dataclasses.field(default_factory=dict)
+    registry: object = None
+
+    def __post_init__(self):
+        if self.registry is None:
+            self.registry = MetricsRegistry()
+        r = self.registry
+        # the full catalog registers up front so exposition (and the
+        # tools/check_metrics.py drift check against docs/OBSERVABILITY.md)
+        # is deterministic regardless of which paths traffic exercised
+        self.m_batches = r.counter(
+            "upanns_serving_batches_total",
+            "Micro-batches collected, by scan variant", ("scan",))
+        self.m_queries = r.counter(
+            "upanns_serving_queries_total",
+            "Real (unpadded) queries served")
+        self.m_compiles = r.counter(
+            "upanns_serving_compiles_total",
+            "Cold executable compiles (0 after warmup is the contract)")
+        self.m_host = r.counter(
+            "upanns_host_seconds_total",
+            "Host-side planning seconds (cluster filter + Algorithm 2 + "
+            "densify + plan-time delta scans)")
+        self.m_device = r.counter(
+            "upanns_device_seconds_total",
+            "Dispatch + blocked-collect seconds (incl. transfers)")
+        self.m_overlap = r.counter(
+            "upanns_overlap_seconds_total",
+            "Host planning seconds hidden behind in-flight device work")
+        self.m_latency = r.histogram(
+            "upanns_batch_latency_seconds",
+            "Per-micro-batch plan->collect latency")
+        self.m_phase = r.histogram(
+            "upanns_phase_seconds",
+            "Per-micro-batch seconds by lifecycle phase", ("phase",))
+        for p in PHASES:  # eager children: exposition order is stable
+            self.m_phase.labels(phase=p)
+        self.m_rows_scanned = r.counter(
+            "upanns_rows_scanned_total",
+            "Code rows visited, per device", ("device",))
+        self.m_tiles_dispatched = r.counter(
+            "upanns_tiles_dispatched_total",
+            "Non-empty code tiles handed to the kernels")
+        self.m_tiles_skipped = r.counter(
+            "upanns_tiles_skipped_total",
+            "Tile bodies the pruning-bound check skipped whole, per device",
+            ("device",))
+        self.m_rows_pruned = r.counter(
+            "upanns_rows_pruned_total",
+            "Valid rows inside skipped tiles, per device", ("device",))
+        self.m_prune_frac = r.histogram(
+            "upanns_prune_fraction",
+            "Per-batch skipped/dispatched tile fraction")
+        self.m_warm_bound = r.counter(
+            "upanns_warm_bound_queries_total",
+            "Real queries dispatched with a finite warm-start bound")
+        self.m_bucket_hits = r.counter(
+            "upanns_bucket_hits_total",
+            "Dispatches per pairs-per-device capacity bucket", ("bucket",))
+        self.m_rerank_queries = r.counter(
+            "upanns_rerank_queries_total",
+            "Queries re-scored by the exact cascade", ("rerank",))
+        self.m_rerank_candidates = r.counter(
+            "upanns_rerank_candidates_total",
+            "Overfetched candidates re-scored at full precision", ("rerank",))
+        self.m_inserts = r.counter(
+            "upanns_mutation_inserts_total",
+            "Vectors appended to the delta buffer")
+        self.m_deletes = r.counter(
+            "upanns_mutation_deletes_total", "Ids tombstoned")
+        self.m_compactions = r.counter(
+            "upanns_compactions_total",
+            "Delta->main merges triggered (auto or explicit)")
+        self.m_starved = r.counter(
+            "upanns_starved_batches_total",
+            "Batches where tombstones ate a query's whole overfetch window")
+        self.m_delta_occupancy = r.gauge(
+            "upanns_delta_occupancy", "Delta buffer fill fraction")
+        self.m_tombstones = r.gauge(
+            "upanns_tombstones", "Live tombstone count")
+        self.m_compaction_s = r.histogram(
+            "upanns_compaction_seconds", "Per-compaction latency")
+
+    # -------------------- recording helpers --------------------------- #
+    # Each helper updates the legacy field AND its registry mirror, so the
+    # two can never drift; serving code calls these instead of touching
+    # either store directly.
+
+    def note_compile(self) -> None:
+        self.compiles += 1
+        self.m_compiles.inc()
+
+    def note_bucket_hit(self, bucket: int) -> None:
+        self.bucket_hits[bucket] = self.bucket_hits.get(bucket, 0) + 1
+        self.m_bucket_hits.inc(bucket=bucket)
+
+    def note_host(self, seconds: float, overlapped: bool) -> None:
+        self.host_s += seconds
+        self.m_host.inc(seconds)
+        if overlapped:
+            self.overlap_s += seconds
+            self.m_overlap.inc(seconds)
+
+    def observe_phase(self, phase: str, seconds: float) -> None:
+        self.m_phase.observe(seconds, phase=phase)
+
+    def note_inserts(self, n: int) -> None:
+        self.inserts += n
+        self.m_inserts.inc(n)
+
+    def note_deletes(self, n: int) -> None:
+        self.deletes += n
+        self.m_deletes.inc(n)
+
+    def note_compaction(self, latency_s: float) -> None:
+        self.compactions += 1
+        self.compaction_s.append(latency_s)
+        self.m_compactions.inc()
+        self.m_compaction_s.observe(latency_s)
+
+    def set_mutation_gauges(self, occupancy: float, tombstones: int) -> None:
+        self.delta_occupancy = occupancy
+        self.tombstones = tombstones
+        self.m_delta_occupancy.set(occupancy)
+        self.m_tombstones.set(tombstones)
+
+    def snapshot(self) -> dict:
+        """JSON-able dump of every registered metric (bench row stamp)."""
+        return self.registry.snapshot()
+
+    # ------------------------ derived views --------------------------- #
 
     def host_fraction(self) -> float:
         total = self.host_s + self.device_s
@@ -175,7 +334,12 @@ class ServingStats:
 
     def prune_percentile(self, q: float) -> float:
         """Per-batch prune-effectiveness percentile (bound-tightening
-        profile) over the last `LATENCY_WINDOW` batches."""
+        profile).  Histogram-backed (O(1) memory, rel. error <=
+        sqrt(GROWTH)-1); falls back to the deprecated deque window when
+        metrics are off."""
+        h = self.m_prune_frac.labels()
+        if h.count:
+            return h.quantile(q)
         if not self.prune_fracs:
             return 0.0
         return float(np.percentile(np.asarray(self.prune_fracs), q))
@@ -185,17 +349,37 @@ class ServingStats:
         return self.overlap_s / self.host_s if self.host_s > 0 else 0.0
 
     def latency_percentile(self, q: float) -> float:
-        """Per-micro-batch latency percentile in seconds (plan -> collect),
-        over the last `LATENCY_WINDOW` batches."""
+        """Per-micro-batch latency percentile in seconds (plan -> collect).
+
+        Backed by the `upanns_batch_latency_seconds` log-bucketed histogram
+        (lifetime, O(1) memory, relative error <= sqrt(GROWTH)-1 ~ 4.4%,
+        p999 as cheap as p50); falls back to the deprecated `latencies_s`
+        deque window when metrics are off."""
+        h = self.m_latency.labels()
+        if h.count:
+            return h.quantile(q)
         if not self.latencies_s:
             return 0.0
         return float(np.percentile(np.asarray(self.latencies_s), q))
+
+    def phase_percentile(self, phase: str, q: float) -> float:
+        """Per-batch percentile of one lifecycle phase (see `PHASES`)."""
+        return self.m_phase.labels(phase=phase).quantile(q)
+
+    def phase_seconds(self, phase: str) -> float:
+        """Total seconds spent in one lifecycle phase (see `PHASES`)."""
+        return float(self.m_phase.labels(phase=phase).sum)
 
     def p50_s(self) -> float:
         return self.latency_percentile(50.0)
 
     def p99_s(self) -> float:
         return self.latency_percentile(99.0)
+
+    def p999_s(self) -> float:
+        """p999 latency — free with the histogram backend (and exactly as
+        trustworthy as p50: same bounded relative error)."""
+        return self.latency_percentile(99.9)
 
     def compaction_mean_s(self) -> float:
         if not self.compaction_s:
@@ -251,6 +435,19 @@ class ServingEngine:
         keeps the zero-steady-state-recompile contract.
       autotune_cache_dir: override the autotune cache directory
         (default `~/.cache/repro`); tests and CI point this at a tmpdir.
+      metrics: mirror `ServingStats` into a per-engine
+        `repro.obs.metrics.MetricsRegistry` (`stats.registry`): Prometheus
+        text / JSON exposition, histogram-backed p50/p99/p999.  `False`
+        installs `NULL_REGISTRY` (every mirror call a no-op) and the
+        percentile estimators fall back to the legacy deque windows.
+      tracer: a `repro.obs.trace.Tracer` recording one span tree per
+        micro-batch (plan > schedule/densify/emit_tiles, delta, dispatch >
+        rerank_dispatch, dispatch_wait, collect, merge; compactions root
+        their own tree).  Installed on the engine too, so engine-level
+        sub-phases nest under the serving spans.  `None` (default) traces
+        nothing at zero cost.  Tracing and metrics are observability,
+        never behavior: results are bit-identical and steady-state
+        compiles stay 0 with them on or off (pinned by tests/test_obs.py).
 
     The re-rank cascade is configured on the ENGINE (`rerank="exact"` +
     `k_overfetch`), not here: serving reads `engine.rerank` and serves
@@ -279,6 +476,8 @@ class ServingEngine:
         delta_capacity: int = 4096,
         autotune: str = "cache",
         autotune_cache_dir: str | None = None,
+        metrics: bool = True,
+        tracer=None,
     ):
         if autotune not in ("off", "cache", "sweep"):
             raise ValueError(
@@ -299,7 +498,14 @@ class ServingEngine:
         self.autotune = autotune
         self.autotune_cache_dir = autotune_cache_dir
         self.autotune_report: dict | None = None
-        self.stats = ServingStats()
+        self.tracer = tracer if tracer is not None else NULL_TRACER
+        if tracer is not None:
+            # engine-level sub-phase spans (schedule/densify/emit_tiles,
+            # rerank_dispatch, compaction internals) nest under ours
+            engine.tracer = tracer
+        self.stats = ServingStats(
+            registry=MetricsRegistry() if metrics else NULL_REGISTRY
+        )
         self._warm: set[tuple] = set()
         self._pending: list[np.ndarray] = []
         self._starved = False
@@ -606,7 +812,7 @@ class ServingEngine:
             return None, None, tomb
         key = self._delta_key()
         if key not in self._warm:  # capacity grew past the warmed bucket
-            self.stats.compiles += 1
+            self.stats.note_compile()
             self._warm.add(key)
         if self.engine.rerank == "exact":
             # cascade: the ADC prune bound lives in ADC space and a row
@@ -649,7 +855,7 @@ class ServingEngine:
             k_fetch = self.k
         key = self._key(plan, k_fetch)
         if key not in self._warm:
-            self.stats.compiles += 1
+            self.stats.note_compile()
             self._warm.add(key)
         handle = self.engine.dispatch_plan(plan, k_fetch)
         if self.engine.rerank == "exact":
@@ -658,7 +864,7 @@ class ServingEngine:
             k_out = k_fetch if self.mutable else self.k
             rkey = self._rerank_key(k_fetch, k_out)
             if rkey not in self._warm:
-                self.stats.compiles += 1
+                self.stats.note_compile()
                 self._warm.add(rkey)
             handle = self.engine.dispatch_rerank(handle, queries, k_out)
         if self.load_feedback:
@@ -666,9 +872,7 @@ class ServingEngine:
                 self.load_alpha * handle.dev_rows.astype(np.float64)
                 + (1.0 - self.load_alpha) * self._load_ewma
             )
-        self.stats.bucket_hits[plan.pairs_per_dev] = (
-            self.stats.bucket_hits.get(plan.pairs_per_dev, 0) + 1
-        )
+        self.stats.note_bucket_hit(plan.pairs_per_dev)
         return handle
 
     def _collect_micro_batch(
@@ -677,49 +881,91 @@ class ServingEngine:
         q_n: int,
         t_start: float,
         mut: tuple | None = None,
+        t_dispatched: float | None = None,
+        bspan=NULL_SPAN,
     ) -> tuple[np.ndarray, np.ndarray]:
         """Block on one in-flight micro-batch; slice padding, record stats.
 
         `mut` carries the batch's plan-time mutation snapshot
         (delta results + tombstones); the tombstone filter composes with
         the early-pruning top-k merge here, after the device merge.
+
+        `t_dispatched` (when known) splits the pipelined latency honestly:
+        collect-start minus dispatch-end is `dispatch_wait` (this batch sat
+        behind earlier in-flight work — pipeline queueing, not its own
+        cost), and the blocked collect itself is `collect_wait` (residual
+        device execution + transfer).  Both land in `upanns_phase_seconds`;
+        the end-to-end plan->collect sample is unchanged.  `bspan` is the
+        batch's root trace span (`NULL_SPAN` when untraced).
         """
+        st = self.stats
+        tr = self.tracer
         t0 = time.perf_counter()
-        d, i = self.engine.collect(handle)
+        if t_dispatched is not None:
+            wait = max(t0 - t_dispatched, 0.0)
+            st.dispatch_wait_s += wait
+            st.observe_phase("dispatch_wait", wait)
+            bspan.add("dispatch_wait", t_dispatched, t0)
+        with tr.span("collect", parent=bspan):
+            d, i = self.engine.collect(handle)
         t1 = time.perf_counter()
-        self.stats.device_s += t1 - t0
-        self.stats.latencies_s.append(t1 - t_start)
-        self.stats.batches += 1
-        self.stats.queries += q_n
-        self.stats.rows_scanned += int(handle.dev_rows.sum())
+        st.device_s += t1 - t0
+        st.m_device.inc(t1 - t0)
+        st.collect_wait_s += t1 - t0
+        st.observe_phase("collect_wait", t1 - t0)
+        st.latencies_s.append(t1 - t_start)
+        st.m_latency.observe(t1 - t_start)
+        st.batches += 1
+        st.m_batches.inc(scan=handle.plan.scan)
+        st.queries += q_n
+        st.m_queries.inc(q_n)
+        dev_rows = np.asarray(handle.dev_rows)
+        st.rows_scanned += int(dev_rows.sum())
+        for dev in range(dev_rows.shape[0]):
+            if dev_rows[dev]:
+                st.m_rows_scanned.inc(float(dev_rows[dev]), device=dev)
         # early-pruning effectiveness: skipped tile bodies vs dispatched
         # tiles, per batch (windowed, the bound-tightening profile)
         tiles = self.engine.plan_tile_count(handle.plan)
         skipped = rows = 0
         if handle.prune_stats is not None:
-            ps = np.asarray(handle.prune_stats).sum(axis=0)
-            skipped, rows = int(ps[0]), int(ps[1])
-        self.stats.tiles_dispatched += tiles
-        self.stats.tiles_skipped += skipped
-        self.stats.rows_pruned += rows
-        self.stats.prune_fracs.append(skipped / tiles if tiles else 0.0)
+            ps = np.asarray(handle.prune_stats)
+            for dev in range(ps.shape[0]):
+                if ps[dev, 0]:
+                    st.m_tiles_skipped.inc(float(ps[dev, 0]), device=dev)
+                if ps[dev, 1]:
+                    st.m_rows_pruned.inc(float(ps[dev, 1]), device=dev)
+            tot = ps.sum(axis=0)
+            skipped, rows = int(tot[0]), int(tot[1])
+        st.tiles_dispatched += tiles
+        st.m_tiles_dispatched.inc(tiles)
+        st.tiles_skipped += skipped
+        st.rows_pruned += rows
+        frac = skipped / tiles if tiles else 0.0
+        st.prune_fracs.append(frac)
+        st.m_prune_frac.observe(frac)
         if handle.plan.pruned and handle.query_bound is not None:
             # real (unpadded) queries dispatched with a finite warm start
-            self.stats.warm_bound_queries += int(
-                np.isfinite(handle.query_bound[:q_n]).sum()
-            )
+            n_warm = int(np.isfinite(handle.query_bound[:q_n]).sum())
+            st.warm_bound_queries += n_warm
+            st.m_warm_bound.inc(n_warm)
         if self.engine.rerank == "exact":
-            self.stats.reranked_queries += q_n
-            self.stats.rerank_candidates += q_n * self._k_fetch()
+            st.reranked_queries += q_n
+            st.rerank_candidates += q_n * self._k_fetch()
+            st.m_rerank_queries.inc(q_n, rerank="exact")
+            st.m_rerank_candidates.inc(q_n * self._k_fetch(), rerank="exact")
         if mut is not None:
             dd, di, tomb = mut
-            d, i = merge_results(d, i, dd, di, tomb, self.k)
+            with tr.span("merge", parent=bspan, tombstones=int(tomb.size)):
+                d, i = merge_results(d, i, dd, di, tomb, self.k)
             if tomb.size and (i[:q_n] < 0).any():
                 # tombstones swallowed a query's whole overfetch window:
                 # results are truncated, so compact as soon as the batch
                 # drain finishes (tombstone-free serving is exact again)
                 self._starved = True
-                self.stats.starved_batches += 1
+                st.starved_batches += 1
+                st.m_starved.inc()
+        tr.end_batch(bspan)
         return d[:q_n], i[:q_n]
 
     def search(self, queries: np.ndarray) -> tuple[np.ndarray, np.ndarray]:
@@ -749,24 +995,39 @@ class ServingEngine:
 
         mutating = self.engine.mutation_active
         k_fetch = self._k_fetch()
+        st = self.stats
+        tr = self.tracer
         for s in range(0, queries.shape[0], self.micro_batch):
             chunk = queries[s : s + self.micro_batch]
+            bspan = tr.begin_batch(
+                queries=int(chunk.shape[0]), scan=self.engine.scan
+            )
             t0 = time.perf_counter()
             padded = self._pad_chunk(chunk)
-            plan = self._plan_micro_batch(padded)
+            with tr.span("plan", parent=bspan, nprobe=self.nprobe):
+                plan = self._plan_micro_batch(padded)
+            t1a = time.perf_counter()
             mut = None
             if mutating:
                 # delta search + tombstone snapshot at plan time: host work,
                 # overlappable with in-flight device batches like planning
-                mut = self._delta_micro_batch(padded, plan, k_fetch)
+                with tr.span("delta", parent=bspan):
+                    mut = self._delta_micro_batch(padded, plan, k_fetch)
             t1 = time.perf_counter()
-            self.stats.host_s += t1 - t0
-            if inflight:  # host planning hidden behind in-flight device work
-                self.stats.overlap_s += t1 - t0
-            handle = self._dispatch_micro_batch(plan, k_fetch, padded)
+            # host planning is hidden behind in-flight device work
+            st.note_host(t1 - t0, overlapped=bool(inflight))
+            st.observe_phase("plan", t1a - t0)
+            if mutating:
+                st.observe_phase("delta", t1 - t1a)
+            with tr.span(
+                "dispatch", parent=bspan, pairs_per_dev=plan.pairs_per_dev
+            ):
+                handle = self._dispatch_micro_batch(plan, k_fetch, padded)
             t2 = time.perf_counter()
-            self.stats.device_s += t2 - t1
-            inflight.append((handle, chunk.shape[0], t0, mut))
+            st.device_s += t2 - t1
+            st.m_device.inc(t2 - t1)
+            st.observe_phase("dispatch", t2 - t1)
+            inflight.append((handle, chunk.shape[0], t0, mut, t2, bspan))
             while len(inflight) > depth:
                 collect_one()
         while inflight:
@@ -811,8 +1072,10 @@ class ServingEngine:
 
     def _mutation_gauges(self) -> None:
         d = self.engine.delta
-        self.stats.delta_occupancy = d.occupancy if d is not None else 0.0
-        self.stats.tombstones = d.tombstone_count if d is not None else 0
+        self.stats.set_mutation_gauges(
+            d.occupancy if d is not None else 0.0,
+            d.tombstone_count if d is not None else 0,
+        )
 
     def insert(self, ids: np.ndarray, vectors: np.ndarray) -> int:
         """Insert vectors into the live index; next search sees them.
@@ -821,7 +1084,7 @@ class ServingEngine:
         """
         self._require_mutable()
         n = insert_into(self.engine, ids, vectors)
-        self.stats.inserts += n
+        self.stats.note_inserts(n)
         self._maybe_compact()
         self._mutation_gauges()
         return n
@@ -830,7 +1093,7 @@ class ServingEngine:
         """Tombstone ids; auto-compacts at `tombstone_limit`."""
         self._require_mutable()
         n = delete_from(self.engine, ids)
-        self.stats.deletes += n
+        self.stats.note_deletes(n)
         self._maybe_compact()
         self._mutation_gauges()
         return n
@@ -849,11 +1112,12 @@ class ServingEngine:
         """Merge the delta into the main index (incremental re-placement +
         shard delta-rebuild); returns the CompactionReport."""
         self._require_mutable()
-        report = compact_engine(
-            self.engine, replace_threshold=self.replace_threshold
-        )
+        # compactions run between batches, so the span roots its own tree
+        with self.tracer.span("compaction"):
+            report = compact_engine(
+                self.engine, replace_threshold=self.replace_threshold
+            )
         if report.latency_s > 0.0:
-            self.stats.compactions += 1
-            self.stats.compaction_s.append(report.latency_s)
+            self.stats.note_compaction(report.latency_s)
         self._mutation_gauges()
         return report

@@ -1,0 +1,116 @@
+"""Obs smoke: boot the serving launcher, scrape /metrics live, keep a trace.
+
+``PYTHONPATH=src python tools/obs_smoke.py [--trace-out PATH]``
+
+CI's "obs smoke" step: starts ``repro.launch.serve`` with ``--retrieval
+--metrics-port 0`` as a subprocess, reads the announced endpoint from its
+stdout, scrapes ``/metrics`` + ``/metrics.json`` + ``/healthz`` during the
+post-report linger window, and asserts the scrape is a valid Prometheus
+document carrying real traffic (queries served > 0, batch-latency samples,
+zero compile drift).  The Chrome trace the child writes is validated as
+loadable JSON with span events and kept as a CI artifact next to
+BENCH_<pr>.json — drag it into https://ui.perfetto.dev.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import re
+import subprocess
+import sys
+import time
+import urllib.request
+from pathlib import Path
+
+ROOT = Path(__file__).resolve().parent.parent
+
+
+def scrape(url: str) -> str:
+    with urllib.request.urlopen(url, timeout=10) as resp:
+        return resp.read().decode("utf-8")
+
+
+def metric_value(text: str, name: str) -> float:
+    """Sum of all samples of one (possibly labeled) metric family."""
+    total, seen = 0.0, False
+    for line in text.splitlines():
+        if line.startswith(name) and not line.startswith("#"):
+            rest = line[len(name):]
+            if rest[:1] not in ("{", " "):
+                continue  # longer name sharing the prefix
+            total += float(line.rsplit(" ", 1)[1])
+            seen = True
+    if not seen:
+        raise AssertionError(f"metric {name} absent from scrape")
+    return total
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--trace-out", default="trace_sample.json",
+                    help="Chrome trace path the child writes (CI artifact)")
+    ap.add_argument("--timeout", type=float, default=900.0)
+    args = ap.parse_args()
+
+    cmd = [  # -u: the child's report must stream through the pipe unbuffered
+        sys.executable, "-u", "-m", "repro.launch.serve",
+        "--arch", "mamba2-130m", "--reduced", "--steps", "4", "--batch", "8",
+        "--retrieval", "--retrieval-vectors", "6000",
+        "--metrics-port", "0", "--metrics-linger", "30",
+        "--trace-out", args.trace_out,
+    ]
+    print("+", " ".join(cmd), flush=True)
+    child = subprocess.Popen(
+        cmd, stdout=subprocess.PIPE, text=True, cwd=ROOT, bufsize=1
+    )
+    endpoint = None
+    deadline = time.monotonic() + args.timeout
+    try:
+        # the launcher announces the bound port before the (slow) build;
+        # the report precedes the linger window, so once we see retrieval
+        # stats in stdout the registry is fully populated and scrapable
+        saw_report = False
+        for line in child.stdout:
+            print(line, end="", flush=True)
+            m = re.search(r'"metrics_endpoint": "([^"]+)"', line)
+            if m:
+                endpoint = m.group(1)
+            if '"retrieval_stats"' in line:
+                saw_report = True
+            if '"trace_out"' in line:
+                break
+            if time.monotonic() > deadline:
+                raise AssertionError("timed out waiting for serve report")
+        assert endpoint, "no metrics_endpoint announced on stdout"
+        assert saw_report, "serve report carried no retrieval_stats"
+
+        base = endpoint.rsplit("/", 1)[0]
+        assert scrape(f"{base}/healthz").strip() == "ok"
+        text = scrape(endpoint)
+        assert text.count("# TYPE ") >= 20, "catalog suspiciously small"
+        assert metric_value(text, "upanns_serving_queries_total") > 0
+        assert metric_value(text, "upanns_batch_latency_seconds_count") > 0
+        assert metric_value(text, "upanns_serving_compiles_total") >= 0
+        snap = json.loads(scrape(f"{base}/metrics.json"))
+        assert "upanns_phase_seconds" in snap
+        traces = json.loads(scrape(f"{base}/traces"))
+        assert traces["traceEvents"], "/traces returned no span events"
+        print(f"scraped {text.count('# TYPE ')} families from {endpoint}",
+              flush=True)
+    finally:
+        child.terminate()
+        child.wait(timeout=30)
+
+    trace_path = ROOT / args.trace_out
+    trace = json.loads(trace_path.read_text())
+    spans = [e for e in trace["traceEvents"] if e.get("ph") == "X"]
+    names = {e["name"] for e in spans}
+    assert {"batch", "plan", "dispatch", "collect"} <= names, names
+    print(f"obs smoke ok: {len(spans)} spans in {args.trace_out}, "
+          f"phases {sorted(names)}")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
