@@ -1,0 +1,138 @@
+"""Fault-tolerant serving: QPS + recall under injected faults.
+
+Rows emitted:
+  * `faults_healthy_baseline`: the same engine/stream with no fault plan
+    — the QPS and recall the degraded rows are read against.
+  * `faults_device_death`: single-device death at stream start; replica
+    failover re-routes its pairs, clusters with no surviving replica
+    degrade with coverage accounting.  Reports QPS, recall, and the
+    degraded fraction.
+  * `faults_overload`: a bounded ingress queue under a burst larger than
+    its limit, with a deadline that forces degraded service on late
+    batches — admission control sheds the excess instead of queueing
+    without bound.
+
+Also the CI "fault smoke" gate — asserted in-bench before any row is
+emitted: zero crashed queries under failure (every accepted query
+returns, well-formed), fully-covered queries bit-identical to the
+healthy run at compiles==0, rejections counted with exact conservation
+(answered + rejected == submitted), and the queue never exceeds its
+configured bound.
+"""
+
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from benchmarks.common import emit, serving_obs, small_system
+
+
+def _recall(ids: np.ndarray, exact: np.ndarray) -> float:
+    hits = sum(
+        len(set(ids[r].tolist()) & set(exact[r].tolist()))
+        for r in range(ids.shape[0])
+    )
+    return hits / exact.size
+
+
+def run():
+    import jax
+
+    from repro.retrieval import FaultPlan, ServingEngine
+
+    xs, stream, eng = small_system()
+    ndev = len(jax.devices())
+    nprobe, k, mb = 8, 10, 32
+    qs = stream.queries(128, seed=8)
+    exact = np.argsort(
+        ((qs[:, None, :] - xs[None, :, :]) ** 2).sum(-1), axis=1
+    )[:, :k].astype(np.int64)
+
+    # ---- healthy baseline --------------------------------------------------
+    base = ServingEngine(eng, nprobe=nprobe, k=k, micro_batch=mb)
+    base.warmup()
+    base.search(qs)  # steady state
+    t0 = time.perf_counter()
+    d0, i0 = base.search(qs)
+    base_s = time.perf_counter() - t0
+    assert base.stats.compiles == 0, base.stats
+    emit(
+        "faults_healthy_baseline", 1e6 * base_s / len(qs),
+        f"qps={len(qs) / base_s:.1f};recall={_recall(i0, exact):.4f}",
+        stats=serving_obs(base),
+    )
+
+    # ---- single-device death -----------------------------------------------
+    if ndev < 2:
+        print("# faults_device_death skipped: single-device host "
+              "(CI fakes 8 via XLA_FLAGS)", flush=True)
+    else:
+        c = eng.index.n_clusters
+        dead = min(
+            range(ndev),
+            key=lambda d: sum(
+                1 for ci in range(c)
+                if set(eng.placement.replicas[ci]) <= {d}
+            ),
+        )
+        fp = FaultPlan(device_death={dead: 0})
+        srv = ServingEngine(
+            eng, nprobe=nprobe, k=k, micro_batch=mb, faults=fp,
+        )
+        srv.warmup()
+        srv.search(qs)
+        t0 = time.perf_counter()
+        res = srv.search_result(qs)
+        dead_s = time.perf_counter() - t0
+        # zero crashed queries: everything accepted came back well-formed
+        assert res.ids.shape == (len(qs), k), res.ids.shape
+        # failover never compiles (mesh shape is invariant)
+        assert srv.stats.compiles == 0, srv.stats
+        assert srv.stats.failovers == 1
+        # covered queries are bit-identical to the healthy run
+        ok = ~res.degraded
+        np.testing.assert_array_equal(res.ids[ok], i0[ok])
+        np.testing.assert_array_equal(res.dists[ok], d0[ok])
+        deg_frac = float(res.degraded.mean())
+        emit(
+            "faults_device_death", 1e6 * dead_s / len(qs),
+            f"qps={len(qs) / dead_s:.1f};recall={_recall(res.ids, exact):.4f}"
+            f";degraded_frac={deg_frac:.3f};lost_pairs={len(res.coverage_lost)}"
+            f";dead_device={dead}",
+            stats=serving_obs(srv),
+        )
+
+    # ---- overload: bounded queue + deadline --------------------------------
+    limit = 64
+    srv = ServingEngine(
+        eng, nprobe=nprobe, k=k, micro_batch=mb,
+        queue_limit=limit, deadline_ms=0.0,  # every late chunk degrades
+    )
+    srv.warmup()
+    burst = stream.queries(256, seed=9)  # 4x the queue bound
+    t0 = time.perf_counter()
+    accepted = 0
+    for off in range(0, len(burst), 32):
+        accepted += srv.submit(burst[off:off + 32])
+        # the queue never exceeds its configured bound
+        assert srv.pending() <= limit, srv.pending()
+    res = srv.flush_result()
+    over_s = time.perf_counter() - t0
+    rejected = srv.stats.rejected_queries
+    # rejections are counted, with exact conservation
+    assert rejected > 0, "burst did not overflow the queue"
+    assert accepted + rejected == len(burst)
+    assert res.ids.shape == (accepted, k)
+    assert srv.stats.compiles == 0, srv.stats
+    emit(
+        "faults_overload", 1e6 * over_s / max(accepted, 1),
+        f"submitted={len(burst)};answered={accepted};rejected={rejected}"
+        f";degraded={int(res.degraded.sum())};queue_limit={limit}",
+        stats=serving_obs(srv),
+    )
+
+
+if __name__ == "__main__":
+    run()

@@ -45,6 +45,7 @@ MODULES = [
     ("bench_mutation", "insert/delete churn QPS + compaction latency"),
     ("bench_recall_frontier", "recall@k vs QPS: PQ-only vs exact re-rank"),
     ("bench_autotune", "kernel-geometry sweep vs default + cache reuse"),
+    ("bench_faults", "QPS + recall under device death and overload"),
 ]
 
 

@@ -134,7 +134,8 @@ _RAW_FIELDS = ("vectors", "used", "id_dev", "id_row")
 
 
 def save_index(
-    path: str, index, delta=None, raw=None, extra: dict | None = None
+    path: str, index, delta=None, raw=None, extra: dict | None = None,
+    faults=None,
 ) -> str:
     """Atomically checkpoint an IVFPQIndex (+ optional DeltaIndex + meta).
 
@@ -151,7 +152,17 @@ def save_index(
         re-rank shard); restored separately via `load_raw_store`.
       extra: JSON-serializable layout metadata (e.g. block_n, scan variant,
         shard slack) surfaced again by `load_index`.
+      faults: optional `repro.retrieval.faults.FaultPlan`; its
+        `checkpoint_hook` fires at the named points of the rename
+        choreography ("before_commit", "after_rename_old",
+        "after_rename_new") so tests can crash the save at each point
+        and assert `load_index` still recovers a complete checkpoint.
     """
+
+    def _crash_point(point: str) -> None:
+        if faults is not None:
+            faults.checkpoint_hook(point)
+
     path = path.rstrip("/")
     tmp = path + ".tmp"
     if os.path.exists(tmp):
@@ -188,12 +199,15 @@ def save_index(
     # aside (not deleted) until the new one is in place, so a crash at any
     # point leaves a complete checkpoint at `path` or `path.old` -- and
     # `load_index` falls back to `.old` automatically
+    _crash_point("before_commit")
     old = path + ".old"
     if os.path.exists(old):
         shutil.rmtree(old)
     if os.path.exists(path):
         os.rename(path, old)
+        _crash_point("after_rename_old")
     os.rename(tmp, path)
+    _crash_point("after_rename_new")
     if os.path.exists(old):
         shutil.rmtree(old)
     return path
@@ -204,9 +218,10 @@ def load_index(path: str):
 
     Returns (IVFPQIndex, DeltaIndex | None, extra dict).  The index is
     `validate()`d on load, so a corrupted/truncated checkpoint fails loudly
-    instead of serving wrong rows.  If `path` is missing but `path.old`
-    exists (a crash landed between `save_index`'s two renames), the
-    previous complete checkpoint is restored instead.
+    — a `ValueError` naming the path and the damaged file — instead of
+    serving wrong rows.  If `path` is missing but `path.old` exists (a
+    crash landed between `save_index`'s two renames), the previous
+    complete checkpoint is restored instead.
     """
     from repro.core.delta import DeltaIndex
     from repro.core.index import IVFPQIndex
@@ -214,15 +229,23 @@ def load_index(path: str):
     path = path.rstrip("/")
     if not os.path.exists(path) and os.path.exists(path + ".old"):
         path = path + ".old"
-    with open(os.path.join(path, "meta.json")) as f:
-        meta = json.load(f)
-    arrays = {
-        f: np.load(os.path.join(path, "index", f + ".npy"))
-        for f in _INDEX_FIELDS
-    }
-    rot_path = os.path.join(path, "index", "rotation.npy")
-    if os.path.exists(rot_path):
-        arrays["rotation"] = np.load(rot_path)
+    try:
+        with open(os.path.join(path, "meta.json")) as f:
+            meta = json.load(f)
+        arrays = {
+            f: np.load(os.path.join(path, "index", f + ".npy"))
+            for f in _INDEX_FIELDS
+        }
+        rot_path = os.path.join(path, "index", "rotation.npy")
+        if os.path.exists(rot_path):
+            arrays["rotation"] = np.load(rot_path)
+    except Exception as e:
+        raise ValueError(
+            f"corrupt or unreadable checkpoint at {path!r}: "
+            f"{type(e).__name__}: {e} — the directory is not a complete "
+            "save_index checkpoint (delete it to fall back to a rebuild, "
+            f"or restore {path + '.old'!r} if present)"
+        ) from e
     index = IVFPQIndex(**arrays).validate()
     delta = None
     if meta.get("has_delta"):
@@ -242,7 +265,9 @@ def load_index(path: str):
     return index, delta, meta.get("extra", {})
 
 
-def save_engine(path: str, engine, extra: dict | None = None) -> str:
+def save_engine(
+    path: str, engine, extra: dict | None = None, faults=None
+) -> str:
     """Checkpoint a full `MemANNSEngine` — unified serving state.
 
     One `save_index` call persisting the index, the live DeltaIndex
@@ -280,7 +305,7 @@ def save_engine(path: str, engine, extra: dict | None = None) -> str:
     }
     return save_index(
         path, engine.index, delta=engine.delta, raw=engine.raw,
-        extra={"engine": cfg, **(extra or {})},
+        extra={"engine": cfg, **(extra or {})}, faults=faults,
     )
 
 

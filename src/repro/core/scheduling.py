@@ -129,10 +129,14 @@ class Schedule:
     Attributes:
       assigned: assigned[d] = list of (query_idx, cluster_id) pairs on dev d.
       dev_load: (ndev,) scheduled scan load (sum of probed cluster sizes).
+      lost: unreachable (query_idx, cluster_id) pairs — clusters whose
+        every replica is on a dead device (only under `live=`; [] when
+        every device is live).
     """
 
     assigned: list[list[tuple[int, int]]]
     dev_load: np.ndarray
+    lost: list[tuple[int, int]] = dataclasses.field(default_factory=list)
 
     def max_imbalance(self) -> float:
         mean = float(self.dev_load.mean())
@@ -156,12 +160,19 @@ class ArraySchedule:
       pair_c: (N,) int32 cluster id of each pair.
       pair_dev: (N,) int32 device chosen by Algorithm 2.
       dev_load: (ndev,) float64 scheduled scan load per device.
+      lost_q: (L,) int32 query index of each unreachable pair — a probed
+        cluster whose every replica sits on a dead device.  None when the
+        schedule ran without a live mask; empty under `live=` when every
+        probed cluster kept a surviving replica.
+      lost_c: (L,) int32 cluster id of each unreachable pair.
     """
 
     pair_q: np.ndarray
     pair_c: np.ndarray
     pair_dev: np.ndarray
     dev_load: np.ndarray
+    lost_q: np.ndarray | None = None
+    lost_c: np.ndarray | None = None
 
     @property
     def ndev(self) -> int:
@@ -227,11 +238,30 @@ def _greedy_segment_picks(
     return rpos.ravel()[sel]
 
 
+def _live_replica_table(
+    table: np.ndarray, live: np.ndarray
+) -> tuple[np.ndarray, np.ndarray]:
+    """Restrict a replica table to live devices.
+
+    Compacts each cluster's surviving replicas to the leading columns
+    (stable, so the placement's replica order is preserved — with all
+    devices live the table is returned unchanged) and recounts them.
+    Clusters whose count drops to zero are unreachable.
+    """
+    rep_live = (table >= 0) & live[np.clip(table, 0, None)]
+    order = np.argsort(~rep_live, axis=1, kind="stable")
+    return (
+        np.take_along_axis(table, order, axis=1),
+        rep_live.sum(axis=1).astype(np.int64),
+    )
+
+
 def schedule_queries(
     probed: np.ndarray,
     sizes: np.ndarray,
     placement: Placement,
     load_carry: np.ndarray | None = None,
+    live: np.ndarray | None = None,
 ) -> ArraySchedule:
     """Vectorized Algorithm 2, optionally biased by carried device load.
 
@@ -247,9 +277,18 @@ def schedule_queries(
         choice.  `None` or all-zeros reproduces the unbiased schedule
         exactly.  The returned `dev_load` excludes the carry (it is this
         batch's scan load only).
+      live: optional (ndev,) bool live-device mask (replica failover).
+        Pairs whose cluster has replicas on dead devices re-route to the
+        surviving replicas — Algorithm 1's hot-cluster replication doubles
+        as fault redundancy; a cluster with exactly one survivor becomes
+        forced.  Pairs with NO surviving replica are reported in
+        `lost_q`/`lost_c` instead of being scheduled (the serving layer
+        turns them into per-query degraded flags).  `None` means all live
+        and reproduces today's schedule bit-for-bit with `lost_q` = None.
 
     Returns:
-      ArraySchedule covering every (query, cluster) pair exactly once.
+      ArraySchedule covering every reachable (query, cluster) pair
+      exactly once.
     """
     ndev = placement.dev_load.shape[0]
     q_n, nprobe = probed.shape
@@ -258,6 +297,17 @@ def schedule_queries(
 
     pair_q = np.repeat(np.arange(q_n, dtype=np.int32), nprobe)
     pair_c = np.ascontiguousarray(probed, np.int32).reshape(-1)
+    lost_q = lost_c = None
+    if live is not None:
+        live = np.asarray(live, bool)
+        if live.shape != (ndev,):
+            raise ValueError(f"live shape {live.shape} != ({ndev},)")
+        table, n_rep = _live_replica_table(table, live)
+        lost = n_rep[pair_c] == 0
+        lost_q, lost_c = pair_q[lost], pair_c[lost]
+        if lost.any():
+            keep = ~lost
+            pair_q, pair_c = pair_q[keep], pair_c[keep]
     if load_carry is None:
         load = np.zeros(ndev, np.float64)
     else:
@@ -303,6 +353,8 @@ def schedule_queries(
         pair_c=pair_c[perm],
         pair_dev=dev[perm],
         dev_load=load - carry,
+        lost_q=lost_q,
+        lost_c=lost_c,
     )
 
 
@@ -311,18 +363,25 @@ def schedule_queries_loop(
     sizes: np.ndarray,
     placement: Placement,
     load_carry: np.ndarray | None = None,
+    live: np.ndarray | None = None,
 ) -> Schedule:
     """Reference per-pair loop implementation of Algorithm 2 (test oracle).
 
     Complexity O(|Q| * nprobe * max_replicas); retained only to validate the
     vectorized path and to quantify its speedup in benchmarks.  `load_carry`
-    has the same meaning as in `schedule_queries` and the two stay in
-    lockstep: same carry, same schedule.
+    and `live` have the same meaning as in `schedule_queries` and the two
+    stay in lockstep: same carry, same live mask, same schedule (and the
+    same `lost` pair set).
     """
     ndev = placement.dev_load.shape[0]
     q_n, nprobe = probed.shape
     sizes = np.asarray(sizes, np.float64)
+    if live is not None:
+        live = np.asarray(live, bool)
+        if live.shape != (ndev,):
+            raise ValueError(f"live shape {live.shape} != ({ndev},)")
     assigned: list[list[tuple[int, int]]] = [[] for _ in range(ndev)]
+    lost: list[tuple[int, int]] = []
     if load_carry is None:
         load = np.zeros(ndev, np.float64)
     else:
@@ -333,12 +392,20 @@ def schedule_queries_loop(
             )
     carry = load.copy()
 
-    multi: list[tuple[int, int]] = []  # (query, cluster) with >1 replica
+    def live_replicas(c: int) -> list[int]:
+        reps = placement.replicas[c]
+        if live is None:
+            return list(reps)
+        return [d for d in reps if live[d]]  # placement order preserved
+
+    multi: list[tuple[int, int]] = []  # (query, cluster) with >1 live replica
     for qi in range(q_n):
         for c in probed[qi]:
             c = int(c)
-            reps = placement.replicas[c]
-            if len(reps) == 1:  # Lines 4-7: forced assignment
+            reps = live_replicas(c)
+            if not reps:  # every replica dead: honest loss, not a crash
+                lost.append((qi, c))
+            elif len(reps) == 1:  # Lines 4-7: forced assignment
                 d = reps[0]
                 assigned[d].append((qi, c))
                 load[d] += sizes[c]
@@ -350,12 +417,12 @@ def schedule_queries_loop(
     # segment processing (the paper leaves tie order unspecified).
     multi.sort(key=lambda qc: (-sizes[qc[1]], qc[1]))
     for qi, c in multi:
-        reps = placement.replicas[c]
+        reps = live_replicas(c)
         d = min(reps, key=lambda r: load[r] + sizes[c])
         assigned[d].append((qi, c))
         load[d] += sizes[c]
 
-    return Schedule(assigned=assigned, dev_load=load - carry)
+    return Schedule(assigned=assigned, dev_load=load - carry, lost=lost)
 
 
 def densify_schedule(
@@ -417,6 +484,7 @@ def emit_tiles(
     block_n: int,
     tiles_per_dev: int,
     pair_key: np.ndarray | None = None,
+    live: np.ndarray | None = None,
 ) -> tuple[np.ndarray, np.ndarray, np.ndarray]:
     """Vectorized tile emission: expand scheduled pairs to a flat work queue.
 
@@ -444,6 +512,12 @@ def emit_tiles(
         Whole runs are permuted -- tiles within a pair stay contiguous and
         ascending -- so the per-pair merge sequence (and with it every
         tie-break) is unchanged and results stay bit-identical.
+      live: optional (ndev,) bool live-device mask (failover guard): a
+        dead device emits only dummy tiles, even if stale pairs are still
+        marked valid on it.  The failover scheduler already routes around
+        dead devices, so this is defense in depth — the mesh keeps its
+        full shape (a dead device just receives all-dummy work), which is
+        what keeps compiled shapes, and `compiles == 0`, intact.
 
     Returns:
       (tile_pair (ndev, T), tile_block (ndev, T), tile_row0 (ndev, T))
@@ -451,6 +525,11 @@ def emit_tiles(
       window-relative row of the tile's first code row (block_n-aligned).
     """
     ndev, p_cap = pair_slot.shape
+    if live is not None:
+        live = np.asarray(live, bool)
+        if live.shape != (ndev,):
+            raise ValueError(f"live shape {live.shape} != ({ndev},)")
+        pair_valid = pair_valid & live[:, None]
     nv = np.where(
         pair_valid, np.take_along_axis(slot_size, pair_slot, axis=1), 0
     )

@@ -64,6 +64,25 @@ def main():
              "winner, 'off' serves the build-time geometry untouched",
     )
     ap.add_argument(
+        "--deadline-ms", type=float, default=None,
+        help="per-search latency budget: micro-batches planned after the "
+             "budget has elapsed degrade (smaller nprobe, re-rank skipped) "
+             "instead of running late; degraded queries are flagged and "
+             "counted",
+    )
+    ap.add_argument(
+        "--queue-limit", type=int, default=None,
+        help="bound the ingress queue: submit() beyond this many queued "
+             "queries is rejected (counted in /metrics) instead of growing "
+             "without bound; /healthz reports overloaded while full",
+    )
+    ap.add_argument(
+        "--collect-timeout", type=float, default=None,
+        help="seconds before a batch whose result never arrives is raised "
+             "as a fault (hung-device watchdog) instead of stalling the "
+             "serving loop forever",
+    )
+    ap.add_argument(
         "--metrics-port", type=int, default=None,
         help="serve live observability over HTTP on this port (0 = any "
              "free port): /metrics (Prometheus), /metrics.json, /traces "
@@ -186,13 +205,17 @@ def main():
             compact_occupancy=args.compact_occupancy,
             autotune=args.autotune,
             tracer=tracer,
+            deadline_ms=args.deadline_ms,
+            queue_limit=args.queue_limit,
+            collect_timeout_s=args.collect_timeout,
         )
         obs_server = None
         if args.metrics_port is not None:
             from repro.obs.http import ObsServer
 
             obs_server = ObsServer(
-                srv.stats.registry, tracer, port=args.metrics_port
+                srv.stats.registry, tracer, port=args.metrics_port,
+                health=srv.health,
             )
             port = obs_server.start()
             print(json.dumps({"metrics_endpoint":
@@ -267,6 +290,15 @@ def main():
                 "skip_fraction": round(st.prune_fraction(), 3),
                 "skip_frac_p50": round(st.prune_percentile(50.0), 3),
                 "warm_bound_queries": st.warm_bound_queries,
+            },
+            # fault-tolerance posture: live health plus the counters a
+            # failure would move (all zero on a healthy run)
+            "health": srv.health(),
+            "faults": {
+                "failovers": st.failovers,
+                "degraded_queries": st.degraded_queries,
+                "rejected_queries": st.rejected_queries,
+                "retries": st.retries,
             },
         }
         if args.rerank != "off":

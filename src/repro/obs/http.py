@@ -7,7 +7,12 @@ loop; CI's obs-smoke step scrapes it.  Routes:
   * ``/metrics.json``  the registry's JSON snapshot
   * ``/traces``        Chrome trace-event JSON of the span ring
     (download and load into https://ui.perfetto.dev)
-  * ``/healthz``       liveness probe (``ok``)
+  * ``/healthz``       health probe.  With a `health` callback wired
+    (serve.py passes ``ServingEngine.health``) it returns the live
+    health dict as JSON — state ok/degraded/overloaded, queue depth,
+    live-device count — with HTTP 503 when overloaded so load
+    balancers shed traffic; without a callback it stays the legacy
+    liveness ``ok``.
 
 The server runs on a daemon thread (`ThreadingHTTPServer`), so scrapes
 never block serving; registry reads are dict scans over counters the
@@ -31,9 +36,10 @@ class ObsServer:
     """Serve one registry (+ optional tracer) over HTTP until `stop()`."""
 
     def __init__(self, registry: MetricsRegistry, tracer=None,
-                 host: str = "127.0.0.1", port: int = 0):
+                 host: str = "127.0.0.1", port: int = 0, health=None):
         self.registry = registry
         self.tracer = tracer if tracer is not None else NULL_TRACER
+        self.health = health  # () -> dict with a "state" key, or None
         self._httpd = ThreadingHTTPServer(
             (host, port), self._make_handler()
         )
@@ -49,9 +55,10 @@ class ObsServer:
         obs = self
 
         class Handler(BaseHTTPRequestHandler):
-            def _send(self, body: str, content_type: str) -> None:
+            def _send(self, body: str, content_type: str,
+                      code: int = 200) -> None:
                 data = body.encode("utf-8")
-                self.send_response(200)
+                self.send_response(code)
                 self.send_header("Content-Type", content_type)
                 self.send_header("Content-Length", str(len(data)))
                 self.end_headers()
@@ -74,7 +81,14 @@ class ObsServer:
                         "application/json",
                     )
                 elif path == "/healthz":
-                    self._send("ok\n", "text/plain")
+                    if obs.health is None:
+                        self._send("ok\n", "text/plain")
+                    else:
+                        h = obs.health()
+                        code = 503 if h.get("state") == "overloaded" else 200
+                        self._send(
+                            json.dumps(h), "application/json", code=code
+                        )
                 else:
                     self.send_error(404, "unknown path (try /metrics)")
 

@@ -20,10 +20,21 @@
                filtering composed with the top-k merge, and incremental
                compaction (CSR merge + Algorithm-1 re-placement of changed
                clusters + delta-rebuild of affected device regions)
+  faults.py -- deterministic fault injection (FaultPlan): device death,
+               transient dispatch errors, hung/slow collects, checkpoint
+               crash points -- drives the failover/degradation/retry
+               machinery in tests and benchmarks
 """
 
 from repro.core.delta import DeltaIndex
 from repro.retrieval.engine import MemANNSEngine, SearchPlan, round_capacity
+from repro.retrieval.faults import (
+    DeviceHang,
+    FaultError,
+    FaultPlan,
+    InjectedCrash,
+    TransientFault,
+)
 from repro.retrieval.layout import (
     DeviceShards,
     RawStore,
@@ -34,10 +45,27 @@ from repro.retrieval.layout import (
 )
 from repro.retrieval.mutation import CompactionReport
 from repro.retrieval.search import InFlightSearch
-from repro.retrieval.serving import PHASES, ServingEngine, ServingStats
+from repro.retrieval.serving import (
+    DEGRADE_REASONS,
+    HEALTH_STATES,
+    PHASES,
+    RETRY_PHASES,
+    ServingEngine,
+    ServingResult,
+    ServingStats,
+)
 
 __all__ = [
     "PHASES",
+    "DEGRADE_REASONS",
+    "RETRY_PHASES",
+    "HEALTH_STATES",
+    "FaultPlan",
+    "FaultError",
+    "TransientFault",
+    "DeviceHang",
+    "InjectedCrash",
+    "ServingResult",
     "MemANNSEngine",
     "SearchPlan",
     "InFlightSearch",

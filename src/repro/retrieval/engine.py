@@ -90,6 +90,11 @@ class SearchPlan:
     pair_lb: np.ndarray | None = None      # (ndev, P) f32 pair lower bounds
     probed_ub: np.ndarray | None = None    # (Q, nprobe) f32 cluster upper bds
     probed_sizes: np.ndarray | None = None  # (Q, nprobe) int64 cluster sizes
+    # failover coverage accounting (planned under a live-device mask only):
+    # probed (query, cluster) pairs whose every replica is on a dead device.
+    # None = planned with all devices live.
+    lost_q: np.ndarray | None = None       # (L,) int32 query index
+    lost_c: np.ndarray | None = None       # (L,) int32 cluster id
 
     @property
     def scan(self) -> str:
@@ -100,6 +105,18 @@ class SearchPlan:
     def pruned(self) -> bool:
         """True when this plan carries early-pruning bounds."""
         return self.pair_lb is not None
+
+    def degraded_mask(self) -> np.ndarray:
+        """(Q,) bool: queries with at least one unreachable probed cluster.
+
+        Such queries still return their best-effort top-k over every
+        reachable cluster; the serving layer surfaces the flag (plus the
+        exact lost pairs) instead of crashing or silently under-reporting.
+        """
+        mask = np.zeros(self.n_queries, bool)
+        if self.lost_q is not None and self.lost_q.size:
+            mask[self.lost_q] = True
+        return mask
 
     def query_bounds(self, k: int) -> np.ndarray:
         """(Q,) strict warm-start upper bounds on the k-th output distance.
@@ -468,12 +485,14 @@ class MemANNSEngine:
         queries: np.ndarray,
         nprobe: int,
         load_carry: np.ndarray | None = None,
+        live: np.ndarray | None = None,
     ) -> tuple[ArraySchedule, np.ndarray, np.ndarray]:
         """Host side: cluster filtering (stage a) + vectorized Algorithm 2.
 
         `load_carry` is the optional (ndev,) carried-load bias (see
         `schedule_queries`); the serving layer threads its EWMA of
-        per-device scanned rows through here.
+        per-device scanned rows through here.  `live` is the optional
+        live-device mask (replica failover — see `schedule_queries`).
 
         With an OPQ rotation the queries are rotated here — centroids and
         PQ codes live in the rotated space, so everything downstream of
@@ -489,7 +508,7 @@ class MemANNSEngine:
         probed = np.asarray(probed)
         schedule = schedule_queries(
             probed, self.index.cluster_sizes(), self.placement,
-            load_carry=load_carry,
+            load_carry=load_carry, live=live,
         )
         return schedule, probed, np.asarray(qmc)
 
@@ -508,6 +527,7 @@ class MemANNSEngine:
         tiles_per_dev: int | None = None,
         load_carry: np.ndarray | None = None,
         prune: bool | None = None,
+        live: np.ndarray | None = None,
     ) -> SearchPlan:
         """Host-side online phase: filter + schedule + array densify.
 
@@ -525,6 +545,13 @@ class MemANNSEngine:
         ordered best-first (ascending lower bound) so the kernel's running
         k-th tightens within the first few tiles.  `prune=False` plans the
         exact pre-bounds reference scan.
+
+        `live` plans around dead devices (replica failover): their pairs
+        re-route to surviving replicas and unreachable (query, cluster)
+        pairs land in the plan's `lost_q`/`lost_c` coverage accounting.
+        Unreachable clusters are also zeroed out of the warm-start size
+        accounting — a bound may only count rows the scan will actually
+        visit, otherwise degraded queries could prune reportable rows.
         """
         queries = np.asarray(queries, np.float32)
         q_n = queries.shape[0]
@@ -533,7 +560,7 @@ class MemANNSEngine:
         tr = self.tracer
         with tr.span("schedule", root=False):
             schedule, probed, qmc = self.schedule_batch(
-                queries, nprobe, load_carry=load_carry
+                queries, nprobe, load_carry=load_carry, live=live
             )
 
         max_pairs = int(schedule.counts_per_dev().max(initial=0))
@@ -565,6 +592,15 @@ class MemANNSEngine:
                 pair_lb[d_sorted, pos] = lb[pq, cols]
                 probed_ub = ub
                 probed_sizes = self.index.cluster_sizes()[probed]
+                if schedule.lost_c is not None and schedule.lost_c.size:
+                    # unreachable clusters contribute no scannable rows:
+                    # the warm-start bound must not count them (soundness
+                    # of degraded queries' best-effort top-k)
+                    unreach = np.zeros(
+                        self.index.cluster_sizes().shape[0], bool
+                    )
+                    unreach[schedule.lost_c] = True
+                    probed_sizes = np.where(unreach[probed], 0, probed_sizes)
 
         tile_pair = tile_block = tile_row0 = None
         tiles_cap = 0
@@ -610,6 +646,8 @@ class MemANNSEngine:
             pair_lb=pair_lb,
             probed_ub=probed_ub,
             probed_sizes=probed_sizes,
+            lost_q=schedule.lost_q,
+            lost_c=schedule.lost_c,
         )
 
     def plan_dev_rows(self, plan: SearchPlan) -> np.ndarray:

@@ -196,8 +196,13 @@ def mutable_search(
     k: int,
     pairs_per_dev: int | None = None,
     overfetch: int | None = None,
+    live: np.ndarray | None = None,
 ) -> tuple[np.ndarray, np.ndarray]:
     """Full online path over (main index - tombstones) + delta buffer.
+
+    `live` threads the live-device mask down to `plan_batch` (replica
+    failover); the host-side delta scan is unaffected by dead devices, so
+    degraded coverage accounting applies to the main path only.
 
     Fetches `k + overfetch` (default overfetch = k) from the main path when
     tombstones exist, so the filter can absorb up to `overfetch` dead rows
@@ -231,7 +236,9 @@ def mutable_search(
         k_fetch = round_capacity(max(base, over if tomb.size else 0), floor=kp)
     else:
         k_fetch = over if tomb.size else k
-    plan = engine.plan_batch(queries, nprobe, pairs_per_dev=pairs_per_dev)
+    plan = engine.plan_batch(
+        queries, nprobe, pairs_per_dev=pairs_per_dev, live=live
+    )
     if rerank:
         handle = engine.dispatch_plan(plan, k_fetch)
         handle = engine.dispatch_rerank(handle, queries, k_fetch)

@@ -62,6 +62,20 @@ class InFlightSearch:
     prune_stats: jax.Array | None = None
     query_bound: np.ndarray | None = None
 
+    def is_ready(self) -> bool:
+        """True when the dispatched step has finished on-device.
+
+        Non-blocking (`jax.Array.is_ready`), so the serving layer's
+        collect timeout can poll for completion and turn a hung device
+        into a fault event instead of blocking forever in `collect`.
+        Runtimes without `is_ready` report True (collect blocks as
+        before -- no watchdog, but no behavior change either).
+        """
+        try:
+            return bool(self.out_d.is_ready() and self.out_i.is_ready())
+        except AttributeError:
+            return True
+
 
 def _shard_map(fn, mesh, in_specs, out_specs):
     """jax.shard_map across jax versions (experimental module + kwarg rename)."""

@@ -63,6 +63,7 @@ from repro.kernels import ops
 from repro.obs.metrics import NULL_REGISTRY, MetricsRegistry
 from repro.obs.trace import NULL_SPAN, NULL_TRACER
 from repro.retrieval.engine import MemANNSEngine, SearchPlan, round_capacity
+from repro.retrieval.faults import DeviceHang, FaultError, TransientFault
 from repro.retrieval.mutation import (
     compact_engine,
     delete_from,
@@ -91,6 +92,22 @@ LATENCY_WINDOW = 4096
 # behind earlier in-flight batches before collect began, `collect_wait`
 # is the blocked collect itself (residual device execution + transfer).
 PHASES = ("plan", "delta", "dispatch", "dispatch_wait", "collect_wait")
+
+# why a query can come back degraded (the `reason` label of
+# `upanns_degraded_queries_total`): "coverage" = some probed cluster had
+# no surviving replica (replica failover exhausted), "deadline" = the
+# batch ran late and was served at reduced effort instead of missing SLO.
+DEGRADE_REASONS = ("coverage", "deadline")
+
+# lifecycle points where a transient fault can be retried (the `phase`
+# label of `upanns_retries_total`).
+RETRY_PHASES = ("dispatch", "collect")
+
+# health states /healthz reports, in degradation order: "ok" (all devices
+# live, queue has room), "degraded" (a device is down or deadlines forced
+# degraded service), "overloaded" (ingress queue full; admission control
+# is shedding).
+HEALTH_STATES = ("ok", "degraded", "overloaded")
 
 
 @dataclasses.dataclass
@@ -160,6 +177,16 @@ class ServingStats:
       tombstones: live tombstone count (gauge, last mutation).
       compaction_s: per-compaction latency seconds (feeds
         `compaction_mean_s`).
+
+    Fault tolerance (populated under injected or real faults only):
+      failovers: devices marked dead (fault-plan death, exhausted dispatch
+        retries, or a hung collect) — each re-routes its replicas' work.
+      degraded_queries: queries answered best-effort instead of exactly
+        (unreachable probed clusters, or deadline-forced reduced effort).
+      rejected_queries: queries shed by admission control (bounded ingress
+        queue full; shed, don't stall).
+      retries: transient-fault retries (dispatch backoff + collect
+        refires) before any escalation.
     """
 
     batches: int = 0
@@ -181,6 +208,10 @@ class ServingStats:
     deletes: int = 0
     compactions: int = 0
     starved_batches: int = 0
+    failovers: int = 0
+    degraded_queries: int = 0
+    rejected_queries: int = 0
+    retries: int = 0
     delta_occupancy: float = 0.0
     tombstones: int = 0
     compaction_s: list[float] = dataclasses.field(default_factory=list)
@@ -272,6 +303,31 @@ class ServingStats:
             "upanns_tombstones", "Live tombstone count")
         self.m_compaction_s = r.histogram(
             "upanns_compaction_seconds", "Per-compaction latency")
+        self.m_failovers = r.counter(
+            "upanns_failovers_total",
+            "Devices failed over (death, exhausted retries, hung collect), "
+            "per device", ("device",))
+        self.m_degraded = r.counter(
+            "upanns_degraded_queries_total",
+            "Queries answered best-effort, by degradation reason",
+            ("reason",))
+        for reason in DEGRADE_REASONS:  # eager: exposition order is stable
+            self.m_degraded.labels(reason=reason)
+        self.m_rejected = r.counter(
+            "upanns_rejected_queries_total",
+            "Queries shed by admission control (ingress queue full)")
+        self.m_retries = r.counter(
+            "upanns_retries_total",
+            "Transient-fault retries before escalation, by phase",
+            ("phase",))
+        for p in RETRY_PHASES:
+            self.m_retries.labels(phase=p)
+        self.m_device_health = r.gauge(
+            "upanns_device_health",
+            "Per-device liveness (1 live, 0 failed over)", ("device",))
+        self.m_queue_depth = r.gauge(
+            "upanns_queue_depth",
+            "Queries pending in the ingress queue (admission control)")
 
     # -------------------- recording helpers --------------------------- #
     # Each helper updates the legacy field AND its registry mirror, so the
@@ -315,6 +371,28 @@ class ServingStats:
         self.tombstones = tombstones
         self.m_delta_occupancy.set(occupancy)
         self.m_tombstones.set(tombstones)
+
+    def note_failover(self, device: int) -> None:
+        self.failovers += 1
+        self.m_failovers.inc(device=int(device))
+
+    def note_degraded(self, n: int, reason: str) -> None:
+        self.degraded_queries += n
+        self.m_degraded.inc(n, reason=reason)
+
+    def note_rejected(self, n: int) -> None:
+        self.rejected_queries += n
+        self.m_rejected.inc(n)
+
+    def note_retry(self, phase: str) -> None:
+        self.retries += 1
+        self.m_retries.inc(phase=phase)
+
+    def set_device_health(self, device: int, live: bool) -> None:
+        self.m_device_health.set(1.0 if live else 0.0, device=int(device))
+
+    def set_queue_depth(self, depth: int) -> None:
+        self.m_queue_depth.set(depth)
 
     def snapshot(self) -> dict:
         """JSON-able dump of every registered metric (bench row stamp)."""
@@ -387,6 +465,67 @@ class ServingStats:
         return float(np.mean(self.compaction_s))
 
 
+@dataclasses.dataclass
+class ServingResult:
+    """One `ServingEngine.search_result` answer with degradation accounting.
+
+    `search()` returns just (dists, ids); this carries the honest
+    coverage story alongside.  A query is *degraded* when its answer may
+    differ from the fault-free one — either some probed cluster had no
+    surviving replica ("coverage") or its batch ran past the deadline and
+    was served at reduced effort ("deadline").  Non-degraded queries are
+    bit-identical to the no-fault run (pinned by tests/test_faults.py).
+
+    Attributes:
+      dists: (Q, k) f32 distances (best-effort top-k for degraded rows).
+      ids: (Q, k) int32 global ids.
+      degraded: (Q,) bool — degraded for ANY reason.
+      deadline_degraded: (Q,) bool — served late at reduced effort.
+      coverage_lost: (L, 2) int32 [query, cluster] pairs whose cluster was
+        unreachable (every replica dead) — exactly the clusters missing
+        from those queries' scans, the honest coverage accounting.
+    """
+
+    dists: np.ndarray
+    ids: np.ndarray
+    degraded: np.ndarray
+    deadline_degraded: np.ndarray
+    coverage_lost: np.ndarray
+
+    def coverage_degraded(self) -> np.ndarray:
+        """(Q,) bool — queries with at least one unreachable cluster."""
+        mask = np.zeros(self.dists.shape[0], bool)
+        if self.coverage_lost.size:
+            mask[self.coverage_lost[:, 0]] = True
+        return mask
+
+
+@dataclasses.dataclass
+class _Flight:
+    """One in-flight micro-batch plus everything needed to refire it.
+
+    The retry/failover layer needs more than the legacy inflight tuple:
+    a hung collect replans the SAME padded queries (with the shrunken
+    live-device set and the same effective nprobe) and re-dispatches, and
+    the plan-time mutation snapshot is reused so the refired batch sees
+    the corpus state its stream position promised.
+    """
+
+    handle: InFlightSearch | None
+    q_n: int                 # real (unpadded) queries in this chunk
+    offset: int              # chunk start within the search() query array
+    t_start: float
+    mut: tuple | None
+    t_dispatched: float | None
+    bspan: object
+    seq: int                 # global micro-batch sequence number
+    padded: np.ndarray       # padded queries (refire input)
+    nprobe_eff: int          # nprobe this batch was planned with
+    k_fetch: int
+    skip_rerank: bool        # deadline-degraded: cascade skipped
+    deadline_late: bool
+
+
 class ServingEngine:
     """Steady-state serving wrapper around one `MemANNSEngine`.
 
@@ -440,6 +579,37 @@ class ServingEngine:
         text / JSON exposition, histogram-backed p50/p99/p999.  `False`
         installs `NULL_REGISTRY` (every mirror call a no-op) and the
         percentile estimators fall back to the legacy deque windows.
+      deadline_ms: per-search() latency budget in milliseconds (None =
+        no deadline).  Micro-batches planned after the budget has elapsed
+        are served DEGRADED — nprobe shrinks to `degrade_nprobe` and an
+        immutable exact-rerank cascade is skipped (ADC distances) — rather
+        than making every later batch miss the SLO harder.  Degraded
+        batches are flagged per query (`ServingResult.deadline_degraded`)
+        and counted under `upanns_degraded_queries_total{reason="deadline"}`.
+        `warmup()` additionally warms the degraded shapes, so deadline
+        degradation never compiles in steady state.
+      degrade_nprobe: nprobe served to deadline-degraded batches
+        (default max(1, nprobe // 2); must be in [1, nprobe]).
+      retry_limit: transient dispatch failures retried per batch before
+        escalating (capped exponential backoff between attempts).
+      retry_backoff_s: first retry backoff; doubles per attempt, capped
+        at `retry_backoff_max_s`.
+      queue_limit: admission control — max queries held in the ingress
+        queue (`submit`).  Beyond it, submissions are REJECTED (counted,
+        `submit` returns the accepted count) instead of growing the queue
+        without bound; `health()` reports "overloaded" while full.
+        None = unbounded (legacy behavior).
+      collect_timeout_s: watchdog for the silent-stall hazard: a collect
+        that is not ready within this many seconds raises a fault event
+        (an attributed hang fails the device over and the batch refires
+        on the survivors) instead of blocking the serving loop forever.
+        None = blocking collect (legacy).  The watchdog polls
+        `InFlightSearch.is_ready`, so the healthy path's phase accounting
+        is unchanged when it never fires.
+      faults: optional `repro.retrieval.faults.FaultPlan` injecting
+        deterministic faults (device death, transient dispatch errors,
+        hung/slow collects) — the test/benchmark harness for everything
+        above.  None (production) skips every hook.
       tracer: a `repro.obs.trace.Tracer` recording one span tree per
         micro-batch (plan > schedule/densify/emit_tiles, delta, dispatch >
         rerank_dispatch, dispatch_wait, collect, merge; compactions root
@@ -478,6 +648,14 @@ class ServingEngine:
         autotune_cache_dir: str | None = None,
         metrics: bool = True,
         tracer=None,
+        deadline_ms: float | None = None,
+        degrade_nprobe: int | None = None,
+        retry_limit: int = 2,
+        retry_backoff_s: float = 0.05,
+        retry_backoff_max_s: float = 1.0,
+        queue_limit: int | None = None,
+        collect_timeout_s: float | None = None,
+        faults=None,
     ):
         if autotune not in ("off", "cache", "sweep"):
             raise ValueError(
@@ -506,10 +684,39 @@ class ServingEngine:
         self.stats = ServingStats(
             registry=MetricsRegistry() if metrics else NULL_REGISTRY
         )
+        self.deadline_ms = (
+            float(deadline_ms) if deadline_ms is not None else None
+        )
+        self.degrade_nprobe = (
+            int(degrade_nprobe)
+            if degrade_nprobe is not None
+            else max(1, self.nprobe // 2)
+        )
+        if not 1 <= self.degrade_nprobe <= self.nprobe:
+            raise ValueError(
+                f"degrade_nprobe {self.degrade_nprobe} not in "
+                f"[1, {self.nprobe}]"
+            )
+        self.retry_limit = int(retry_limit)
+        self.retry_backoff_s = float(retry_backoff_s)
+        self.retry_backoff_max_s = float(retry_backoff_max_s)
+        self.queue_limit = (
+            int(queue_limit) if queue_limit is not None else None
+        )
+        self.collect_timeout_s = (
+            float(collect_timeout_s) if collect_timeout_s is not None
+            else None
+        )
+        self.faults = faults
         self._warm: set[tuple] = set()
         self._pending: list[np.ndarray] = []
         self._starved = False
         self._load_ewma = np.zeros(engine.shards.ndev, np.float64)
+        self._live = np.ones(engine.shards.ndev, bool)
+        self._batch_seq = 0
+        self._deadline_hit = False
+        for dev in range(engine.shards.ndev):  # eager health gauges
+            self.stats.set_device_health(dev, True)
         if self.mutable:
             ensure_delta(engine, delta_capacity)
         self.tombstone_limit = (
@@ -602,16 +809,23 @@ class ServingEngine:
         """Current (ndev,) EWMA of per-device rows scanned (a copy)."""
         return self._load_ewma.copy()
 
-    def default_buckets(self) -> list[int]:
+    def default_buckets(self, nprobe: int | None = None) -> list[int]:
         """Power-of-two capacities from the balanced share to the worst case.
 
         A perfectly balanced schedule puts Q*nprobe/ndev pairs on each
         device; the worst case (every probed cluster single-replica on one
         device) is Q*nprobe.  Warming every power of two in between covers
         any schedule this config can produce — including load-biased ones,
-        whose per-device counts stay within the same worst case.
+        whose per-device counts stay within the same worst case.  The
+        worst case also covers failover re-routing: a schedule over fewer
+        live devices still assigns at most every pair to one device.
+
+        `nprobe` overrides the serving nprobe (warmup uses it to cover the
+        deadline-degraded ladder too).
         """
-        total = self.micro_batch * self.nprobe
+        total = self.micro_batch * (
+            self.nprobe if nprobe is None else nprobe
+        )
         ndev = self.engine.shards.ndev
         lo = round_capacity(
             math.ceil(total / ndev), floor=self.capacity_floor
@@ -706,10 +920,27 @@ class ServingEngine:
         The kernel-geometry autotune resolves FIRST (`apply_autotune`):
         any retile lands before the executables compile, so the warmed
         shapes are the tuned shapes.
+
+        With a deadline configured, the degraded shapes are warmed too:
+        the `degrade_nprobe` bucket ladder, the plain-k executable a
+        deadline-skipped cascade falls back to, and the host planner at
+        the degraded nprobe — so deadline degradation (like failover,
+        which never changes shapes at all) keeps `compiles == 0`.
         """
         self.apply_autotune()
         buckets = sorted(buckets or self.default_buckets())
+        if self.deadline_ms is not None:
+            buckets = sorted(
+                set(buckets) | set(self.default_buckets(self.degrade_nprobe))
+            )
         rerank = self.engine.rerank == "exact"
+        # deadline-degraded immutable cascades skip the re-rank stage and
+        # serve plain ADC top-k: that executable needs warming as well
+        plain_ks = (
+            [self.k]
+            if rerank and self.deadline_ms is not None and not self.mutable
+            else []
+        )
         dim = self.engine.index.centroids.shape[1]
         if rerank:
             # the cascade serves one fixed fetch bucket for the whole
@@ -741,12 +972,21 @@ class ServingEngine:
                     else:
                         self.engine.execute_plan(plan, kf)
                     self._warm.add(self._key(plan, kf))
+                for kf in plain_ks:
+                    self.engine.execute_plan(plan, kf)
+                    self._warm.add(self._key(plan, kf))
         # warm the host path too (filter_clusters jit for this batch shape);
         # auto capacity, so a degenerate dummy schedule can never overflow
         dim = self.engine.index.centroids.shape[1]
         self.engine.plan_batch(
             np.zeros((self.micro_batch, dim), np.float32), self.nprobe
         )
+        if self.deadline_ms is not None:
+            # the degraded host planner (filter_clusters jits per nprobe)
+            self.engine.plan_batch(
+                np.zeros((self.micro_batch, dim), np.float32),
+                self.degrade_nprobe,
+            )
         if self.mutable:
             self._warm_delta()
         return buckets
@@ -784,13 +1024,26 @@ class ServingEngine:
             queries = np.concatenate([queries, pad], axis=0)
         return queries
 
-    def _plan_micro_batch(self, queries: np.ndarray) -> SearchPlan:
-        """Plan one padded micro-batch (host side)."""
+    def _live_arg(self) -> np.ndarray | None:
+        """Live mask for the scheduler: None (free) while all devices live."""
+        return None if self._live.all() else self._live
+
+    def _plan_micro_batch(
+        self, queries: np.ndarray, nprobe: int | None = None
+    ) -> SearchPlan:
+        """Plan one padded micro-batch (host side).
+
+        `nprobe` overrides the serving nprobe (deadline degradation).  The
+        current live-device mask is threaded to Algorithm 2 only when a
+        device has failed over, so the healthy path plans bit-identically
+        to a fault-unaware engine.
+        """
         return self.engine.plan_batch(
             queries,
-            self.nprobe,
+            self.nprobe if nprobe is None else nprobe,
             capacity_floor=self.capacity_floor,
             load_carry=self._load_ewma if self.load_feedback else None,
+            live=self._live_arg(),
         )
 
     def _delta_micro_batch(
@@ -841,6 +1094,7 @@ class ServingEngine:
         plan: SearchPlan,
         k_fetch: int | None = None,
         queries: np.ndarray | None = None,
+        skip_rerank: bool = False,
     ) -> InFlightSearch:
         """Dispatch a planned micro-batch; update warm/compile + load state.
 
@@ -849,7 +1103,9 @@ class ServingEngine:
         `k_fetch` defaults to the serving k; the mutable path overfetches
         while tombstones exist.  With rerank="exact", `queries` (the padded
         micro-batch) must be passed and the exact re-rank stage is chained
-        onto the dispatched scan before the handle returns.
+        onto the dispatched scan before the handle returns —
+        `skip_rerank=True` (deadline degradation) serves the plain ADC
+        top-k instead (`k_fetch` must then be the serving k).
         """
         if k_fetch is None:
             k_fetch = self.k
@@ -858,7 +1114,7 @@ class ServingEngine:
             self.stats.note_compile()
             self._warm.add(key)
         handle = self.engine.dispatch_plan(plan, k_fetch)
-        if self.engine.rerank == "exact":
+        if self.engine.rerank == "exact" and not skip_rerank:
             # immutable: cut to k here; mutable: keep the full fetch window
             # so the collect-time tombstone filter has rows to absorb
             k_out = k_fetch if self.mutable else self.k
@@ -875,6 +1131,189 @@ class ServingEngine:
         self.stats.note_bucket_hit(plan.pairs_per_dev)
         return handle
 
+    # --------------------- fault tolerance ----------------------------- #
+
+    def live_devices(self) -> np.ndarray:
+        """(ndev,) bool live-device mask (a copy)."""
+        return self._live.copy()
+
+    def _mark_dead(self, device: int) -> None:
+        """Fail a device over: re-route its replicas from the next plan on.
+
+        Idempotent per device.  The mesh keeps its full shape — a dead
+        device simply receives only invalid pairs / dummy tiles from
+        every later schedule, so no executable shape changes (failover
+        never compiles).  Clusters whose only replicas lived there become
+        unreachable and degrade with coverage accounting.
+        """
+        device = int(device)
+        if 0 <= device < self._live.shape[0] and self._live[device]:
+            self._live[device] = False
+            self.stats.note_failover(device)
+            self.stats.set_device_health(device, False)
+            if self.faults is not None:
+                self.faults.note("failover", device=device)
+
+    def _apply_fault_deaths(self, seq: int) -> None:
+        """Fold the fault plan's scheduled device deaths into the mask."""
+        if self.faults is None:
+            return
+        for dev in self.faults.dead_devices(seq):
+            self._mark_dead(dev)
+
+    def _dispatch_with_retry(
+        self, fl: _Flight, plan: SearchPlan
+    ) -> SearchPlan:
+        """Dispatch with capped-backoff retries, escalating to failover.
+
+        Transient faults (injected via the fault plan's dispatch hook)
+        retry up to `retry_limit` times with exponential backoff capped at
+        `retry_backoff_max_s`.  Exhausted retries escalate: when the fault
+        is attributable to a device, that device fails over, the batch is
+        REPLANNED around it on the survivors and the retry budget resets
+        (bounded by the device count); unattributable faults propagate.
+        Sets `fl.handle` and returns the plan actually dispatched.
+        """
+        st = self.stats
+        attempts = 0
+        backoff = self.retry_backoff_s
+        escalations = 0
+        while True:
+            try:
+                if self.faults is not None:
+                    self.faults.on_dispatch(fl.seq, live=self._live)
+                fl.handle = self._dispatch_micro_batch(
+                    plan, fl.k_fetch, fl.padded, skip_rerank=fl.skip_rerank
+                )
+                return plan
+            except TransientFault as e:
+                if attempts < self.retry_limit:
+                    attempts += 1
+                    st.note_retry("dispatch")
+                    if backoff > 0:
+                        time.sleep(min(backoff, self.retry_backoff_max_s))
+                    backoff = min(backoff * 2.0, self.retry_backoff_max_s)
+                    continue
+                if e.device is None or escalations >= self._live.shape[0]:
+                    raise
+                self._mark_dead(e.device)
+                plan = self._plan_micro_batch(fl.padded, nprobe=fl.nprobe_eff)
+                attempts = 0
+                backoff = self.retry_backoff_s
+                escalations += 1
+
+    def _await_handle(self, fl: _Flight) -> None:
+        """Watchdog for a dispatched batch (the silent-stall fix).
+
+        No-op (collect blocks, exactly the legacy path) unless a collect
+        timeout or a fault plan is configured.  Otherwise polls
+        `InFlightSearch.is_ready`; an injected hang, or a result still
+        not ready at `collect_timeout_s`, raises instead of stalling the
+        serving loop forever — `DeviceHang` (attributed) triggers
+        failover + refire upstream, an unattributable timeout raises
+        `FaultError`.  Injected slow devices are simulated by treating
+        the result as not-ready for the configured delay.
+        """
+        f = self.faults
+        delay = 0.0
+        if f is not None:
+            hang_dev = f.hang_device(fl.seq)
+            if hang_dev is not None:
+                # the result will never arrive; surface the fault now
+                # (with no watchdog configured this is where the loop
+                # would have blocked forever)
+                raise DeviceHang(
+                    f"collect of batch {fl.seq} hung on device {hang_dev}",
+                    device=hang_dev,
+                )
+            delay = f.collect_delay(fl.seq)
+        timeout = self.collect_timeout_s
+        if timeout is None and delay <= 0.0:
+            return
+        t0 = fl.t_dispatched if fl.t_dispatched is not None else (
+            time.perf_counter()
+        )
+        while True:
+            now = time.perf_counter()
+            simulated_busy = now - t0 < delay
+            if not simulated_busy and fl.handle.is_ready():
+                return
+            if timeout is not None and now - t0 > timeout:
+                raise FaultError(
+                    f"collect of batch {fl.seq} timed out after "
+                    f"{timeout:.3f}s (unattributable; no failover target)"
+                )
+            time.sleep(0.0005)
+
+    def _refire(self, fl: _Flight) -> None:
+        """Replan + re-dispatch a flight whose collect hung.
+
+        The padded queries replan under the post-failover live mask at the
+        same effective nprobe; the plan-time mutation snapshot (`fl.mut`)
+        is reused so the refired batch answers against the corpus state
+        its stream position promised.  Queries whose probed clusters all
+        kept live replicas come back bit-identical (results are
+        placement-invariant); the rest degrade with coverage accounting.
+        """
+        plan = self._plan_micro_batch(fl.padded, nprobe=fl.nprobe_eff)
+        self._dispatch_with_retry(fl, plan)
+        fl.t_dispatched = time.perf_counter()
+
+    def _collect_flight(self, fl: _Flight) -> tuple[np.ndarray, np.ndarray]:
+        """Await + collect one flight, refiring on attributed hangs.
+
+        Bounded: every `DeviceHang` fails one more device over (injected
+        hangs are one-shot per batch), so the refire loop runs at most
+        ndev times before the mask stops changing.
+        """
+        while True:
+            try:
+                self._await_handle(fl)
+                break
+            except DeviceHang as e:
+                self.stats.note_retry("collect")
+                self._mark_dead(e.device)
+                self._refire(fl)
+        return self._collect_micro_batch(
+            fl.handle, fl.q_n, fl.t_start, fl.mut, fl.t_dispatched,
+            fl.bspan, deadline_late=fl.deadline_late,
+            skip_rerank=fl.skip_rerank,
+        )
+
+    def health(self) -> dict:
+        """Live health summary (the `/healthz` payload; see HEALTH_STATES).
+
+        "overloaded" while the ingress queue is at `queue_limit`
+        (admission control is shedding); "degraded" when any device has
+        failed over or a deadline forced degraded service; "ok" otherwise.
+        """
+        ndev = int(self._live.shape[0])
+        live = int(self._live.sum())
+        depth = self.pending()
+        overloaded = (
+            self.queue_limit is not None and depth >= self.queue_limit
+        )
+        degraded = live < ndev or self._deadline_hit
+        state = (
+            "overloaded" if overloaded
+            else "degraded" if degraded
+            else "ok"
+        )
+        return {
+            "state": state,
+            "queue_depth": depth,
+            "queue_limit": self.queue_limit,
+            "live_devices": live,
+            "n_devices": ndev,
+            "dead_devices": [int(d) for d in np.flatnonzero(~self._live)],
+            "degraded_queries": self.stats.degraded_queries,
+            "rejected_queries": self.stats.rejected_queries,
+            "failovers": self.stats.failovers,
+            "retries": self.stats.retries,
+        }
+
+    # ------------------------------------------------------------------ #
+
     def _collect_micro_batch(
         self,
         handle: InFlightSearch,
@@ -883,8 +1322,16 @@ class ServingEngine:
         mut: tuple | None = None,
         t_dispatched: float | None = None,
         bspan=NULL_SPAN,
+        *,
+        deadline_late: bool = False,
+        skip_rerank: bool = False,
     ) -> tuple[np.ndarray, np.ndarray]:
         """Block on one in-flight micro-batch; slice padding, record stats.
+
+        `deadline_late` marks the batch as deadline-degraded (counted per
+        real query); `skip_rerank` suppresses the cascade counters for a
+        batch whose re-rank stage was deadline-skipped.  Coverage
+        degradation is read off the plan itself (`lost_q`).
 
         `mut` carries the batch's plan-time mutation snapshot
         (delta results + tombstones); the tombstone filter composes with
@@ -949,11 +1396,19 @@ class ServingEngine:
             n_warm = int(np.isfinite(handle.query_bound[:q_n]).sum())
             st.warm_bound_queries += n_warm
             st.m_warm_bound.inc(n_warm)
-        if self.engine.rerank == "exact":
+        if self.engine.rerank == "exact" and not skip_rerank:
             st.reranked_queries += q_n
             st.rerank_candidates += q_n * self._k_fetch()
             st.m_rerank_queries.inc(q_n, rerank="exact")
             st.m_rerank_candidates.inc(q_n * self._k_fetch(), rerank="exact")
+        plan = handle.plan
+        if plan.lost_q is not None and plan.lost_q.size:
+            n_cov = int(plan.degraded_mask()[:q_n].sum())
+            if n_cov:
+                st.note_degraded(n_cov, "coverage")
+        if deadline_late and q_n:
+            self._deadline_hit = True
+            st.note_degraded(q_n, "deadline")
         if mut is not None:
             dd, di, tomb = mut
             with tr.span("merge", parent=bspan, tombstones=int(tomb.size)):
@@ -974,38 +1429,97 @@ class ServingEngine:
         With `pipeline_depth >= 1`, while the device executes micro-batch i
         the host plans micro-batch i+1; the in-flight queue is drained in
         FIFO order, so results come back in the input order regardless of
-        depth.  Returns (dists (Q, k), ids (Q, k)).
+        depth.  Returns (dists (Q, k), ids (Q, k)); `search_result` serves
+        the same stream with per-query degradation accounting attached.
+        """
+        res = self.search_result(queries)
+        return res.dists, res.ids
+
+    def search_result(self, queries: np.ndarray) -> ServingResult:
+        """`search` with fault/degradation accounting (see ServingResult).
+
+        The fault-tolerant serving loop: each micro-batch plans around the
+        current live-device mask, dispatches with retry + backoff
+        (escalating persistent attributable faults to failover), and
+        collects under the hang watchdog (attributed hangs fail the device
+        over and refire the batch on the survivors).  With a deadline,
+        batches planned after the budget elapsed are served degraded
+        (reduced nprobe, cascade skipped when immutable) instead of
+        compounding the overrun.  No query is ever dropped or crashed:
+        every accepted query returns, exactly or flagged degraded.
         """
         queries = np.asarray(queries, np.float32)
         if queries.ndim == 1:
             queries = queries[None]
         if queries.shape[0] == 0:
-            return (
-                np.zeros((0, self.k), np.float32),
-                np.zeros((0, self.k), np.int32),
+            return ServingResult(
+                dists=np.zeros((0, self.k), np.float32),
+                ids=np.zeros((0, self.k), np.int32),
+                degraded=np.zeros(0, bool),
+                deadline_degraded=np.zeros(0, bool),
+                coverage_lost=np.zeros((0, 2), np.int32),
             )
         depth = max(0, self.pipeline_depth)
         inflight: collections.deque = collections.deque()
         outs_d, outs_i = [], []
+        q_total = queries.shape[0]
+        degraded = np.zeros(q_total, bool)
+        deadline_deg = np.zeros(q_total, bool)
+        lost_pairs: list[np.ndarray] = []
+        deadline_s = (
+            self.deadline_ms / 1e3 if self.deadline_ms is not None else None
+        )
+        t_admit = time.perf_counter()
 
         def collect_one():
-            d, i = self._collect_micro_batch(*inflight.popleft())
+            fl = inflight.popleft()
+            d, i = self._collect_flight(fl)
             outs_d.append(d)
             outs_i.append(i)
+            plan = fl.handle.plan
+            if plan.lost_q is not None and plan.lost_q.size:
+                keep = plan.lost_q < fl.q_n  # padding rows don't count
+                if keep.any():
+                    lq = plan.lost_q[keep].astype(np.int64) + fl.offset
+                    lost_pairs.append(
+                        np.stack(
+                            [lq, plan.lost_c[keep].astype(np.int64)], axis=1
+                        ).astype(np.int32)
+                    )
+                    degraded[lq] = True
+            if fl.deadline_late:
+                deadline_deg[fl.offset : fl.offset + fl.q_n] = True
+                degraded[fl.offset : fl.offset + fl.q_n] = True
 
         mutating = self.engine.mutation_active
-        k_fetch = self._k_fetch()
+        k_fetch_full = self._k_fetch()
         st = self.stats
         tr = self.tracer
-        for s in range(0, queries.shape[0], self.micro_batch):
+        for s in range(0, q_total, self.micro_batch):
             chunk = queries[s : s + self.micro_batch]
+            seq = self._batch_seq
+            self._batch_seq += 1
+            self._apply_fault_deaths(seq)
+            late = (
+                deadline_s is not None
+                and time.perf_counter() - t_admit > deadline_s
+            )
+            # deadline degradation: shrink nprobe; an immutable cascade
+            # additionally skips the re-rank stage (plain ADC top-k at k).
+            # Mutable engines keep their fetch/delta shapes (those are the
+            # warmed ones) and only shrink nprobe.
+            skip_rerank = (
+                late and self.engine.rerank == "exact" and not self.mutable
+            )
+            nprobe_eff = self.degrade_nprobe if late else self.nprobe
+            k_fetch = self.k if skip_rerank else k_fetch_full
             bspan = tr.begin_batch(
                 queries=int(chunk.shape[0]), scan=self.engine.scan
             )
             t0 = time.perf_counter()
             padded = self._pad_chunk(chunk)
-            with tr.span("plan", parent=bspan, nprobe=self.nprobe):
-                plan = self._plan_micro_batch(padded)
+            with tr.span("plan", parent=bspan, nprobe=nprobe_eff):
+                plan = self._plan_micro_batch(padded, nprobe=nprobe_eff)
             t1a = time.perf_counter()
             mut = None
             if mutating:
@@ -1019,15 +1533,22 @@ class ServingEngine:
             st.observe_phase("plan", t1a - t0)
             if mutating:
                 st.observe_phase("delta", t1 - t1a)
+            fl = _Flight(
+                handle=None, q_n=chunk.shape[0], offset=s, t_start=t0,
+                mut=mut, t_dispatched=None, bspan=bspan, seq=seq,
+                padded=padded, nprobe_eff=nprobe_eff, k_fetch=k_fetch,
+                skip_rerank=skip_rerank, deadline_late=late,
+            )
             with tr.span(
                 "dispatch", parent=bspan, pairs_per_dev=plan.pairs_per_dev
             ):
-                handle = self._dispatch_micro_batch(plan, k_fetch, padded)
+                self._dispatch_with_retry(fl, plan)
             t2 = time.perf_counter()
             st.device_s += t2 - t1
             st.m_device.inc(t2 - t1)
             st.observe_phase("dispatch", t2 - t1)
-            inflight.append((handle, chunk.shape[0], t0, mut, t2, bspan))
+            fl.t_dispatched = t2
+            inflight.append(fl)
             while len(inflight) > depth:
                 collect_one()
         while inflight:
@@ -1035,17 +1556,48 @@ class ServingEngine:
         if self._starved:  # after the drain: no batches in flight
             self._starved = False
             self.compact()
-        return np.concatenate(outs_d), np.concatenate(outs_i)
+        return ServingResult(
+            dists=np.concatenate(outs_d),
+            ids=np.concatenate(outs_i),
+            degraded=degraded,
+            deadline_degraded=deadline_deg,
+            coverage_lost=(
+                np.concatenate(lost_pairs)
+                if lost_pairs
+                else np.zeros((0, 2), np.int32)
+            ),
+        )
 
     # ------------------------------------------------------------------ #
 
-    def submit(self, queries: np.ndarray) -> None:
-        """Enqueue queries for the next `flush()` (request accumulation)."""
+    def submit(self, queries: np.ndarray) -> int:
+        """Enqueue queries for the next `flush()` (request accumulation).
+
+        Admission control: with `queue_limit` set, the ingress queue is
+        bounded — queries beyond the remaining room are REJECTED (shed,
+        not stalled), counted in `upanns_rejected_queries_total`, and
+        `health()` reports "overloaded" while the queue is full.  Returns
+        the number of queries actually admitted (== all of them when no
+        limit is configured; legacy callers may ignore it).
+        """
         queries = np.asarray(queries, np.float32)
         if queries.ndim == 1:
             queries = queries[None]
-        if queries.shape[0]:
-            self._pending.append(queries)
+        n = int(queries.shape[0])
+        if n == 0:
+            return 0
+        if self.queue_limit is not None:
+            room = self.queue_limit - self.pending()
+            if room <= 0:
+                self.stats.note_rejected(n)
+                return 0
+            if n > room:
+                self.stats.note_rejected(n - room)
+                queries = queries[:room]
+                n = room
+        self._pending.append(queries)
+        self.stats.set_queue_depth(self.pending())
+        return n
 
     def pending(self) -> int:
         return sum(q.shape[0] for q in self._pending)
@@ -1059,7 +1611,17 @@ class ServingEngine:
             )
         queries = np.concatenate(self._pending)
         self._pending = []
+        self.stats.set_queue_depth(0)
         return self.search(queries)
+
+    def flush_result(self) -> ServingResult:
+        """`flush` with degradation accounting (see `search_result`)."""
+        if not self._pending:
+            return self.search_result(np.zeros((0, 1), np.float32))
+        queries = np.concatenate(self._pending)
+        self._pending = []
+        self.stats.set_queue_depth(0)
+        return self.search_result(queries)
 
     # ----------------------- online mutation -------------------------- #
 

@@ -1,0 +1,425 @@
+"""Fault-tolerant serving: replica failover must never crash a query,
+fully-covered queries stay bit-identical at zero recompiles, degraded
+queries carry exact unreachable-cluster accounting; deadlines degrade
+instead of compounding overruns; admission control sheds instead of
+queueing without bound; transient faults retry then escalate; a hung
+collect surfaces as a fault event instead of stalling the loop; and a
+checkpoint save crashed at any rename point still restores."""
+
+import numpy as np
+import jax
+import pytest
+
+from repro.checkpoint import load_index, save_index
+from repro.core.index import build_index
+from repro.retrieval import (
+    FaultError,
+    FaultPlan,
+    InjectedCrash,
+    MemANNSEngine,
+    ServingEngine,
+)
+
+NDEV = len(jax.devices())
+multi = pytest.mark.skipif(
+    NDEV < 2, reason="failover needs >= 2 devices (CI fakes 8 on CPU)"
+)
+
+
+@pytest.fixture(scope="module")
+def engine(clustered_data):
+    """Engine with a *skewed* query history: hot clusters replicate
+    (Algorithm 1), so device death leaves real surviving coverage."""
+    xs, centers, qs, hist = clustered_data
+    rng = np.random.default_rng(3)
+    hot = rng.integers(0, 8, 400)  # 8 hot clusters out of 32
+    skewed = (
+        centers[hot] + rng.normal(0, 1, (400, 32)).astype(np.float32)
+    )
+    return MemANNSEngine.build(
+        jax.random.PRNGKey(0), xs, n_clusters=32, m=8,
+        history_queries=skewed, use_cooc=False, n_combos=32,
+        block_n=256, kmeans_iters=8, pq_iters=6,
+    )
+
+
+def _best_dead_device(engine) -> int:
+    """Device whose death strands the fewest clusters (ties: lowest id).
+
+    Killing it maximizes the surviving-coverage half of the twin-run
+    assertion while still (usually) stranding some single-replica
+    clusters for the degraded half.
+    """
+    c = engine.index.n_clusters
+    costs = []
+    for d in range(NDEV):
+        stranded = sum(
+            1 for ci in range(c)
+            if engine.placement.replicas[ci]
+            and set(engine.placement.replicas[ci]) <= {d}
+        )
+        costs.append((stranded, d))
+    return min(costs)[1]
+
+
+@multi
+def test_failover_twin_run(engine, clustered_data):
+    """The acceptance twin run: under single-device failure no query
+    crashes, fully-covered queries are bit-identical (dists AND ids) at
+    zero recompiles, and the rest are flagged degraded with coverage
+    accounting that matches an independent per-chunk replan."""
+    _, _, qs, _ = clustered_data
+    base = ServingEngine(engine, nprobe=8, k=10, micro_batch=8)
+    base.warmup()
+    d0, i0 = base.search(qs)
+
+    dead = _best_dead_device(engine)
+    srv = ServingEngine(
+        engine, nprobe=8, k=10, micro_batch=8,
+        faults=FaultPlan(device_death={dead: 0}),
+    )
+    srv.warmup()
+    res = srv.search_result(qs)
+
+    # zero crashed queries: every query came back, well-formed
+    assert res.dists.shape == (qs.shape[0], 10)
+    assert res.ids.shape == (qs.shape[0], 10)
+    # failover never compiles: the mesh keeps its full shape, the dead
+    # device just receives only invalid pairs / dummy tiles
+    assert srv.stats.compiles == 0, srv.stats
+    assert srv.stats.failovers == 1
+    h = srv.health()
+    assert h["state"] == "degraded" and h["dead_devices"] == [dead]
+
+    # soundness: every lost (query, cluster) pair names a cluster whose
+    # every replica really is on the dead device
+    for _, ci in res.coverage_lost:
+        assert set(engine.placement.replicas[int(ci)]) <= {dead}
+    # a query is flagged degraded iff it appears in the lost pairs
+    np.testing.assert_array_equal(
+        res.degraded,
+        np.isin(np.arange(qs.shape[0]), res.coverage_lost[:, 0]),
+    )
+    assert not res.deadline_degraded.any()
+
+    # completeness: the accounting matches an independent replan of each
+    # micro-batch chunk under the same live mask (exercises the serving
+    # layer's offset bookkeeping, not just the scheduler)
+    live = np.ones(NDEV, bool)
+    live[dead] = False
+    want = []
+    for off in range(0, qs.shape[0], 8):
+        plan = engine.plan_batch(qs[off:off + 8], 8, live=live)
+        for lq, lc in zip(plan.lost_q, plan.lost_c):
+            want.append((int(lq) + off, int(lc)))
+    got = sorted((int(a), int(b)) for a, b in res.coverage_lost)
+    assert got == sorted(want)
+
+    # covered queries are bit-identical to the healthy run (results are
+    # placement-invariant, so re-routing must not perturb them)
+    ok = ~res.degraded
+    assert ok.any(), "layout left no covered query; test is vacuous"
+    np.testing.assert_array_equal(res.ids[ok], i0[ok])
+    np.testing.assert_array_equal(res.dists[ok], d0[ok])
+
+
+@multi
+def test_failover_mid_stream(engine, clustered_data):
+    """A device dying mid-stream affects only the batches planned after
+    its death; earlier chunks match the healthy run exactly."""
+    _, _, qs, _ = clustered_data
+    base = ServingEngine(engine, nprobe=8, k=10, micro_batch=8)
+    base.warmup()
+    d0, i0 = base.search(qs)
+
+    dead = _best_dead_device(engine)
+    srv = ServingEngine(
+        engine, nprobe=8, k=10, micro_batch=8,
+        faults=FaultPlan(device_death={dead: 2}),  # dies at chunk 2 of 3
+    )
+    srv.warmup()
+    res = srv.search_result(qs)
+    assert srv.stats.compiles == 0
+    # chunks 0 and 1 (16 queries) predate the death: bit-identical,
+    # never flagged
+    np.testing.assert_array_equal(res.ids[:16], i0[:16])
+    np.testing.assert_array_equal(res.dists[:16], d0[:16])
+    assert not res.degraded[:16].any()
+    # accounting stays scoped to the post-death chunk
+    assert (res.coverage_lost[:, 0] >= 16).all()
+
+
+def test_deadline_degrades_instead_of_running_late(engine, clustered_data):
+    """deadline 0 forces every chunk onto the degraded path (smaller
+    nprobe) at zero recompiles; a generous deadline changes nothing."""
+    _, _, qs, _ = clustered_data
+    base = ServingEngine(engine, nprobe=8, k=10, micro_batch=8)
+    base.warmup()
+    d0, i0 = base.search(qs)
+
+    srv = ServingEngine(
+        engine, nprobe=8, k=10, micro_batch=8, deadline_ms=0.0,
+    )
+    srv.warmup()
+    res = srv.search_result(qs)
+    assert res.deadline_degraded.all() and res.degraded.all()
+    assert srv.stats.compiles == 0, "degraded buckets must be pre-warmed"
+    assert srv.stats.degraded_queries == qs.shape[0]
+    assert srv.health()["state"] == "degraded"
+    # degraded nprobe answers are still answers over real clusters
+    assert res.ids.shape == (qs.shape[0], 10)
+
+    relaxed = ServingEngine(
+        engine, nprobe=8, k=10, micro_batch=8, deadline_ms=1e9,
+    )
+    relaxed.warmup()
+    res2 = relaxed.search_result(qs)
+    assert not res2.degraded.any()
+    np.testing.assert_array_equal(res2.ids, i0)
+    np.testing.assert_array_equal(res2.dists, d0)
+    assert relaxed.health()["state"] == "ok"
+
+
+def test_admission_control_bounds_the_queue(engine, clustered_data):
+    """submit beyond queue_limit is shed (not stalled, not crashed), the
+    shed count is conserved, and health walks ok -> overloaded -> ok."""
+    _, _, qs, _ = clustered_data
+    srv = ServingEngine(
+        engine, nprobe=8, k=10, micro_batch=8, queue_limit=16,
+    )
+    srv.warmup()
+    assert srv.health()["state"] == "ok"
+    accepted = srv.submit(qs)  # 24 > 16
+    assert accepted == 16
+    assert srv.pending() == 16
+    assert srv.stats.rejected_queries == 8
+    assert srv.health()["state"] == "overloaded"
+    # at the limit: everything sheds
+    assert srv.submit(qs[:4]) == 0
+    assert srv.stats.rejected_queries == 12
+    d, i = srv.flush()
+    # conservation: answered + rejected == submitted
+    assert d.shape[0] + srv.stats.rejected_queries == 24 + 4
+    assert srv.health()["state"] == "ok"
+    assert srv.pending() == 0
+    # admitted queries answer exactly like an unlimited engine
+    base = ServingEngine(engine, nprobe=8, k=10, micro_batch=8)
+    base.warmup()
+    bd, bi = base.search(qs[:16])
+    np.testing.assert_array_equal(i, bi)
+
+
+def test_transient_fault_retries_then_recovers(engine, clustered_data):
+    """A dispatch that fails transiently under the retry budget is
+    retried with backoff and ends bit-identical — no failover."""
+    _, _, qs, _ = clustered_data
+    base = ServingEngine(engine, nprobe=8, k=10, micro_batch=8)
+    base.warmup()
+    d0, i0 = base.search(qs)
+
+    fp = FaultPlan(transient_dispatch={1: 2})
+    srv = ServingEngine(
+        engine, nprobe=8, k=10, micro_batch=8,
+        faults=fp, retry_limit=2, retry_backoff_s=0.001,
+    )
+    srv.warmup()
+    res = srv.search_result(qs)
+    assert srv.stats.retries == 2
+    assert srv.stats.failovers == 0
+    assert not res.degraded.any()
+    np.testing.assert_array_equal(res.ids, i0)
+    np.testing.assert_array_equal(res.dists, d0)
+    assert ("transient_dispatch", {"seq": 1, "remaining": 1}) in fp.events
+
+
+@multi
+def test_persistent_fault_escalates_to_failover(engine, clustered_data):
+    """Retries exhausted on a device-attributable fault escalate: the
+    blamed device fails over, the batch replans on survivors, and every
+    query still returns."""
+    _, _, qs, _ = clustered_data
+    blamed = _best_dead_device(engine)
+    fp = FaultPlan(transient_dispatch={0: 10_000}, transient_device=blamed)
+    srv = ServingEngine(
+        engine, nprobe=8, k=10, micro_batch=8,
+        faults=fp, retry_limit=2, retry_backoff_s=0.0,
+    )
+    srv.warmup()
+    res = srv.search_result(qs)
+    assert res.ids.shape == (qs.shape[0], 10)  # zero crashed queries
+    assert srv.stats.retries >= 2
+    assert srv.stats.failovers == 1
+    assert srv.health()["dead_devices"] == [blamed]
+    assert ("failover", {"device": blamed}) in fp.events
+
+
+def test_unattributable_fault_raises_after_retries(engine, clustered_data):
+    """With no device to blame, exhausted retries surface the fault to
+    the caller instead of guessing a failover target."""
+    _, _, qs, _ = clustered_data
+    srv = ServingEngine(
+        engine, nprobe=8, k=10, micro_batch=8,
+        faults=FaultPlan(transient_dispatch={0: 10_000}),
+        retry_limit=2, retry_backoff_s=0.0,
+    )
+    srv.warmup()
+    with pytest.raises(FaultError, match="transient dispatch"):
+        srv.search(qs)
+    assert srv.stats.failovers == 0
+
+
+@multi
+def test_hung_collect_fails_over_instead_of_stalling(
+    engine, clustered_data
+):
+    """The silent-stall regression: a dispatch whose result never
+    arrives must surface as a fault event (retry -> failover -> refire),
+    not block the serving loop forever."""
+    _, _, qs, _ = clustered_data
+    hung = _best_dead_device(engine)
+    fp = FaultPlan(hang_collect={1: hung})
+    srv = ServingEngine(
+        engine, nprobe=8, k=10, micro_batch=8,
+        faults=fp, collect_timeout_s=2.0,
+    )
+    srv.warmup()
+    res = srv.search_result(qs)  # would hang forever without the watchdog
+    assert res.ids.shape == (qs.shape[0], 10)
+    assert srv.stats.retries == 1  # the collect retry (refire)
+    assert srv.stats.failovers == 1
+    assert srv.health()["dead_devices"] == [hung]
+    assert srv.stats.compiles == 0
+    assert ("hang_collect", {"seq": 1, "device": hung}) in fp.events
+
+
+def test_slow_collect_within_grace_is_not_a_fault(engine, clustered_data):
+    """A slow (not hung) device inside the timeout budget completes
+    normally: no retry, no failover, identical results."""
+    _, _, qs, _ = clustered_data
+    base = ServingEngine(engine, nprobe=8, k=10, micro_batch=8)
+    base.warmup()
+    d0, i0 = base.search(qs)
+    srv = ServingEngine(
+        engine, nprobe=8, k=10, micro_batch=8,
+        faults=FaultPlan(slow_collect={0: 0.05}), collect_timeout_s=10.0,
+    )
+    srv.warmup()
+    res = srv.search_result(qs)
+    assert srv.stats.retries == 0 and srv.stats.failovers == 0
+    np.testing.assert_array_equal(res.ids, i0)
+    np.testing.assert_array_equal(res.dists, d0)
+
+
+def test_collect_timeout_raises_when_unattributable(
+    engine, clustered_data
+):
+    """A result still missing at the timeout with no blamed device is a
+    hard fault, not an infinite stall."""
+    _, _, qs, _ = clustered_data
+    srv = ServingEngine(
+        engine, nprobe=8, k=10, micro_batch=8,
+        faults=FaultPlan(slow_collect={0: 60.0}), collect_timeout_s=0.1,
+    )
+    srv.warmup()
+    with pytest.raises(FaultError, match="timed out"):
+        srv.search(qs)
+
+
+# --------------------------- checkpoint crash -------------------------- #
+
+
+@pytest.fixture(scope="module")
+def small_index():
+    rng = np.random.default_rng(0)
+    centers = rng.normal(0, 5, (8, 16)).astype(np.float32)
+    xs = (
+        centers[rng.integers(0, 8, 500)]
+        + rng.normal(0, 1, (500, 16)).astype(np.float32)
+    )
+    return build_index(
+        jax.random.PRNGKey(0), xs, 8, 4, kmeans_iters=4, pq_iters=3
+    )
+
+
+@pytest.mark.parametrize(
+    "point", ["before_commit", "after_rename_old", "after_rename_new"]
+)
+def test_save_crash_at_every_point_still_restores(
+    tmp_path, small_index, point
+):
+    """Crash the save at each point of the rename choreography: load
+    must always recover a complete, valid checkpoint (the previous one
+    or the new one — never garbage), and the next save heals the debris."""
+    path = str(tmp_path / "ckpt")
+    save_index(path, small_index, extra={"v": 1})
+    fp = FaultPlan(crash_save_at=point)
+    with pytest.raises(InjectedCrash):
+        save_index(path, small_index, extra={"v": 2}, faults=fp)
+    assert fp.events == [("crash_save", {"point": point})]
+    got, _, extra = load_index(path)  # validate()s internally
+    assert extra["v"] in (1, 2)
+    if point == "before_commit":
+        assert extra["v"] == 1  # nothing committed yet
+    if point == "after_rename_new":
+        assert extra["v"] == 2  # new checkpoint fully in place
+    np.testing.assert_array_equal(got.codes, small_index.codes)
+    # recovery save (the crash point is one-shot) leaves a clean v2
+    save_index(path, small_index, extra={"v": 2}, faults=fp)
+    _, _, extra = load_index(path)
+    assert extra == {"v": 2}
+    assert not (tmp_path / "ckpt.tmp").exists()
+    assert not (tmp_path / "ckpt.old").exists()
+
+
+def test_corrupt_checkpoint_fails_with_clear_error(tmp_path, small_index):
+    """A truncated/garbage array in the checkpoint directory must raise
+    a ValueError naming the path — never silently serve wrong rows."""
+    path = str(tmp_path / "ckpt")
+    save_index(path, small_index, extra={"v": 1})
+    codes = tmp_path / "ckpt" / "index" / "codes.npy"
+    codes.write_bytes(b"not a numpy file at all")
+    with pytest.raises(ValueError, match="corrupt or unreadable"):
+        load_index(path)
+    # a damaged meta.json is caught the same way
+    save_index(path, small_index, extra={"v": 1})
+    (tmp_path / "ckpt" / "meta.json").write_text("{truncated")
+    with pytest.raises(ValueError, match="corrupt or unreadable"):
+        load_index(path)
+
+
+# ----------------------------- /healthz -------------------------------- #
+
+
+def test_healthz_reports_engine_state():
+    """ObsServer's /healthz: JSON health dict when a callback is wired
+    (503 while overloaded, so balancers shed), legacy liveness 'ok'
+    when not."""
+    import json
+    import urllib.error
+    import urllib.request
+
+    from repro.obs.http import ObsServer
+    from repro.obs.metrics import MetricsRegistry
+
+    state = {"state": "ok", "queue_depth": 0}
+    srv = ObsServer(MetricsRegistry(), health=lambda: dict(state))
+    port = srv.start()
+    try:
+        url = f"http://127.0.0.1:{port}/healthz"
+        with urllib.request.urlopen(url, timeout=10) as r:
+            assert json.loads(r.read()) == state
+        state["state"] = "overloaded"
+        with pytest.raises(urllib.error.HTTPError) as exc:
+            urllib.request.urlopen(url, timeout=10)
+        assert exc.value.code == 503
+        assert json.loads(exc.value.read())["state"] == "overloaded"
+    finally:
+        srv.stop()
+    plain = ObsServer(MetricsRegistry())
+    port = plain.start()
+    try:
+        url = f"http://127.0.0.1:{port}/healthz"
+        with urllib.request.urlopen(url, timeout=10) as r:
+            assert r.read() == b"ok\n"
+    finally:
+        plain.stop()

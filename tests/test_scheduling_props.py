@@ -26,6 +26,7 @@ from repro.core.scheduling import (  # noqa: E402
     count_tiles,
     emit_tiles,
     schedule_queries,
+    schedule_queries_loop,
 )
 
 SETTINGS = dict(max_examples=40, deadline=None)
@@ -151,6 +152,72 @@ def test_load_biased_schedule_covers_every_pair_once(
     np.testing.assert_allclose(
         sch.dev_load.sum(), blind.dev_load.sum(), rtol=1e-12
     )
+
+
+@given(
+    seed=st.integers(0, 10_000),
+    q=st.integers(1, 24),
+    nprobe=st.integers(1, 8),
+    ndev=st.integers(2, 8),
+    n_dead=st.integers(0, 6),
+    carry_scale=st.sampled_from([0.0, 1.0, 1e5]),
+)
+@settings(**SETTINGS)
+def test_failover_schedule_covers_surviving_replicas_exactly_once(
+    seed, q, nprobe, ndev, n_dead, carry_scale
+):
+    """Any failed-device subset preserves the failover contract: every
+    probed (query, cluster) pair with a surviving replica is scheduled
+    exactly once on a live replica device; pairs whose clusters lost every
+    replica land in the `lost` accounting — and only those; kept + lost
+    partition the full pair set.  The loop oracle agrees, and an all-live
+    mask is bit-identical to no mask at all."""
+    rng = np.random.default_rng(seed)
+    c = max(nprobe, 16)
+    sizes = (rng.zipf(1.4, c) * 20).clip(1, 20000).astype(np.int64)
+    freqs = rng.zipf(1.3, c).astype(np.float64)
+    pl = place_clusters(
+        sizes, freqs, ndev, centroids=rng.normal(0, 1, (c, 8))
+    )
+    probed = np.stack(
+        [rng.choice(c, nprobe, replace=False) for _ in range(q)]
+    )
+    carry = rng.random(ndev) * carry_scale
+    live = np.ones(ndev, bool)
+    dead = rng.choice(ndev, size=min(n_dead, ndev - 1), replace=False)
+    live[dead] = False
+
+    sch = schedule_queries(probed, sizes, pl, load_carry=carry, live=live)
+
+    kept = sorted(zip(sch.pair_q.tolist(), sch.pair_c.tolist()))
+    lost = sorted(zip(sch.lost_q.tolist(), sch.lost_c.tolist()))
+    every = sorted((qi, int(ci)) for qi in range(q) for ci in probed[qi])
+    # kept + lost is a partition of the probed pair set
+    assert sorted(kept + lost) == every
+    # lost pairs are exactly those whose cluster has no surviving replica
+    unreachable = {
+        ci for ci in range(c) if not any(live[d] for d in pl.replicas[ci])
+    }
+    assert all(ci in unreachable for _, ci in lost)
+    assert all(ci not in unreachable for _, ci in kept)
+    # every kept pair runs on a live replica of its cluster
+    for ci, d in zip(sch.pair_c, sch.pair_dev):
+        assert live[int(d)] and int(d) in pl.replicas[int(ci)]
+
+    # loop-oracle lockstep on the lost set
+    oracle = schedule_queries_loop(probed, sizes, pl, live=live)
+    assert sorted((int(a), int(b)) for a, b in oracle.lost) == lost
+
+    # all-live mask is bit-identical to passing no mask (warm jit caches,
+    # schedules, and results are untouched until a device actually dies)
+    blind = schedule_queries(probed, sizes, pl, load_carry=carry)
+    alive = schedule_queries(
+        probed, sizes, pl, load_carry=carry, live=np.ones(ndev, bool)
+    )
+    np.testing.assert_array_equal(blind.pair_q, alive.pair_q)
+    np.testing.assert_array_equal(blind.pair_c, alive.pair_c)
+    np.testing.assert_array_equal(blind.pair_dev, alive.pair_dev)
+    assert alive.lost_q.size == 0 and alive.lost_c.size == 0
 
 
 def test_tile_emission_overflow_raises():

@@ -86,7 +86,13 @@ def main() -> int:
         assert saw_report, "serve report carried no retrieval_stats"
 
         base = endpoint.rsplit("/", 1)[0]
-        assert scrape(f"{base}/healthz").strip() == "ok"
+        # serve.py wires ServingEngine.health into /healthz: the payload is
+        # the JSON health dict (state/queue/live devices), not the legacy
+        # bare "ok" liveness string
+        health = json.loads(scrape(f"{base}/healthz"))
+        assert health["state"] == "ok", health
+        assert health["live_devices"] == health["n_devices"], health
+        assert health["rejected_queries"] == 0, health
         text = scrape(endpoint)
         assert text.count("# TYPE ") >= 20, "catalog suspiciously small"
         assert metric_value(text, "upanns_serving_queries_total") > 0
